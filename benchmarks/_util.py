@@ -1,0 +1,94 @@
+"""Shared benchmark utilities: timing, CSV emission, a compact classifier
+trainer for the UEA-style tables."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+from repro.data.pipeline import UEALikeSource
+from repro.optim.adamw import adamw_init, adamw_update
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_classifier_grid(cfg, dataset: str, *, seq_len: int, steps: int,
+                          batch: int, lrs=(1e-3, 1e-2), seed: int = 0
+                          ) -> Tuple[float, Dict]:
+    """The paper's protocol in miniature: grid-search the learning rate,
+    report the best (LrcSSM 'benefits from higher learning rates' — B.2)."""
+    best = (0.0, {})
+    for lr in lrs:
+        acc, info = train_classifier(cfg, dataset, seq_len=seq_len,
+                                     steps=steps, batch=batch, lr=lr,
+                                     seed=seed)
+        info["lr"] = lr
+        if acc >= best[0]:
+            best = (acc, info)
+    return best
+
+
+def train_classifier(cfg: LrcSSMConfig, dataset: str, *, seq_len: int,
+                     steps: int = 150, batch: int = 16, lr: float = 1e-3,
+                     seed: int = 0, noise: float = 1.0
+                     ) -> Tuple[float, Dict]:
+    """Train the Figure-1 classifier on the UEA-like generator; return test
+    accuracy. Deliberately small budgets — the benchmark contrasts MODEL
+    VARIANTS under identical conditions (the paper's ablation protocol),
+    not absolute UEA numbers (real datasets are not available offline)."""
+    src = UEALikeSource(dataset, batch=batch, seed=seed, seq_len=seq_len,
+                        noise=noise)
+    params = init_lrcssm(cfg, jax.random.PRNGKey(seed))
+    tcfg = TrainConfig(learning_rate=lr, warmup_steps=10, total_steps=steps,
+                       weight_decay=0.01, grad_clip=1.0)
+    opt = adamw_init(params)
+
+    def loss_fn(p, x, y):
+        logits = apply_lrcssm(cfg, p, x)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def step_fn(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o, _ = adamw_update(tcfg, g, o, p)
+        return p, o, l
+
+    t0 = time.perf_counter()
+    for s in range(steps):
+        x, y = src.batch_at(s)
+        params, opt, l = step_fn(params, opt, x, y)
+    train_time = time.perf_counter() - t0
+
+    # deterministic held-out split
+    correct = tot = 0
+    for s in range(4):
+        x, y = src.batch_at(10_000 + s)
+        logits = apply_lrcssm(cfg, params, x)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y))
+        tot += len(y)
+    return correct / tot, {"train_time_s": train_time, "final_loss": float(l)}

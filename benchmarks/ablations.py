@@ -1,0 +1,120 @@
+"""Appendix E ablation benchmarks (Tables 8-11) + kernel micro-benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import (emit, time_fn, train_classifier,
+                              train_classifier_grid)
+from repro.configs.lrcssm_uea import ablation_config
+from repro.core.block import LrcSSMConfig
+from repro.core.full_lrc import (FullLrcConfig, full_lrc_sequential,
+                                 init_full_lrc_params, quasi_deer_solve)
+
+DS, T, STEPS, BATCH = "scp1", 512, 90, 16
+
+
+def _acc(cfg, seed=2, **kw):
+    # all ablation cells are lrc-family: the tuned regime is lr=1e-2
+    return train_classifier_grid(cfg, DS, seq_len=T, steps=STEPS,
+                                 batch=BATCH, seed=seed, lrs=(1e-2,),
+                                 **kw)[0]
+
+
+def table8_capacitance():
+    """Table 8: liquid (LrcSSM) vs constant capacitance (StcSSM)."""
+    t0 = time.perf_counter()
+    acc_lrc = _acc(ablation_config("lrc", d_input=6, n_classes=2,
+                                   d_hidden=32, d_state=32, n_blocks=2))
+    acc_stc = _acc(ablation_config("stc", d_input=6, n_classes=2,
+                                   d_hidden=32, d_state=32, n_blocks=2))
+    emit("table8/capacitance", (time.perf_counter() - t0) * 1e6,
+         f"lrc_acc={acc_lrc:.3f};stc_acc={acc_stc:.3f}")
+
+
+def table9_dense_vs_diagonal():
+    """Table 9: diagonal-by-design Jacobian loses nothing vs the dense
+    LRC solved with quasi-DEER. Checked at solver level (trajectory parity
+    with sequential ground truth) + accuracy level (diag model trains)."""
+    D, n = 16, 6
+    fcfg = FullLrcConfig(d_input=n, d_state=D)
+    fp = init_full_lrc_params(fcfg, jax.random.PRNGKey(0))
+    u = jax.random.normal(jax.random.PRNGKey(1), (256, n))
+    truth = full_lrc_sequential(fp, fcfg, u)
+    t0 = time.perf_counter()
+    states, iters = jax.jit(lambda uu: quasi_deer_solve(fp, fcfg, uu,
+                                                        max_iters=50))(u)
+    us = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(states - truth)))
+    emit("table9/quasi_deer_dense", us,
+         f"newton_iters={int(iters)};traj_err={err:.2e};converged={err < 1e-3}")
+
+    acc_diag = _acc(ablation_config("lrc", d_input=6, n_classes=2,
+                                    d_hidden=32, d_state=32, n_blocks=2))
+    emit("table9/diag_model_acc", 0.0, f"diag_acc={acc_diag:.3f}")
+
+
+def table10_state_dependency():
+    """Table 10: A(x,u)/b(x,u) vs A(u)/b(x,u) vs A(u)/b(u)."""
+    t0 = time.perf_counter()
+    rows = {}
+    for name, (sa, sb) in {"AxU_bxU": (True, True),
+                           "AU_bxU": (False, True),
+                           "AU_bU": (False, False)}.items():
+        cfg = ablation_config("lrc", d_input=6, n_classes=2, d_hidden=32,
+                              d_state=32, n_blocks=2,
+                              state_dependent_a=sa, state_dependent_b=sb)
+        rows[name] = _acc(cfg)
+    emit("table10/state_dependency", (time.perf_counter() - t0) * 1e6,
+         ";".join(f"{k}={v:.3f}" for k, v in rows.items()))
+
+
+def table11_complex_params():
+    """Table 11: real vs complex state-coupled parameters."""
+    t0 = time.perf_counter()
+    acc_real = _acc(ablation_config("lrc", d_input=6, n_classes=2,
+                                    d_hidden=32, d_state=32, n_blocks=2))
+    acc_cplx = _acc(ablation_config("lrc", d_input=6, n_classes=2,
+                                    d_hidden=32, d_state=32, n_blocks=2,
+                                    complex_state_params=True))
+    emit("table11/complex", (time.perf_counter() - t0) * 1e6,
+         f"real_acc={acc_real:.3f};complex_acc={acc_cplx:.3f}")
+
+
+def kernels_micro():
+    """Pallas kernels (interpret mode) vs pure-jnp reference: correctness
+    and CPU-interpret timing (TPU timing is a dry-run target, not runnable
+    here — the HBM-traffic derivation is in EXPERIMENTS.md §Perf)."""
+    from repro.kernels.diag_scan.ops import diag_scan
+    from repro.kernels.diag_scan.ref import diag_scan_ref
+    from repro.kernels.lrc_deer.ops import lrc_deer_solve
+    from repro.kernels.lrc_deer.ref import lrc_deer_solve_ref
+
+    T, D = 1024, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    lam = jax.random.uniform(ks[0], (T, D)) * 0.9
+    b = jax.random.normal(ks[1], (T, D))
+    x0 = jnp.zeros((D,))
+    us_k = time_fn(lambda: diag_scan(lam, b, x0, chunk=256, d_tile=128))
+    want = diag_scan_ref(lam, b, x0)
+    got = diag_scan(lam, b, x0, chunk=256, d_tile=128)
+    err = float(jnp.max(jnp.abs(got - want)))
+    emit("kernels/diag_scan_1024x256", us_k,
+         f"max_err={err:.2e};hbm_streams=3(read)+1(write)")
+
+    su = jax.nn.sigmoid(jax.random.normal(ks[2], (T, D)))
+    eu = jax.random.normal(ks[0], (T, D))
+    from repro.kernels.lrc_deer.ops import pack_lrc_params
+    from repro.core.lrc import LrcCellConfig, init_lrc_params
+    pp = pack_lrc_params(init_lrc_params(
+        LrcCellConfig(d_input=4, d_state=D), jax.random.PRNGKey(1)))
+    us_f = time_fn(lambda: lrc_deer_solve(su, eu, pp, x0, n_iters=8,
+                                          chunk=256, d_tile=128), iters=2)
+    got = lrc_deer_solve(su, eu, pp, x0, n_iters=8, chunk=256, d_tile=128)
+    want = lrc_deer_solve_ref(su, eu, pp, x0, n_iters=8)
+    err = float(jnp.max(jnp.abs(got - want)))
+    emit("kernels/lrc_deer_fused_8iter", us_f,
+         f"max_err={err:.2e};hbm_per_iter=3reads+1write_vs_10_unfused")

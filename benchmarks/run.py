@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring] [--quick]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run benchmarks whose name contains this substring")
+    args = ap.parse_args()
+
+    from benchmarks import ablations, paper_tables
+    benches = [
+        paper_tables.table1_accuracy,
+        paper_tables.table2_variants,
+        paper_tables.table3_complexity,
+        paper_tables.table6_runtime,
+        paper_tables.fig2_iterations,
+        ablations.table8_capacitance,
+        ablations.table9_dense_vs_diagonal,
+        ablations.table10_state_dependency,
+        ablations.table11_complex_params,
+        ablations.kernels_micro,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"{fn.__name__},0,FAILED")
+            failures += 1
+        print(f"# {fn.__name__} done in {time.time()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: train the paper's LrcSSM sequence classifier (Figure 1) with
+the exact-DEER parallel solver on a long-horizon synthetic task.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+from repro.core.deer import DeerConfig
+from repro.data.pipeline import UEALikeSource
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def main():
+    cfg = LrcSSMConfig(
+        d_input=6, d_hidden=32, d_state=32, n_blocks=2, n_classes=2,
+        cell="lrc", solver="deer",
+        deer=DeerConfig(max_iters=10, mode="fixed", grad="implicit"))
+    src = UEALikeSource("scp1", batch=16, seed=0, seq_len=512)
+    params = init_lrcssm(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=150)
+    opt = adamw_init(params)
+
+    def loss_fn(p, x, y):
+        logits = apply_lrcssm(cfg, p, x)
+        return jnp.mean(jax.nn.logsumexp(logits, -1)
+                        - jnp.take_along_axis(logits, y[:, None], -1)[:, 0])
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o, m = adamw_update(tcfg, g, o, p)
+        return p, o, l
+
+    print("training LrcSSM (T=512, 2 blocks, DEER implicit-grad solver)...")
+    for s in range(150):
+        x, y = src.batch_at(s)
+        params, opt, l = step(params, opt, x, y)
+        if s % 25 == 0:
+            print(f"  step {s:4d}  loss {float(l):.4f}")
+
+    correct = tot = 0
+    for s in range(4):
+        x, y = src.batch_at(10_000 + s)
+        pred = jnp.argmax(apply_lrcssm(cfg, params, x), -1)
+        correct += int(jnp.sum(pred == y)); tot += len(y)
+    print(f"test accuracy: {correct / tot:.3f} (chance 0.5)")
+
+
+if __name__ == "__main__":
+    main()

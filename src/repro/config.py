@@ -1,0 +1,153 @@
+"""Framework configuration system.
+
+Every assigned architecture is an ``ArchConfig`` (src/repro/configs/<id>.py);
+shapes are ``ShapeConfig``; meshes are ``MeshConfig``. All are plain frozen
+dataclasses so configs are hashable, printable, and diffable in logs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    # capacity factor for the dense-dispatch einsum path (dry-run exactness:
+    # the top-k one-hot combine is mathematically exact; capacity applies to
+    # the EP all-to-all path)
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # pad the expert-stacked weights to this count for even EP sharding
+    # (e.g. 40 experts -> 48 on a 16-way model axis); 0 = no padding.
+    # Padded experts receive zero routing weight — mathematically inert.
+    pad_to: int = 0
+    # production dispatch path: "einsum" (GShard one-hot) | "gather"
+    # (scatter/gather, FLOP-honest) | "dense" (exact, smoke tests)
+    dispatch: str = "einsum"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Selective-SSM mixer parameters (Mamba-1 / Mamba-2 / LrcSSM mixer)."""
+    kind: str = "mamba1"          # mamba1 | mamba2 | lrc
+    d_state: int = 16             # per-channel state size (N)
+    d_conv: int = 4               # depthwise conv width
+    expand: int = 2               # d_inner = expand * d_model
+    n_heads: int = 0              # mamba2 heads (0 = d_inner//64)
+    head_dim: int = 64            # mamba2
+    chunk: int = 256              # scan chunk (VMEM schedule)
+    deer_iters: int = 8           # lrc mixer Newton iterations (fixed mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 => d_model // n_heads
+    act: str = "gelu"             # ffn activation
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    # attention pattern: every layer full attention unless window_pattern set.
+    # window_pattern = (local_window, n_local_per_global) e.g. gemma3 (1024, 5)
+    window_pattern: Optional[Tuple[int, int]] = None
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): 1 shared attention block every `hybrid_period` ssm layers
+    hybrid_period: int = 0
+    # enc-dec (whisper): encoder layers with full self-attn + decoder w/ cross
+    enc_layers: int = 0
+    enc_seq: int = 0              # encoder input frames (stub frontend)
+    # vlm: projector from frontend embedding dim
+    frontend_dim: int = 0
+    frontend_tokens: int = 0
+    # sequence mixer override: "attn" (arch default) | "lrc" (paper technique)
+    seq_mixer: str = "arch"
+    # distribution strategy (distributed/sharding.py):
+    #   megatron — TP over "model" (activations all-reduced per block),
+    #              params FSDP over "data"           [baseline]
+    #   fsdp     — ZeRO-3: params sharded over (data x model) on their last
+    #              dim, batch over every axis; zero activation collectives
+    #   serve    — weight-stationary decode: params TP over "model" only,
+    #              batch/caches over "data"
+    #   ring     — sequence parallelism: activations sharded over "model"
+    #              on the time axis, weights over "data"; attention runs as
+    #              a shard_map ring (attn_impl="ring")
+    sharding_strategy: str = "megatron"
+    attn_impl: str = "default"    # default | ring
+    # sub-quadratic? (governs long_500k applicability)
+    subquadratic: bool = False
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32   # master copy dtype
+    remat: str = "layer"          # none | layer | full
+    scan_layers: bool = True      # lax.scan over layer stack (compile-time)
+    # exact-HLO measurement mode (roofline only): no interior loops so
+    # cost_analysis / collective parsing count every op exactly once —
+    # single-block attention, unchunked loss, associative (non-chunked)
+    # ssm scans, unrolled DEER iterations. NOT the production config.
+    exact_hlo: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_clip: float = 1.0
+    microbatch: int = 0           # 0 = no gradient accumulation
+    seed: int = 0
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True
+    grad_compression: str = "none"   # none | int8  (cross-pod all-reduce)
+    zero_opt_state: bool = True      # shard opt state over data axis (ZeRO-1)
+    # constrain grads to the param sharding immediately after value_and_grad
+    # so GSPMD lowers the DP reduction as reduce-scatter (half the wire of
+    # the all-reduce it otherwise emits). §Perf iteration A4.
+    shard_grads: bool = False
+
+
+# hardware model for roofline (TPU v5e)
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    peak_flops_bf16: float = 197e12   # per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+    hbm_bytes: float = 16e9           # capacity per chip
+    vmem_bytes: float = 128e6
+
+
+HW = HWConfig()

@@ -1,0 +1,43 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full-size ArchConfig (dry-run only —
+never allocated on CPU); ``get_reduced(name)`` returns the same-family
+smoke-test config (small widths/depths, tiny vocab) that runs a real
+forward/train step on one CPU device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import List
+
+ARCH_NAMES: List[str] = [
+    "internvl2_26b",
+    "starcoder2_3b",
+    "nemotron_4_15b",
+    "granite_3_8b",
+    "gemma3_4b",
+    "falcon_mamba_7b",
+    "granite_moe_1b_a400m",
+    "granite_moe_3b_a800m",
+    "zamba2_7b",
+    "whisper_base",
+    # the paper's own architecture (UEA classifier) — not an LM cell
+    "lrcssm_uea",
+]
+
+
+def _mod(name: str):
+    return importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+
+
+def get_config(name: str):
+    return _mod(name).CONFIG
+
+
+def get_reduced(name: str):
+    return _mod(name).REDUCED
+
+
+def list_archs() -> List[str]:
+    return [n for n in ARCH_NAMES if n != "lrcssm_uea"]

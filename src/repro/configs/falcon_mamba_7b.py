@@ -1,0 +1,26 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attn-free) vocab=65024,
+ssm_state=16 — Mamba-1 architecture [arXiv:2410.05355; unverified].
+d_inner = 2*4096 = 8192, dt_rank = ceil(4096/16) = 256, conv width 4.
+Attention-free: every layer is the selective-scan mixer built on the same
+chunked diagonal scan as the paper's DEER solver. Sub-quadratic ->
+long_500k runs (O(D) state decode).
+"""
+from repro.config import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=65024,
+    norm="rmsnorm", rope_theta=0.0,
+    ssm=SSMConfig(kind="mamba1", d_state=16, d_conv=4, expand=2, chunk=256),
+    subquadratic=True,
+)
+
+REDUCED = ArchConfig(
+    name="falcon-mamba-7b-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=512,
+    norm="rmsnorm", rope_theta=0.0,
+    ssm=SSMConfig(kind="mamba1", d_state=4, d_conv=4, expand=2, chunk=16),
+    subquadratic=True,
+)

@@ -1,0 +1,29 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144 — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt; unverified]. head_dim=256 (explicit; not
+d_model/H), GeGLU, RMSNorm. window_pattern=(1024, 5): five sliding-window
+(1024) layers per global layer.
+
+long_500k IS run for this arch: decode-time cost is dominated by the local
+layers' bounded ring caches; only the 1-in-6 global layers keep full 512k
+KV (see DESIGN.md §Arch-applicability).
+"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-4b", family="dense",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4,
+    d_ff=10240, vocab=262144, head_dim=256,
+    act="gelu_tanh", norm="rmsnorm", rope_theta=1e6,
+    window_pattern=(1024, 5), tie_embeddings=True,
+    subquadratic=True,   # 5/6 of layers are sliding-window
+)
+
+REDUCED = ArchConfig(
+    name="gemma3-4b-smoke", family="dense",
+    n_layers=7, d_model=48, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab=512, head_dim=16,
+    act="gelu_tanh", norm="rmsnorm", rope_theta=1e6,
+    window_pattern=(8, 5), tie_embeddings=True,
+    subquadratic=True,
+)

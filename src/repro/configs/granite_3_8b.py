@@ -1,0 +1,24 @@
+"""granite-3-8b [dense]: 40L d_model=4096 32H (GQA kv=8) d_ff=12800
+vocab=49155 — GQA [hf:ibm-granite/granite-3.0-2b-base; hf]. SwiGLU, RMSNorm,
+RoPE, tied embeddings (granite 3.0 ties embed/lm_head). Full attention ->
+no long_500k.
+"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-8b", family="dense",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12800, vocab=49155,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    tie_embeddings=True,
+    subquadratic=False,
+)
+
+REDUCED = ArchConfig(
+    name="granite-3-8b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=192, vocab=512,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    tie_embeddings=True,
+    subquadratic=False,
+)

@@ -1,0 +1,25 @@
+"""granite-moe-1b-a400m [moe]: 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]. SwiGLU experts, RMSNorm,
+tied embeddings. Expert axis shards over "model" (EP). Full attention ->
+no long_500k.
+"""
+from repro.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8,
+    d_ff=512, vocab=49155,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    moe=MoEConfig(n_experts=32, top_k=8), tie_embeddings=True,
+    subquadratic=False,
+)
+
+REDUCED = ArchConfig(
+    name="granite-moe-1b-a400m-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=32, vocab=512,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    moe=MoEConfig(n_experts=4, top_k=2), tie_embeddings=True,
+    subquadratic=False,
+)

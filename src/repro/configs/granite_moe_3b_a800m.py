@@ -1,0 +1,26 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]. 40 experts on a 16-way
+model axis is the uneven-EP stress case (2.5 experts/chip -> GSPMD pads);
+see EXPERIMENTS.md §Perf for the padded-vs-replicated trade-off. Full
+attention -> no long_500k.
+"""
+from repro.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8,
+    d_ff=512, vocab=49155,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    moe=MoEConfig(n_experts=40, top_k=8, pad_to=48), tie_embeddings=True,
+    subquadratic=False,
+)
+
+REDUCED = ArchConfig(
+    name="granite-moe-3b-a800m-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=32, vocab=512,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    moe=MoEConfig(n_experts=5, top_k=2), tie_embeddings=True,
+    subquadratic=False,
+)

@@ -1,0 +1,27 @@
+"""internvl2-26b [vlm]: InternViT-6B frontend (STUB) + InternLM2-20B backbone.
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553 [arXiv:2404.16821; hf].
+The vision frontend is a stub: input_specs() supplies precomputed patch
+embeddings (n_patches=256 per image, d_vit=3200 = InternViT-6B hidden);
+a 2-layer MLP projector maps them into the LM embedding space.
+Full attention everywhere -> long_500k cell skipped (DESIGN.md).
+"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=92553,
+    act="silu", norm="rmsnorm", rope_theta=1e6,
+    frontend_dim=3200, frontend_tokens=256,
+    subquadratic=False,
+)
+
+REDUCED = ArchConfig(
+    name="internvl2-26b-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512,
+    act="silu", norm="rmsnorm", rope_theta=1e6,
+    frontend_dim=48, frontend_tokens=8,
+    subquadratic=False,
+)

@@ -1,0 +1,47 @@
+"""The paper's own architecture: LrcSSM sequence classifier (Figure 1),
+per-dataset tuned hyperparameters from Table 5.
+"""
+from repro.core.block import LrcSSMConfig
+from repro.core.deer import DeerConfig
+
+# Table 5 optimised hyperparameters (lr handled by the trainer)
+TABLE5 = {
+    # name: (input_size, n_classes, seq_len, hidden, state, blocks, lr)
+    "heartbeat": (61, 2, 405, 64, 64, 4, 1e-3),
+    "scp1": (6, 2, 896, 64, 16, 2, 1e-3),
+    "scp2": (7, 2, 1152, 128, 64, 2, 1e-3),
+    "ethanol": (2, 4, 1751, 128, 16, 2, 1e-4),
+    "motor": (63, 2, 3000, 16, 16, 4, 1e-4),
+    "worms": (6, 5, 17984, 64, 16, 4, 1e-4),
+}
+
+
+def uea_config(dataset: str, **overrides) -> LrcSSMConfig:
+    p, n_cls, _, hidden, state, blocks, _ = TABLE5[dataset]
+    kw = dict(d_input=p, d_hidden=hidden, d_state=state, n_blocks=blocks,
+              n_classes=n_cls, cell="lrc", solver="deer",
+              deer=DeerConfig(max_iters=12, mode="fixed", grad="implicit"))
+    kw.update(overrides)
+    return LrcSSMConfig(**kw)
+
+
+def uea_seq_len(dataset: str) -> int:
+    return TABLE5[dataset][2]
+
+
+def uea_lr(dataset: str) -> float:
+    return TABLE5[dataset][6]
+
+
+# fixed ablation setup (Tables 2, 8-11): 6 blocks x 64 units, encoder 64
+def ablation_config(cell: str = "lrc", d_input: int = 6, n_classes: int = 2,
+                    **overrides) -> LrcSSMConfig:
+    kw = dict(d_input=d_input, d_hidden=64, d_state=64, n_blocks=6,
+              n_classes=n_classes, cell=cell, solver="deer",
+              deer=DeerConfig(max_iters=12, mode="fixed", grad="implicit"))
+    kw.update(overrides)
+    return LrcSSMConfig(**kw)
+
+
+CONFIG = uea_config("worms")      # longest-horizon benchmark as default
+REDUCED = uea_config("scp1", d_hidden=16, d_state=8, n_blocks=2)

@@ -1,0 +1,23 @@
+"""nemotron-4-15b [dense]: 32L d_model=6144 48H (GQA kv=8) d_ff=24576
+vocab=256000 — GQA, squared-ReLU [arXiv:2402.16819; unverified].
+Plain (non-gated) squared-ReLU MLP, LayerNorm, RoPE. 256k vocabulary makes
+the embedding/lm_head the TP-sharding stress case. Full attention ->
+no long_500k.
+"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-15b", family="dense",
+    n_layers=32, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=24576, vocab=256000,
+    act="squared_relu", norm="layernorm", rope_theta=10000.0,
+    subquadratic=False,
+)
+
+REDUCED = ArchConfig(
+    name="nemotron-4-15b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+    d_ff=256, vocab=1024,
+    act="squared_relu", norm="layernorm", rope_theta=10000.0,
+    subquadratic=False,
+)

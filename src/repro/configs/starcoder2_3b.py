@@ -1,0 +1,21 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE [arXiv:2402.19173; hf]. Plain-GELU MLP, LayerNorm,
+learned biases per the released model. Full attention -> no long_500k.
+"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2,
+    d_ff=12288, vocab=49152,
+    act="gelu", norm="layernorm", rope_theta=1e5,
+    subquadratic=False,
+)
+
+REDUCED = ArchConfig(
+    name="starcoder2-3b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=256, vocab=512,
+    act="gelu", norm="layernorm", rope_theta=1e5,
+    subquadratic=False,
+)

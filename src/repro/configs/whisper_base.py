@@ -1,0 +1,28 @@
+"""whisper-base [audio]: 6L d_model=512 8H d_ff=2048 vocab=51865 — enc-dec,
+conv frontend STUB [arXiv:2212.04356; unverified].
+
+6 encoder + 6 decoder layers. The mel-spectrogram conv frontend is a stub:
+input_specs() provides precomputed frame embeddings (B, 1500, 512).
+Sinusoidal positions (rope_theta=0). Enc-dec with full attention ->
+long_500k skipped; decode shapes exercise decoder self-attn KV cache +
+static cross-attn cache.
+"""
+from repro.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab=51865,
+    act="gelu", norm="layernorm", rope_theta=0.0,
+    enc_layers=6, enc_seq=1500, frontend_dim=512,
+    subquadratic=False,
+)
+
+REDUCED = ArchConfig(
+    name="whisper-base-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512,
+    act="gelu", norm="layernorm", rope_theta=0.0,
+    enc_layers=2, enc_seq=32, frontend_dim=64,
+    subquadratic=False,
+)

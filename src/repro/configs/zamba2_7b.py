@@ -1,0 +1,34 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba-2 blocks + SHARED attention block
+[arXiv:2411.15242; unverified].
+
+Mapping: every 6th layer is followed by the shared transformer block
+(one set of attention+MLP weights reused at each application — zamba's
+parameter-sharing design). 81 = 13 groups of 6 + 3 trailing mamba2 layers.
+Mamba-2: head_dim 64, d_state 64, scalar-per-head decay. Sub-quadratic
+backbone -> long_500k runs (global-attn share has its own full cache but
+is 1-in-6 and weight-shared).
+"""
+from repro.config import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab=32000,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    ssm=SSMConfig(kind="mamba2", d_state=64, d_conv=4, expand=2,
+                  head_dim=64, chunk=256),
+    hybrid_period=6,
+    subquadratic=True,
+)
+
+REDUCED = ArchConfig(
+    name="zamba2-7b-smoke", family="hybrid",
+    n_layers=7, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512,
+    act="silu", norm="rmsnorm", rope_theta=10000.0,
+    ssm=SSMConfig(kind="mamba2", d_state=8, d_conv=4, expand=2,
+                  head_dim=16, chunk=16),
+    hybrid_period=3,
+    subquadratic=True,
+)

@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — nonlinear diagonal-Jacobian SSMs solved
+with exact parallel (DEER/ELK) fixed-point iterations.
+
+Public surface:
+  scan      — diagonal linear recurrence solvers (assoc / chunked / sharded)
+  lrc       — the LrcSSM cell (Eqs. 8-14)
+  deer      — exact-Newton parallel solver + implicit differentiation
+  elk       — trust-region (parallel Kalman) solver
+  variants  — Gru/Mgu/Lstm/Stc diagonal-design cells (Appendix D)
+  full_lrc  — dense-Jacobian LRC + quasi-DEER baseline (Table 9)
+  block     — Figure 1 block architecture & sequence classifier
+"""
+from repro.core.deer import DeerConfig, deer_solve, deer_residual
+from repro.core.elk import ElkConfig, elk_solve
+from repro.core.lrc import (LrcCellConfig, init_lrc_params, input_features,
+                            lrc_gates, lrc_step, lrc_step_and_diag_jac,
+                            lrc_sequential)
+from repro.core.scan import (chunked_diag_scan, diag_linear_scan,
+                             diag_linear_scan_seq, sharded_diag_scan)
+from repro.core.block import (LrcSSMConfig, apply_lrcssm,
+                              apply_lrcssm_regression, init_lrcssm)

@@ -1,0 +1,168 @@
+"""LrcSSM block architecture (Figure 1) and the sequence-classification model.
+
+    input (B, T, p)
+      -> input encoder (dense p -> H) -> pre-norm
+      -> [ LrcSSM block ] x L:
+             norm -> nonlinear SSM core (DEER-parallel solve, state dim S)
+                  -> MLP (S -> H) -> + skip
+      -> post-norm -> decoder (mean-pool -> classes | per-step regression)
+
+The SSM core is selectable: "lrc" (the paper's model), "stc", "gru", "mgu",
+"lstm" (Appendix D variants) — all solved with the same exact-diagonal DEER
+solver, or "elk" solver, or "sequential" (oracle; O(T) depth) for parity
+tests and the runtime benchmark (Table 6 comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core import variants
+from repro.core.deer import DeerConfig, deer_solve
+from repro.core.elk import ElkConfig, elk_solve
+from repro.core.lrc import (LrcCellConfig, init_lrc_params, input_features,
+                            lrc_step, lrc_sequential)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LrcSSMConfig:
+    d_input: int                 # raw input channels p
+    d_hidden: int = 64           # encoder width H ("hidden dimension")
+    d_state: int = 64            # SSM state width S ("state-space dimension")
+    n_blocks: int = 4
+    n_classes: int = 2
+    cell: str = "lrc"            # lrc | stc | gru | mgu | lstm
+    solver: str = "deer"         # deer | elk | sequential
+    deer: DeerConfig = DeerConfig()
+    elk: ElkConfig = ElkConfig()
+    dt: float = 1.0
+    rho: Optional[float] = None
+    state_dependent_a: bool = True
+    state_dependent_b: bool = True
+    complex_state_params: bool = False
+    pool: str = "mean"           # mean | last  (classification readout)
+    param_dtype: Any = jnp.float32
+    include_time: bool = False   # append normalised time channel
+
+
+def _cell_cfg(cfg: LrcSSMConfig):
+    if cfg.cell == "lrc":
+        return LrcCellConfig(
+            d_input=cfg.d_hidden, d_state=cfg.d_state, dt=cfg.dt, rho=cfg.rho,
+            state_dependent_a=cfg.state_dependent_a,
+            state_dependent_b=cfg.state_dependent_b,
+            complex_state_params=cfg.complex_state_params,
+            param_dtype=cfg.param_dtype)
+    return variants.CellConfig(d_input=cfg.d_hidden, d_state=cfg.d_state,
+                               dt=cfg.dt, param_dtype=cfg.param_dtype)
+
+
+def init_lrcssm(cfg: LrcSSMConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 3 + cfg.n_blocks)
+    d_in = cfg.d_input + (1 if cfg.include_time else 0)
+    ccfg = _cell_cfg(cfg)
+    p: Params = {
+        "encoder": nn.dense_init(keys[0], d_in, cfg.d_hidden, cfg.param_dtype),
+        "pre_norm": nn.layernorm_init(cfg.d_hidden, cfg.param_dtype),
+        "post_norm": nn.layernorm_init(cfg.d_hidden, cfg.param_dtype),
+        "decoder": nn.dense_init(keys[1], cfg.d_hidden, cfg.n_classes,
+                                 cfg.param_dtype),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(keys[3 + i], 3)
+        if cfg.cell == "lrc":
+            cell = init_lrc_params(ccfg, bk[0])
+        else:
+            cell = variants.CELLS[cfg.cell][0](ccfg, bk[0])
+        p["blocks"].append({
+            "norm": nn.layernorm_init(cfg.d_hidden, cfg.param_dtype),
+            "cell": cell,
+            "mlp": nn.mlp_init(bk[1], cfg.d_state, cfg.d_hidden, cfg.d_hidden,
+                               cfg.param_dtype),
+        })
+    return p
+
+
+def _solve_cell(cfg: LrcSSMConfig, cell_p: Params, h: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Run the nonlinear SSM over one sequence h: (T, H) -> states (T, S)."""
+    ccfg = _cell_cfg(cfg)
+    T = h.shape[0]
+
+    if cfg.cell == "lrc":
+        feats = input_features(cell_p, h)
+        step = lambda x, fs, cp: lrc_step(cp, ccfg, x, *fs)
+        x0 = jnp.zeros((cfg.d_state,),
+                       ccfg.state_dtype if cfg.complex_state_params else h.dtype)
+        if cfg.solver == "sequential":
+            return lrc_sequential(cell_p, ccfg, h), jnp.asarray(T, jnp.int32)
+    else:
+        _, feat_fn, step_fn = variants.CELLS[cfg.cell]
+        feats = feat_fn(cell_p, h)
+        step = lambda x, fs, cp: step_fn(cp, ccfg, x, *fs)
+        x0 = jnp.zeros((cfg.d_state,), h.dtype)
+        if cfg.solver == "sequential":
+            return (variants.sequential(cfg.cell, cell_p, ccfg, h),
+                    jnp.asarray(T, jnp.int32))
+
+    if cfg.solver == "elk":
+        states, iters = elk_solve(step, feats, x0, T, cfg.elk, params=cell_p)
+    else:
+        states, iters = deer_solve(step, feats, x0, T, cfg.deer,
+                                   params=cell_p)
+    if cfg.complex_state_params:
+        states = states.real
+    if cfg.cell == "lstm":
+        states = variants.lstm_readout(cell_p, states, feats[3])
+    return states, iters
+
+
+def apply_lrcssm(cfg: LrcSSMConfig, p: Params, x: jax.Array,
+                 return_iters: bool = False):
+    """Forward pass. x: (B, T, p) -> logits (B, n_classes)."""
+    B, T, _ = x.shape
+    if cfg.include_time:
+        tch = jnp.broadcast_to(jnp.linspace(0.0, 1.0, T)[None, :, None],
+                               (B, T, 1)).astype(x.dtype)
+        x = jnp.concatenate([x, tch], axis=-1)
+
+    h = nn.dense(p["encoder"], x)
+    h = nn.layernorm(p["pre_norm"], h)
+
+    iters_acc = []
+    for blk in p["blocks"]:
+        hn = nn.layernorm(blk["norm"], h)
+        states, iters = jax.vmap(lambda seq: _solve_cell(cfg, blk["cell"], seq))(hn)
+        iters_acc.append(jnp.max(iters))
+        h = h + nn.mlp(blk["mlp"], states)
+
+    h = nn.layernorm(p["post_norm"], h)
+    if cfg.pool == "mean":
+        pooled = jnp.mean(h, axis=1)
+    else:
+        pooled = h[:, -1]
+    logits = nn.dense(p["decoder"], pooled)
+    if return_iters:
+        return logits, jnp.stack(iters_acc)
+    return logits
+
+
+def apply_lrcssm_regression(cfg: LrcSSMConfig, p: Params, x: jax.Array):
+    """Per-sequence scalar regression head (PPG-DaLiA, Table 7)."""
+    B, T, _ = x.shape
+    h = nn.dense(p["encoder"], x)
+    h = nn.layernorm(p["pre_norm"], h)
+    for blk in p["blocks"]:
+        hn = nn.layernorm(blk["norm"], h)
+        states, _ = jax.vmap(lambda seq: _solve_cell(cfg, blk["cell"], seq))(hn)
+        h = h + nn.mlp(blk["mlp"], states)
+    h = nn.layernorm(p["post_norm"], h)
+    return nn.dense(p["decoder"], jnp.mean(h, axis=1))[..., 0]

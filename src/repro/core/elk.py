@@ -1,0 +1,184 @@
+"""ELK: Levenberg-Marquardt-damped DEER via parallel Kalman smoothing.
+
+Gonzalez et al. [8] stabilise the DEER Newton iteration by constraining each
+update inside a trust region. The LM-damped linear subproblem
+
+    min_{x_{1:T}}  sum_t || x_t - (J_t x_{t-1} + b_t) ||^2
+                 + mu * sum_t || x_t - x_t^{prev} ||^2
+
+is exactly MAP smoothing of the linear-Gaussian state-space model
+
+    x_t = J_t x_{t-1} + b_t + w_t,   w_t ~ N(0, 1)
+    y_t = x_t + v_t,                 v_t ~ N(0, 1/mu),   y_t := x_t^{prev}
+
+so the damped Newton step is one parallel Kalman smoother pass — still
+O(log T) sequential depth (Särkkä & García-Fernández associative-scan
+filtering/smoothing). As mu -> 0 the observations become uninformative and
+the update reduces to the exact DEER scan.
+
+Because the LrcSSM Jacobian is diagonal, every hidden dimension is an
+independent SCALAR smoothing problem: the 5-tuple filtering elements and
+3-tuple smoothing elements below are elementwise over (T, D) — no D x D
+algebra anywhere, which is what makes ELK O(T D) for this model family.
+
+The paper's headline model does not need ELK (its exact diagonal Newton
+iteration is contractive in practice); ELK is provided (a) as the faithful
+baseline for the dense-Jacobian LRC (quasi-ELK, Table 9 ablation) and (b) as
+a robustness fallback selectable per-layer (solver="elk").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deer import DeerConfig, StepFn, _shift_right
+
+
+# ---------------------------------------------------------------------------
+# Scalar parallel Kalman filter (associative scan). Elements are
+# (A, b, C, eta, J) per Särkkä & García-Fernández (2021), specialised to
+# scalar state/obs with H = 1. All arrays are (T, ...) elementwise.
+# ---------------------------------------------------------------------------
+
+def _filter_combine(e1, e2):
+    A1, b1, C1, eta1, J1 = e1
+    A2, b2, C2, eta2, J2 = e2
+    denom = 1.0 + C1 * J2
+    A = A2 * A1 / denom
+    b = A2 * (b1 + C1 * eta2) / denom + b2
+    C = A2 * A2 * C1 / denom + C2
+    eta = A1 * (eta2 - J2 * b1) / denom + eta1
+    J = A1 * A1 * J2 / denom + J1
+    return A, b, C, eta, J
+
+
+def _smooth_combine(e1, e2):
+    # elements (E, g, L): x_t | x_{t+1} ~ N(E x_{t+1} + g, L). Convention
+    # matches the affine scan combine: e1 is applied FIRST, i.e. the result
+    # is e2(e1(x)). In the reverse scan the left-fold accumulator (first arg)
+    # holds the LATER-time suffix, which is exactly the map applied first
+    # when walking x_end -> x_t.
+    E1, g1, L1 = e1
+    E2, g2, L2 = e2
+    return E2 * E1, E2 * g1 + g2, E2 * E2 * L1 + L2
+
+
+def kalman_smoother_parallel(F: jax.Array, c: jax.Array, q: jax.Array,
+                             y: jax.Array, r: jax.Array,
+                             m0: jax.Array, P0: jax.Array
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Parallel RTS smoother for T independent scalar chains.
+
+    x_t = F_t x_{t-1} + c_t + w_t, w~N(0,q);  y_t = x_t + v_t, v~N(0,r_t).
+    F, c, y, r: (T, ...); q scalar or (T, ...); m0, P0: (...).
+    Returns (smoothed_means, smoothed_vars), each (T, ...).
+    """
+    q = jnp.broadcast_to(jnp.asarray(q, y.dtype), y.shape)
+    r = jnp.broadcast_to(jnp.asarray(r, y.dtype), y.shape)
+    # ---- filtering elements -------------------------------------------------
+    S = q + r
+    K = q / S
+    A = (1.0 - K) * F
+    b = c + K * (y - c)
+    C = (1.0 - K) * q
+    eta = F * (y - c) / S
+    J = F * F / S
+
+    # First element conditions on the prior (m0, P0).
+    P1p = F[0] * F[0] * P0 + q[0]
+    m1p = F[0] * m0 + c[0]
+    S1 = P1p + r[0]
+    K1 = P1p / S1
+    A0 = jnp.zeros_like(A[0])
+    b0 = m1p + K1 * (y[0] - m1p)
+    C0 = (1.0 - K1) * P1p
+    z0 = jnp.zeros_like(A[0])
+
+    A = jnp.concatenate([A0[None], A[1:]], 0)
+    b = jnp.concatenate([b0[None], b[1:]], 0)
+    C = jnp.concatenate([C0[None], C[1:]], 0)
+    eta = jnp.concatenate([z0[None], eta[1:]], 0)
+    J = jnp.concatenate([z0[None], J[1:]], 0)
+
+    fA, fb, fC, _, _ = jax.lax.associative_scan(
+        _filter_combine, (A, b, C, eta, J), axis=0)
+    m_f, P_f = fb, fC                           # filtered means/vars
+
+    # ---- smoothing elements (reverse suffix scan) ---------------------------
+    F_next = jnp.concatenate([F[1:], jnp.ones_like(F[:1])], 0)
+    c_next = jnp.concatenate([c[1:], jnp.zeros_like(c[:1])], 0)
+    q_next = jnp.concatenate([q[1:], jnp.ones_like(q[:1])], 0)
+    Pp_next = F_next * F_next * P_f + q_next    # P_{t+1|t}
+    E = P_f * F_next / Pp_next
+    g = m_f - E * (F_next * m_f + c_next)
+    L = P_f - E * E * Pp_next
+    # last element: conditional == filtered marginal
+    E = E.at[-1].set(0.0)
+    g = g.at[-1].set(m_f[-1])
+    L = L.at[-1].set(P_f[-1])
+
+    _, ms, Ls = jax.lax.associative_scan(_smooth_combine, (E, g, L),
+                                         axis=0, reverse=True)
+    return ms, Ls
+
+
+# ---------------------------------------------------------------------------
+# ELK iteration / solver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ElkConfig:
+    max_iters: int = 16
+    tol: float = 1e-6
+    mode: str = "fixed"
+    trust_mu: float = 0.1        # observation precision; 0 => pure DEER step
+
+
+def elk_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
+              cfg: ElkConfig = ElkConfig(),
+              init_guess: Optional[jax.Array] = None,
+              params=None) -> Tuple[jax.Array, jax.Array]:
+    """Trust-region (LM/Kalman) variant of deer_solve. Same contract."""
+    if params is None:
+        orig = step_fn
+        step_fn = lambda x, f, _p: orig(x, f)
+        params = ()
+    if init_guess is None:
+        init_guess = jnp.zeros((T,) + x0.shape, x0.dtype)
+
+    r_obs = 1.0 / max(cfg.trust_mu, 1e-12)
+
+    def iteration(states):
+        shifted = _shift_right(states, x0)
+        fn = lambda xs: step_fn(xs, feats, params)
+        ones = jnp.ones_like(shifted)
+        f_s, jac = jax.jvp(fn, (shifted,), (ones,))
+        b_s = f_s - jac * shifted
+        q = jnp.ones_like(states)
+        r = jnp.full_like(states, r_obs)
+        m0 = x0
+        P0 = jnp.zeros_like(x0) + 1e-6
+        ms, _ = kalman_smoother_parallel(jac, b_s, q, states, r, m0, P0)
+        return ms
+
+    if cfg.mode == "fixed":
+        states = jax.lax.fori_loop(
+            0, cfg.max_iters, lambda _, st: iteration(st), init_guess)
+        return states, jnp.asarray(cfg.max_iters, jnp.int32)
+
+    def cond(carry):
+        _, diff, it = carry
+        return jnp.logical_and(diff > cfg.tol, it < cfg.max_iters)
+
+    def body(carry):
+        st, _, it = carry
+        new = iteration(st)
+        return new, jnp.max(jnp.abs(new - st)), it + 1
+
+    states, _, iters = jax.lax.while_loop(
+        cond, body,
+        (init_guess, jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32)))
+    return states, iters

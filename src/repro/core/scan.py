@@ -1,0 +1,162 @@
+"""Diagonal linear-recurrence scan primitives.
+
+The paper's central computational object is the first-order diagonal linear
+recurrence
+
+    x_t = lam_t * x_{t-1} + b_t ,        t = 1..T,   lam_t, b_t, x_t in R^D (or C^D)
+
+which every DEER/ELK Newton iteration must solve (Algorithm 1, line 9).
+Because the LrcSSM Jacobian is diagonal *by model design* (Sec. 3.1), the
+recurrence decouples per hidden dimension, so the whole (T, D) solve is an
+embarrassingly-parallel-over-D set of scalar prefix problems with O(log T)
+sequential depth via an associative scan.
+
+The same primitive also implements the Mamba-1/Mamba-2 selective scans used
+by the assigned `ssm`/`hybrid` architectures, so it is shared framework-wide.
+
+Three implementations, one contract:
+  * ``diag_linear_scan``      — jax.lax.associative_scan (default; O(log T) depth)
+  * ``diag_linear_scan_seq``  — jax.lax.scan oracle (O(T) depth; tests/serving)
+  * ``sharded_diag_scan``     — shard_map sequence-parallel scan: local scan +
+                                all-gather of per-shard summaries + prefix fixup.
+                                Used for long-context cells (seq sharded over mesh).
+
+All operate on leading time axis: lam, b have shape (T, ...) broadcastable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _combine(elem_a, elem_b):
+    """Associative combine for affine maps  x -> a*x + b.
+
+    Composition (apply a then b):  x -> a2*(a1*x + b1) + b2
+    => (a1, b1) . (a2, b2) = (a1*a2, a2*b1 + b2)
+    """
+    a1, b1 = elem_a
+    a2, b2 = elem_b
+    return a1 * a2, a2 * b1 + b2
+
+
+def diag_linear_scan(lam: jax.Array, b: jax.Array, x0: jax.Array | None = None,
+                     *, axis: int = 0, reverse: bool = False) -> jax.Array:
+    """Solve x_t = lam_t * x_{t-1} + b_t in parallel over axis ``axis``.
+
+    Args:
+      lam: (T, ...) multiplicative coefficients.
+      b:   (T, ...) additive coefficients.
+      x0:  initial state (...,) or None for zero init.
+      reverse: solve the time-reversed recurrence (used by the adjoint pass).
+
+    Returns:
+      states x_{1..T}, same shape as b.
+    """
+    if x0 is not None:
+        # Fold x0 into the first step: x_1 = lam_1 * x0 + b_1.
+        if reverse:
+            idx = [slice(None)] * b.ndim
+            idx[axis] = slice(-1, None)
+            b = jnp.concatenate(
+                [b[tuple(slice(None) if i != axis else slice(None, -1) for i in range(b.ndim))],
+                 b[tuple(idx)] + lam[tuple(idx)] * x0[None]], axis=axis)
+        else:
+            first = tuple(slice(None) if i != axis else slice(0, 1) for i in range(b.ndim))
+            rest = tuple(slice(None) if i != axis else slice(1, None) for i in range(b.ndim))
+            b = jnp.concatenate([b[first] + lam[first] * x0[None], b[rest]], axis=axis)
+    _, states = jax.lax.associative_scan(_combine, (lam, b), axis=axis, reverse=reverse)
+    return states
+
+
+def diag_linear_scan_seq(lam: jax.Array, b: jax.Array,
+                         x0: jax.Array | None = None) -> jax.Array:
+    """Sequential oracle: identical contract to ``diag_linear_scan`` (axis 0)."""
+    if x0 is None:
+        x0 = jnp.zeros(b.shape[1:], b.dtype)
+
+    def step(carry, lb):
+        lam_t, b_t = lb
+        x = lam_t * carry + b_t
+        return x, x
+
+    _, states = jax.lax.scan(step, x0, (lam, b))
+    return states
+
+
+def chunked_diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array | None = None,
+                      *, chunk: int = 256) -> jax.Array:
+    """Two-level blocked scan: intra-chunk associative scan (parallel) +
+    inter-chunk sequential carry via lax.scan.
+
+    This mirrors the TPU Pallas kernel's schedule (VMEM-resident chunks with a
+    sequential carry) and bounds the associative-scan workspace to
+    O(chunk * D) instead of O(T * D) — the memory-side optimisation recorded
+    in EXPERIMENTS.md §Perf.
+    """
+    T = lam.shape[0]
+    if chunk <= 0 or T % chunk != 0:
+        return diag_linear_scan(lam, b, x0)
+    n = T // chunk
+    lam_c = lam.reshape((n, chunk) + lam.shape[1:])
+    b_c = b.reshape((n, chunk) + b.shape[1:])
+    # Per-chunk cumulative affine maps (parallel over chunks).
+    A_cum, B_cum = jax.lax.associative_scan(_combine, (lam_c, b_c), axis=1)
+
+    def carry_step(carry, ab):
+        a_cum, b_cum = ab                       # (chunk, ...)
+        states = a_cum * carry + b_cum          # apply incoming carry
+        new_carry = states[-1]
+        return new_carry, states
+
+    init = jnp.zeros(b.shape[1:], b.dtype) if x0 is None else x0.astype(b.dtype)
+    _, states = jax.lax.scan(carry_step, init, (A_cum, B_cum))
+    return states.reshape(lam.shape[0:1] + b.shape[1:])
+
+
+def sharded_diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array,
+                      *, mesh, seq_axis: str) -> jax.Array:
+    """Sequence-parallel diagonal scan via shard_map.
+
+    The time axis is sharded over mesh axis ``seq_axis`` (P shards). Each
+    shard computes its local cumulative affine map (O(T/P) work, O(log T/P)
+    depth), the per-shard summaries (one (lam_prod, b_total) pair each) are
+    all-gathered (P tiny elements), an exclusive prefix over shards is
+    computed redundantly on every device, and applied locally.
+
+    Collective volume: 2 * P * D elements per call — independent of T.
+    """
+
+    def local(lam_s, b_s, x0_s):
+        # lam_s, b_s: (T/P, ...) local shard. x0_s replicated.
+        A_cum, B_cum = jax.lax.associative_scan(_combine, (lam_s, b_s), axis=0)
+        # Per-shard summary = last cumulative element.
+        summ_A = jax.lax.all_gather(A_cum[-1], seq_axis)   # (P, ...)
+        summ_B = jax.lax.all_gather(B_cum[-1], seq_axis)
+        # Exclusive prefix over shards, applied to x0: state at my shard's left edge.
+        idx = jax.lax.axis_index(seq_axis)
+        A_pref, B_pref = jax.lax.associative_scan(_combine, (summ_A, summ_B), axis=0)
+        # prefix state BEFORE shard i = combine of shards < i applied to x0
+        ones = jnp.ones_like(summ_A[0])
+        zeros = jnp.zeros_like(summ_B[0])
+        A_excl = jnp.where(idx == 0, ones, A_pref[jnp.maximum(idx - 1, 0)])
+        B_excl = jnp.where(idx == 0, zeros, B_pref[jnp.maximum(idx - 1, 0)])
+        x_left = A_excl * x0_s + B_excl
+        return A_cum * x_left + B_cum
+
+    pspec = P(seq_axis)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(pspec, pspec, P()),
+        out_specs=pspec,
+    )(lam, b, x0)
+
+
+def scan_flops(T: int, D: int) -> int:
+    """Work of one parallel scan (for roofline napkin math): ~3*T*D mul-adds
+    per Blelloch up+down sweep against 2*T*D for the sequential oracle."""
+    return 6 * T * D

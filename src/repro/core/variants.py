@@ -1,0 +1,195 @@
+"""Generalised diagonal model design (Sec. 5.2, Appendix D).
+
+Any gated nonlinear RNN  x_t = q_t(x_{t-1}, u_t) * x_{t-1} + s_t(x_{t-1}, u_t)
+becomes a parallelisable nonlinear SSM by restricting the state-dependence of
+every gate to the neuron's own state (self-loop synapses) while keeping full
+input dependence. The resulting step function is elementwise in x, hence the
+Jacobian is diagonal by construction and the exact DEER machinery of
+core/deer.py applies unchanged.
+
+Implemented cells (Table 2 / Table 8):
+  * GruSSM  — diagonal-design GRU (Appendix D.1)
+  * MguSSM  — diagonal-design Minimal Gated Unit
+  * LstmSSM — diagonal-design LSTM (cell state is the SSM state)
+  * StcSSM  — saturated LTC without the elastance term (constant capacitance,
+              Table 8 ablation)
+
+Every cell exposes the same functional surface as core/lrc.py:
+  init_params(cfg, key) -> Params
+  input_features(p, u)  -> per-timestep features (computed once, two matmuls)
+  step(p, cfg, x_prev, *feats) -> x_next   (elementwise in x_prev)
+  sequential(p, cfg, u, x0)    -> oracle rollout
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class CellConfig:
+    d_input: int
+    d_state: int
+    dt: float = 1.0
+    param_dtype: Any = jnp.float32
+
+
+def _dense(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GruSSM (Appendix D.1): A(x,u) = -z, b(x,u) = z * c
+#   z = sigma(wz_x * x + U_z u + bz)
+#   r = sigma(wr_x * x + U_r u + br)
+#   c = tanh(wh_x * (r * x) + U_h u + bh)
+#   x_t = (1 - z) x_{t-1} + z c
+# ---------------------------------------------------------------------------
+
+def gru_init(cfg: CellConfig, key) -> Params:
+    D, n, dt = cfg.d_state, cfg.d_input, cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    s = (1.0 / max(n, 1)) ** 0.5
+    return {
+        "wz_x": _dense(ks[0], (D,), 0.5, dt), "U_z": _dense(ks[1], (n, D), s, dt),
+        "bz": jnp.zeros((D,), dt),
+        "wr_x": _dense(ks[2], (D,), 0.5, dt), "U_r": _dense(ks[3], (n, D), s, dt),
+        "br": jnp.zeros((D,), dt),
+        "wh_x": _dense(ks[4], (D,), 0.5, dt), "U_h": _dense(ks[5], (n, D), s, dt),
+        "bh": jnp.zeros((D,), dt),
+    }
+
+
+def gru_features(p: Params, u: jax.Array):
+    return u @ p["U_z"] + p["bz"], u @ p["U_r"] + p["br"], u @ p["U_h"] + p["bh"]
+
+
+def gru_step(p: Params, cfg: CellConfig, x, fz, fr, fh):
+    z = jax.nn.sigmoid(p["wz_x"] * x + fz)
+    r = jax.nn.sigmoid(p["wr_x"] * x + fr)
+    c = jnp.tanh(p["wh_x"] * (r * x) + fh)
+    return (1.0 - z) * x + z * c
+
+
+# ---------------------------------------------------------------------------
+# MguSSM: single forget gate
+# ---------------------------------------------------------------------------
+
+def mgu_init(cfg: CellConfig, key) -> Params:
+    D, n, dt = cfg.d_state, cfg.d_input, cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    s = (1.0 / max(n, 1)) ** 0.5
+    return {
+        "wf_x": _dense(ks[0], (D,), 0.5, dt), "U_f": _dense(ks[1], (n, D), s, dt),
+        "bf": jnp.zeros((D,), dt),
+        "wh_x": _dense(ks[2], (D,), 0.5, dt), "U_h": _dense(ks[3], (n, D), s, dt),
+        "bh": jnp.zeros((D,), dt),
+    }
+
+
+def mgu_features(p: Params, u: jax.Array):
+    return u @ p["U_f"] + p["bf"], u @ p["U_h"] + p["bh"]
+
+
+def mgu_step(p: Params, cfg: CellConfig, x, ff, fh):
+    f = jax.nn.sigmoid(p["wf_x"] * x + ff)
+    h = jnp.tanh(p["wh_x"] * (f * x) + fh)
+    return (1.0 - f) * x + f * h
+
+
+# ---------------------------------------------------------------------------
+# LstmSSM: the cell state c is the SSM state; i/f/g/o gates diagonal in c.
+#   c_t = f * c_{t-1} + i * g ;  readout h = o * tanh(c) applied post-solve.
+# ---------------------------------------------------------------------------
+
+def lstm_init(cfg: CellConfig, key) -> Params:
+    D, n, dt = cfg.d_state, cfg.d_input, cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    s = (1.0 / max(n, 1)) ** 0.5
+    p = {}
+    for i, gate in enumerate(("i", "f", "g", "o")):
+        p[f"w{gate}_x"] = _dense(ks[2 * i], (D,), 0.5, dt)
+        p[f"U_{gate}"] = _dense(ks[2 * i + 1], (n, D), s, dt)
+        p[f"b{gate}"] = (jnp.ones((D,), dt) if gate == "f" else jnp.zeros((D,), dt))
+    return p
+
+
+def lstm_features(p: Params, u: jax.Array):
+    return (u @ p["U_i"] + p["bi"], u @ p["U_f"] + p["bf"],
+            u @ p["U_g"] + p["bg"], u @ p["U_o"] + p["bo"])
+
+
+def lstm_step(p: Params, cfg: CellConfig, c, fi, ff, fg, fo):
+    i = jax.nn.sigmoid(p["wi_x"] * c + fi)
+    f = jax.nn.sigmoid(p["wf_x"] * c + ff)
+    g = jnp.tanh(p["wg_x"] * c + fg)
+    return f * c + i * g
+
+
+def lstm_readout(p: Params, c, fo):
+    o = jax.nn.sigmoid(p["wo_x"] * c + fo)
+    return o * jnp.tanh(c)
+
+
+# ---------------------------------------------------------------------------
+# StcSSM (Table 8): LRC without elastance — constant capacitance.
+#   dx = -sigma(f*) x + tanh(z*) e_leak
+# ---------------------------------------------------------------------------
+
+def stc_init(cfg: CellConfig, key) -> Params:
+    D, n, dt = cfg.d_state, cfg.d_input, cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    s = (1.0 / max(n, 1)) ** 0.5
+    return {
+        "a_x": _dense(ks[0], (D,), 1.0, dt), "b_x": jnp.zeros((D,), dt),
+        "g_max_x": _dense(ks[1], (D,), 0.5, dt), "k_max_x": _dense(ks[2], (D,), 0.5, dt),
+        "a_u": _dense(ks[3], (n, D), s, dt), "b_u": jnp.zeros((D,), dt),
+        "g_max_u": _dense(ks[4], (D,), 0.5, dt), "k_max_u": _dense(ks[5], (D,), 0.5, dt),
+        "g_leak": jnp.full((D,), 0.1, dt), "e_leak": jnp.ones((D,), dt),
+    }
+
+
+def stc_features(p: Params, u: jax.Array):
+    return (jax.nn.sigmoid(u @ p["a_u"] + p["b_u"]),)
+
+
+def stc_step(p: Params, cfg: CellConfig, x, s_u):
+    s_x = jax.nn.sigmoid(p["a_x"] * x + p["b_x"])
+    f = p["g_max_x"] * s_x + p["g_max_u"] * s_u + p["g_leak"]
+    z = p["k_max_x"] * s_x + p["k_max_u"] * s_u + p["g_leak"]
+    lam = 1.0 - cfg.dt * jax.nn.sigmoid(f)
+    beta = cfg.dt * jnp.tanh(z) * p["e_leak"]
+    return lam * x + beta
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+CELLS = {
+    "gru": (gru_init, gru_features, gru_step),
+    "mgu": (mgu_init, mgu_features, mgu_step),
+    "lstm": (lstm_init, lstm_features, lstm_step),
+    "stc": (stc_init, stc_features, stc_step),
+}
+
+
+def sequential(kind: str, p: Params, cfg: CellConfig, u: jax.Array,
+               x0: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle rollout for any registered cell (O(T) depth)."""
+    _, feat_fn, step_fn = CELLS[kind]
+    feats = feat_fn(p, u)
+    if x0 is None:
+        x0 = jnp.zeros((cfg.d_state,), u.dtype)
+
+    def step(x, fs):
+        x_new = step_fn(p, cfg, x, *fs)
+        return x_new, x_new
+
+    _, xs = jax.lax.scan(step, x0, feats)
+    return xs

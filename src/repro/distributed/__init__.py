@@ -1,0 +1,2 @@
+"""Distributed runtime: mesh context, parameter/activation sharding rules,
+sequence parallelism, compressed cross-pod collectives."""

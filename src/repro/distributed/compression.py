@@ -1,0 +1,84 @@
+"""Gradient compression for cross-pod (DCN) all-reduce.
+
+At 2+ pods the "pod" axis rides the data-center network (~25 GB/s per host
+vs ~50 GB/s/link ICI intra-pod), so the cross-pod gradient all-reduce is the
+straggler term in the collective roofline. We compress it: per-tensor-block
+int8 quantisation with stochastic-free symmetric scaling and ERROR FEEDBACK
+(the quantisation residual is added back into the next step's gradient), the
+standard trick that keeps SGD/Adam convergence unaffected.
+
+Usage inside a shard_map'd train step (distributed/train_step when
+multi_pod and cfg.grad_compression == "int8"):
+
+    g_local  = grads averaged over ("data",) via psum
+    g_global = compressed_psum(g_local, "pod", error_state)
+
+Exactness note: compression is OPT-IN and OFF for the paper-faithful
+baseline; EXPERIMENTS.md §Perf records the collective-bytes delta (4x on
+the pod axis) and the quantisation error statistics.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-block int8. x: any shape -> (q int8, scales f32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array, shape, size
+                     ) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def quantize_roundtrip(x: jax.Array) -> jax.Array:
+    q, s = _quantize_int8(x)
+    return _dequantize_int8(q, s, x.shape, x.size)
+
+
+def compressed_psum(tree, axis_name: str, error_state=None):
+    """int8-compressed all-reduce(mean) over ``axis_name`` with error
+    feedback. Returns (reduced tree, new error_state)."""
+    if error_state is None:
+        error_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+    def one(g, err):
+        g32 = g.astype(jnp.float32) + err
+        q, s = _quantize_int8(g32)
+        deq = _dequantize_int8(q, s, g32.shape, g32.size)
+        new_err = g32 - deq                      # error feedback residual
+        # WIRE FORMAT: int8 payload + per-block fp32 scales (1/256 overhead).
+        # all_gather keeps the transferred bytes at 1/4 of an fp32 psum;
+        # each pod dequantises and reduces locally.
+        q_all = jax.lax.all_gather(q, axis_name)          # (P, blocks, BLOCK) int8
+        s_all = jax.lax.all_gather(s, axis_name)          # (P, blocks, 1) f32
+        P = q_all.shape[0]
+        deq_sum = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+        flat = deq_sum.reshape(-1)[:g32.size].reshape(g32.shape)
+        return (flat / P).astype(g.dtype), new_err
+
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_err = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat, flat_err)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compression_error(x: jax.Array) -> jax.Array:
+    """Relative L2 quantisation error (diagnostics / tests)."""
+    rt = quantize_roundtrip(x)
+    return jnp.linalg.norm(x - rt) / jnp.maximum(jnp.linalg.norm(x), 1e-12)

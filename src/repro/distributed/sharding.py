@@ -1,0 +1,342 @@
+"""Sharding rules: parameter-tree path -> PartitionSpec, activation
+constraints, and the mesh context.
+
+Mesh axes (launch/mesh.py):
+    single-pod : ("data", "model") = (16, 16)        — 256 chips
+    multi-pod  : ("pod", "data", "model") = (2,16,16) — 512 chips
+
+Parallelism mapping
+  * DP   : batch over ("pod", "data")
+  * FSDP : parameters ALSO sharded over "data" on their non-TP axis
+           (ZeRO-3 style; GSPMD inserts the forward all-gathers). Optimizer
+           state inherits it -> ZeRO comes free.
+  * TP   : heads / d_ff / vocab / ssm-channel over "model".
+  * EP   : MoE expert axis over "model".
+  * SP   : long-context sequence sharding over "data"
+           (core.scan.sharded_diag_scan + sequence-sharded decode attention).
+  * "pod": pure DP across the DCN-connected pods; gradient all-reduce may be
+           int8-compressed (distributed/compression.py).
+
+Rules are longest-match on the flattened parameter path, so arch-specific
+overrides can be layered on top of the generic table.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+_STRATEGY: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_strategy", default="megatron")
+
+
+@contextlib.contextmanager
+def use_strategy(name: str):
+    token = _STRATEGY.set(name)
+    try:
+        yield name
+    finally:
+        _STRATEGY.reset(token)
+
+
+def current_strategy() -> str:
+    return _STRATEGY.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    token = _MESH.set(mesh)
+    try:
+        with mesh:              # jax.sharding.Mesh context manager
+            yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def _axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in _axes(mesh)) or None
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (no-op outside a mesh context)
+# ---------------------------------------------------------------------------
+
+def _act_spec(mesh: Mesh, strategy: str, shape) -> P:
+    ba = batch_axes(mesh) or ()
+    if strategy == "moe_rep":
+        strategy = "fsdp"
+    if strategy == "fsdp":
+        # batch over every axis (ZeRO-3 layout), cascading fallback
+        for axes in ((*ba, "model"), ba, None):
+            if axes is None:
+                return P()
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape.get(a, 1)
+            if shape and shape[0] % prod == 0:
+                return P(axes if len(axes) > 1 else axes[0])
+        return P()
+    if strategy == "ring":
+        # (B, T, D): batch over DP, TIME over model (sequence parallelism)
+        return fit_spec(P(ba if ba else None, "model"), shape, mesh)
+    return fit_spec(P(ba if ba else None), shape, mesh)
+
+
+def constrain_batch_only(x: jax.Array) -> jax.Array:
+    """Constrain a small per-step tensor to batch-only sharding (decode
+    q/k/v): prevents the fused-qkv model-axis sharding from leaking into
+    the cache layout."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ba = batch_axes(mesh)
+    if ba is None:
+        return x
+    spec = fit_spec(P(ba, *([None] * (x.ndim - 1))), x.shape, mesh)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        return x
+
+
+def shard_activation(x: jax.Array, kind: str = "act") -> jax.Array:
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _act_spec(mesh, current_strategy(), getattr(x, "shape", ()))
+    if spec == P(None) or spec == P():
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+# Longest-regex-match table over '/'.joined tree paths. Specs written for the
+# 2D ("data", "model") sub-mesh; the "pod" axis never shards parameters
+# (pods are pure DP replicas).
+#
+# Convention per tensor (FSDP axis first where applicable). Leading scan/
+# stack axes (layer groups, experts handled explicitly) are unsharded.
+
+_PARAM_RULES = [
+    # --- embeddings / head: vocab over model (TP), d_model over data (FSDP)
+    (r"embed$",                 P("model", "data")),
+    (r"lm_head$",               P("data", "model")),
+    # --- attention
+    (r"wqkv$",                  P("data", "model")),
+    (r"wo$",                    P("model", "data")),
+    # --- gated mlp
+    (r"w_gate$",                P("data", "model")),
+    (r"w_up$",                  P("data", "model")),
+    (r"w_down$",                P("model", "data")),
+    # --- plain mlp
+    (r"fc1/w$",                 P("data", "model")),
+    (r"fc1/b$",                 P("model")),
+    (r"fc2/w$",                 P("model", "data")),
+    (r"fc2/b$",                 P()),
+    # --- moe (leading expert axis over model = EP)
+    (r"moe/router$",            P(None, None)),
+    (r"moe/w_gate$",            P("model", "data", None)),
+    (r"moe/w_up$",              P("model", "data", None)),
+    (r"moe/w_down$",            P("model", None, "data")),
+    # --- mamba mixers: channel (d_inner) axis over model
+    (r"mixer/in_proj/w$",       P("data", "model")),
+    (r"mixer/out_proj/w$",      P("model", "data")),
+    (r"mixer/x_proj/w$",        P("model", None)),
+    (r"mixer/dt_proj/w$",       P(None, "model")),
+    (r"mixer/dt_proj/b$",       P("model")),
+    (r"mixer/conv_w$",          P(None, "model")),
+    (r"mixer/conv_b$",          P("model")),
+    (r"mixer/A_log$",           P("model")),
+    (r"mixer/D$",               P("model")),
+    (r"mixer/dt_bias$",         P("model")),
+    (r"mixer/norm/scale$",      P("model")),
+    # --- lrc mixer: d_inner over model (state dim is embarrassingly TP)
+    (r"mixer/a_u$",             P("data", "model")),
+    (r"mixer/w_u$",             P("data", "model")),
+    (r"mixer/(a_x|b_x|b_u|v_u|v_x|g_max_x|k_max_x|g_max_u|k_max_u|w_x|g_leak|e_leak)$",
+                                P("model")),
+    # --- vlm projector
+    (r"projector/fc1/w$",       P("data", "model")),
+    (r"projector/fc2/w$",       P("model", "data")),
+    # --- norms / everything 1-D: replicated
+    (r"(scale|bias|b)$",        P()),
+]
+
+
+def fit_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Drop sharding on any dimension whose size is not divisible by the
+    product of its assigned mesh axes (vocab remainders, batch=1 long-context
+    cells, odd expert counts). Keeps the rest of the spec intact — the
+    shape-aware fallback every production sharding layer needs."""
+    if mesh is None or spec is None:
+        return spec
+    sizes = dict(mesh.shape)
+    out = []
+    for i, entry in enumerate(tuple(spec)):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= sizes.get(a, 1)
+        out.append(entry if shape[i] % prod == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _apply_strategy(base: tuple, strategy: str, ndim: int) -> tuple:
+    """Transform a megatron-rule spec for the other strategies."""
+    if strategy == "megatron" or not base:
+        return base
+    if strategy == "fsdp":
+        # ZeRO-3: shard the LAST sharded-able dim over the whole chip grid,
+        # nothing else. GSPMD inserts per-layer weight all-gathers instead
+        # of per-block activation all-reduces.
+        out = [None] * len(base)
+        out[-1] = ("data", "model")
+        return tuple(out)
+    if strategy == "serve":
+        # weight-stationary: keep TP ("model"), drop FSDP ("data")
+        return tuple(e if e == "model" else None for e in base)
+    if strategy == "ring":
+        # weights over "data" only; "model" is reserved for the time axis
+        out = []
+        for e in base:
+            if e == "model":
+                out.append("data")
+            elif e == "data":
+                out.append(None)
+            else:
+                out.append(e)
+        return tuple(out)
+    return base
+
+
+def spec_for_param(path_str: str, ndim: int,
+                   strategy: Optional[str] = None) -> P:
+    """Look up the sharding spec; prepend Nones for leading stack axes."""
+    strategy = strategy or current_strategy()
+    if strategy == "moe_rep" and "moe/" in path_str:
+        # tiny-expert MoE (granite d_ff=512): EP/TP moves more bytes than
+        # the experts compute — REPLICATE expert weights, tokens stay put,
+        # dispatch is chip-local (§Perf D5)
+        return P()
+    if strategy == "moe_rep":
+        strategy = "fsdp"
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_str):
+            base = _apply_strategy(tuple(spec), strategy, ndim)
+            # A rule written for rank-k applies to rank-(k+s) stacked tensors.
+            extra = ndim - len(base)
+            if extra < 0:
+                # e.g. rule P("data","model") on a 1-D bias: replicate.
+                return P()
+            return P(*([None] * extra + list(base)))
+    return P()
+
+
+def param_specs(params, mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching ``params``. Leading scan axes detected
+    by rank mismatch with the rule's spec length. With ``mesh``, specs are
+    shape-fitted (divisibility fallback)."""
+    def leaf_spec(path, leaf):
+        spec = spec_for_param(_path_str(path), getattr(leaf, "ndim", 0))
+        return fit_spec(spec, getattr(leaf, "shape", ()), mesh)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    specs = param_specs(params, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def cache_specs(cache, mesh: Optional[Mesh] = None) -> Any:
+    """Decode caches: KV rings are sharded (batch over "data", SEQUENCE over
+    "model"). Sequence sharding makes decode attention TP-over-context
+    (scores/outputs reduce with tiny (B,H)-sized collectives), keeps every
+    full-size cache under HBM (internvl decode_32k: 412 GB total -> 1.6
+    GB/chip), and — critically — keeps the per-step layout FIXED so GSPMD
+    never reshards the whole cache (the C-hillclimb finding: mixed layouts
+    cost a full-cache fp32 all-gather per step). SSM states: channels over
+    "model". Batch=1 cells fall back via fit_spec.
+    """
+    sizes = dict(mesh.shape) if mesh is not None else {}
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        nd = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", ())
+        if ps.endswith("pos"):
+            return P()
+        if re.search(r"(^|/)(k|v|ck|cv)$", ps) and nd >= 4:
+            spec = [None] * (nd - 4) + ["data", "model", None, None]
+            if (sizes and shape[nd - 4] % sizes.get("data", 1) != 0
+                    and shape[nd - 3] % sizes.get("data", 1) == 0):
+                # batch unshardable (long_500k): sequence over BOTH axes
+                spec = [None] * (nd - 4) + [None, ("data", "model"),
+                                            None, None]
+            return fit_spec(P(*spec), shape, mesh)
+        if re.search(r"ssm$", ps) and nd >= 3:
+            return fit_spec(P(*([None] * (nd - 3) + ["data", "model", None])),
+                            shape, mesh)
+        if re.search(r"conv$", ps) and nd >= 3:
+            return fit_spec(P(*([None] * (nd - 3) + ["data", None, "model"])),
+                            shape, mesh)
+        return P()
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def batch_specs(batch, mesh: Mesh, seq_sharded: bool = False) -> Any:
+    """Input batch: leading batch dim over DP axes (strategy-aware: fsdp
+    spreads over the full chip grid; ring also shards the time dim over
+    "model"), with divisibility fallback."""
+    ba = batch_axes(mesh)
+    strategy = current_strategy()
+
+    def leaf_spec(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", ())
+        if nd == 0:
+            return P()
+        if seq_sharded and nd >= 2:
+            return fit_spec(P(None, "data"), shape, mesh)
+        spec = _act_spec(mesh, strategy, shape)
+        # tokens are (B, T); act spec may carry a time entry — keep at most
+        # the first two entries, pad with None
+        entries = list(tuple(spec))[:nd] + [None] * max(0, nd - len(tuple(spec)))
+        return fit_spec(P(*entries), shape, mesh)
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  diag_scan/   — chunked diagonal linear-recurrence scan (the paper's core
+                 primitive; shared by DEER, Mamba-1/2 mixers)
+  lrc_deer/    — fused LRC-gate + linearise + scan Newton iteration
+                 (one HBM round-trip per DEER iteration instead of five)
+  flash_attn/  — online-softmax attention (prefill hot-spot)
+
+Each kernel directory has kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper with interpret fallback), and ref.py
+(pure-jnp oracle used by the allclose test sweeps).
+
+TPU is the TARGET; on this CPU container every kernel is validated with
+interpret=True (the kernel body executes with the Python/jnp semantics the
+TPU compiler would see).
+"""

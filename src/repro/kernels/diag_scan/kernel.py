@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: chunked diagonal linear-recurrence scan.
+
+Solves x_t = lam_t * x_{t-1} + b_t over (T, D) with the time axis split into
+VMEM-resident chunks and the channel axis tiled to the lane width.
+
+Schedule (the TPU adaptation of the paper's O(log T) scan):
+  grid = (D_tiles, T_chunks)   — T innermost => sequential on TPU, so the
+                                  inter-chunk carry lives in VMEM scratch.
+  per chunk: Hillis-Steele doubling over the chunk (log2(C) unrolled steps,
+             pure VPU elementwise work on (C, Dt) tiles), then one affine
+             application of the incoming carry.
+
+Why chunked instead of a monolithic associative scan: a full-T scan
+materialises O(T * D) intermediates in HBM per doubling level; the chunked
+form reads lam/b once, writes x once, and keeps all O(log C) temporaries in
+VMEM. Arithmetic intensity rises from ~0.17 to ~(C bounded) — the kernel is
+HBM-streaming bound, which IS the roofline for this memory-bound primitive.
+
+VMEM budget (defaults C=256, Dt=512, f32): 3 live (C, Dt) buffers
+~1.6 MB << 128 MB VMEM, leaving room for double buffering (the compiler
+pipelines the HBM->VMEM copies across the sequential grid automatically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_chunk_kernel(lam_ref, b_ref, x0_ref, out_ref, carry_ref, *,
+                       chunk: int):
+    """One (T-chunk, D-tile) cell. carry_ref: VMEM scratch (1, Dt) f32."""
+    t = pl.program_id(1)
+
+    lam = lam_ref[...].astype(jnp.float32)        # (C, Dt)
+    b = b_ref[...].astype(jnp.float32)
+
+    # reset carry at the first chunk of every D-tile pass
+    @pl.when(t == 0)
+    def _():
+        carry_ref[...] = x0_ref[...].astype(jnp.float32)
+
+    # Hillis-Steele doubling: after step k, (A, B)[i] composes elements
+    # (i-2k, i]. log2(chunk) unrolled elementwise steps on VMEM tiles.
+    A, B = lam, b
+    k = 1
+    while k < chunk:
+        ones = jnp.ones((k, A.shape[1]), jnp.float32)
+        zeros = jnp.zeros((k, B.shape[1]), jnp.float32)
+        A_prev = jnp.concatenate([ones, A[:-k]], axis=0)
+        B_prev = jnp.concatenate([zeros, B[:-k]], axis=0)
+        B = A * B_prev + B
+        A = A * A_prev
+        k *= 2
+
+    carry = carry_ref[...]                        # (1, Dt)
+    states = A * carry + B                        # broadcast over chunk rows
+    out_ref[...] = states.astype(out_ref.dtype)
+    carry_ref[...] = states[-1:]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_tile", "interpret"))
+def diag_scan_pallas(lam: jax.Array, b: jax.Array, x0: jax.Array, *,
+                     chunk: int = 256, d_tile: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """x_t = lam_t x_{t-1} + b_t. lam, b: (T, D); x0: (D,). T % chunk == 0,
+    D % d_tile == 0 (wrapper pads otherwise)."""
+    T, D = lam.shape
+    assert T % chunk == 0 and D % d_tile == 0, (T, D, chunk, d_tile)
+    grid = (D // d_tile, T // chunk)
+
+    return pl.pallas_call(
+        functools.partial(_scan_chunk_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+            pl.BlockSpec((1, d_tile), lambda d, t: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+        out_shape=jax.ShapeDtypeStruct((T, D), lam.dtype),
+        scratch_shapes=[pltpu.VMEM((1, d_tile), jnp.float32)],
+        interpret=interpret,
+    )(lam, b, x0.reshape(1, D))

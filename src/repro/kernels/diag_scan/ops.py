@@ -1,0 +1,50 @@
+"""Public jit'd wrapper for the diag_scan Pallas kernel: shape padding,
+batching (vmap), dtype handling, interpret fallback on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.diag_scan.kernel import diag_scan_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_tile", "interpret"))
+def diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array | None = None, *,
+              chunk: int = 256, d_tile: int = 512,
+              interpret: bool = True) -> jax.Array:
+    """Drop-in replacement for core.scan.diag_linear_scan on (T, D) or
+    (B, T, D) inputs (real dtypes). Pads T to the chunk and D to the lane
+    tile; identity padding (lam=1? no — lam=0, b=0) keeps results exact:
+    padded channels produce zeros, padded time steps are sliced off."""
+    if lam.ndim == 3:
+        f = lambda l2, b2, x2: diag_scan(l2, b2, x2, chunk=chunk,
+                                         d_tile=d_tile, interpret=interpret)
+        if x0 is None:
+            x0 = jnp.zeros((lam.shape[0], lam.shape[-1]), lam.dtype)
+        return jax.vmap(f)(lam, b, x0)
+
+    T, D = lam.shape
+    if x0 is None:
+        x0 = jnp.zeros((D,), lam.dtype)
+    c = chunk if T >= chunk else max(8, 1 << max(T - 1, 1).bit_length())
+    dt = d_tile if D >= d_tile else 128
+    lam_p, _ = _pad_to(lam, 0, c)
+    b_p, _ = _pad_to(b, 0, c)
+    lam_p, _ = _pad_to(lam_p, 1, dt)
+    b_p, _ = _pad_to(b_p, 1, dt)
+    x0_p, _ = _pad_to(x0, 0, dt)
+    out = diag_scan_pallas(lam_p, b_p, x0_p, chunk=c, d_tile=dt,
+                           interpret=interpret)
+    return out[:T, :D]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the diag_scan kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def diag_scan_ref(lam: jax.Array, b: jax.Array, x0: jax.Array) -> jax.Array:
+    """Sequential reference: x_t = lam_t x_{t-1} + b_t, x_0 given."""
+    def step(x, lb):
+        l, bb = lb
+        x = l * x + bb
+        return x, x
+    _, xs = jax.lax.scan(step, x0.astype(jnp.float32),
+                         (lam.astype(jnp.float32), b.astype(jnp.float32)))
+    return xs.astype(lam.dtype)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: flash (online-softmax) causal attention.
+
+The prefill hot-spot for the dense/vlm/moe archs. Blocking:
+
+    grid = (batch*heads, q_blocks, kv_blocks)   kv innermost (sequential)
+    q tile    (Bq, hd)   stays resident across the kv sweep
+    k/v tiles (Bkv, hd)  streamed
+    scratch: m (Bq,1), l (Bq,1), acc (Bq, hd) — fp32 running softmax state
+
+MXU alignment: Bq = Bkv = 128 and hd padded to a multiple of 128 keep both
+matmuls (q@k^T and p@v) on hardware-native tiles. The causal mask is
+evaluated from block indices; fully-masked kv blocks are skipped via
+pl.when (the standard ~2x causal win).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_kv: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # skip blocks entirely above the diagonal
+        run = (ki * block_kv) <= (qi * block_q + block_q - 1)
+
+    @pl.when(run if causal else True)
+    def _():
+        q = q_ref[0].astype(jnp.float32) * scale          # (Bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (Bkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                       # (Bq, Bkv)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv",
+                                             "causal", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           block_q: int = 128, block_kv: int = 128,
+                           causal: bool = True,
+                           interpret: bool = True) -> jax.Array:
+    """q, k, v: (BH, T, hd) same-length self attention (GQA head repetition
+    handled by the ops wrapper). Returns (BH, T, hd)."""
+    BH, T, hd = q.shape
+    assert T % block_q == 0 and T % block_kv == 0, (T, block_q, block_kv)
+    scale = hd ** -0.5
+    grid = (BH, T // block_q, T // block_kv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_kv=block_kv,
+                          scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""Public wrapper: GQA layout adaptation + padding + interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True) -> jax.Array:
+    """GQA attention via the Pallas kernel. q: (B, T, H, hd);
+    k, v: (B, T, K, hd) with H % K == 0. Returns (B, T, H, hd)."""
+    B, T, H, hd = q.shape
+    K = k.shape[2]
+    groups = H // K
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+
+    bq = block_q if T >= block_q else max(8, 1 << max(T - 1, 1).bit_length())
+    bkv = block_kv if T >= block_kv else bq
+    pad_t = (-T) % max(bq, bkv)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    if pad_t:
+        # pad kv with zeros — masked out by causality for q rows < T
+        widths = ((0, 0), (0, pad_t), (0, 0))
+        qf, kf, vf = (jnp.pad(x, widths) for x in (qf, kf, vf))
+    out = flash_attention_pallas(qf, kf, vf, block_q=bq, block_kv=bkv,
+                                 causal=causal, interpret=interpret)
+    out = out[:, :T].reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    return out

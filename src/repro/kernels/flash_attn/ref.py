@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash attention."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q, k, v: (BH, T, hd). Naive softmax attention in fp32."""
+    T = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((T, T), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused LRC-gate + exact-linearise + scan — one full
+DEER Newton iteration for the LrcSSM cell in a single HBM round trip.
+
+Per Newton iteration the unfused path materialises in HBM: the gate
+pre-activations, the step values f_s, the diagonal Jacobian J_s, the
+linearisation offset b_s, and the scan intermediates — 5+ (T, D) tensors
+read/written. This kernel computes everything on VMEM tiles:
+
+    read   x_shift (guess, pre-shifted), s_u, eps_u          (3 reads)
+    VMEM   gates sigma/tanh, ANALYTIC diagonal Jacobian J,
+           b = f - J*x_shift, Hillis-Steele chunk scan + carry
+    write  new states                                         (1 write)
+
+=> HBM traffic per iteration drops from ~10 (T,D)-streams to 4, directly
+scaling the memory-roofline term of the DEER solve by ~2.5x (§Perf log).
+
+The Jacobian is the exact closed-form elementwise derivative of the LRC
+Euler step (diagonal BY MODEL DESIGN — the paper's central property):
+
+    x' = lam*x + beta,  lam = 1 - dt*sig_f*sig_e,  beta = dt*tau_z*sig_e*el
+    J  = lam + x*dlam/dx + dbeta/dx        (all elementwise)
+
+Per-channel parameters (10 x (D,)) ride along as a (10, Dt) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# row indices of the packed parameter block
+P_AX, P_BX, P_GMX, P_KMX, P_GMU, P_KMU, P_WX, P_VX, P_GL, P_EL = range(10)
+
+
+def _sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, out_ref,
+                     carry_ref, *, chunk: int, dt: float):
+    t = pl.program_id(1)
+
+    xs = xs_ref[...].astype(jnp.float32)     # (C, Dt) shifted guess
+    su = su_ref[...].astype(jnp.float32)
+    eu = eu_ref[...].astype(jnp.float32)
+    pp = pp_ref[...].astype(jnp.float32)     # (10, Dt)
+
+    a_x, b_x = pp[P_AX], pp[P_BX]
+    gmx, kmx = pp[P_GMX], pp[P_KMX]
+    gmu, kmu = pp[P_GMU], pp[P_KMU]
+    w_x, v_x = pp[P_WX], pp[P_VX]
+    g_l, e_l = pp[P_GL], pp[P_EL]
+
+    # ---- gates at the guess -------------------------------------------------
+    s_x = _sigmoid(a_x * xs + b_x)
+    f = gmx * s_x + gmu * su + g_l
+    z = kmx * s_x + kmu * su + g_l
+    eps = w_x * xs + v_x + eu
+    sig_f = _sigmoid(f)
+    sig_e = _sigmoid(eps)
+    tau_z = jnp.tanh(z)
+    lam = 1.0 - dt * sig_f * sig_e
+    beta = dt * tau_z * sig_e * e_l
+    f_s = lam * xs + beta                    # step value F(x_guess)
+
+    # ---- exact diagonal Jacobian (closed form) ------------------------------
+    ds_x = s_x * (1.0 - s_x) * a_x
+    dsig_f = sig_f * (1.0 - sig_f) * (gmx * ds_x)
+    dsig_e = sig_e * (1.0 - sig_e) * w_x
+    dtau_z = (1.0 - tau_z * tau_z) * (kmx * ds_x)
+    dlam = -dt * (dsig_f * sig_e + sig_f * dsig_e)
+    dbeta = dt * e_l * (dtau_z * sig_e + tau_z * dsig_e)
+    J = lam + xs * dlam + dbeta
+    b_lin = f_s - J * xs
+
+    # ---- carry init ----------------------------------------------------------
+    @pl.when(t == 0)
+    def _():
+        carry_ref[...] = x0_ref[...].astype(jnp.float32)
+
+    # ---- Hillis-Steele chunk scan -------------------------------------------
+    A, B = J, b_lin
+    k = 1
+    while k < chunk:
+        ones = jnp.ones((k, A.shape[1]), jnp.float32)
+        zeros = jnp.zeros((k, B.shape[1]), jnp.float32)
+        A_prev = jnp.concatenate([ones, A[:-k]], axis=0)
+        B_prev = jnp.concatenate([zeros, B[:-k]], axis=0)
+        B = A * B_prev + B
+        A = A * A_prev
+        k *= 2
+
+    carry = carry_ref[...]
+    states = A * carry + B
+    out_ref[...] = states.astype(out_ref.dtype)
+    carry_ref[...] = states[-1:]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "d_tile", "dt", "interpret"))
+def lrc_deer_iteration_pallas(x_shift: jax.Array, s_u: jax.Array,
+                              eps_u: jax.Array, packed_params: jax.Array,
+                              x0: jax.Array, *, chunk: int = 256,
+                              d_tile: int = 512, dt: float = 1.0,
+                              interpret: bool = True) -> jax.Array:
+    """One fused Newton iteration. x_shift/s_u/eps_u: (T, D);
+    packed_params: (10, D) rows [a_x,b_x,g_max_x,k_max_x,g_max_u,k_max_u,
+    w_x,v_x,g_leak,e_leak]; x0: (D,). Returns new states (T, D)."""
+    T, D = x_shift.shape
+    assert T % chunk == 0 and D % d_tile == 0
+    grid = (D // d_tile, T // chunk)
+    return pl.pallas_call(
+        functools.partial(_lrc_deer_kernel, chunk=chunk, dt=dt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+            pl.BlockSpec((10, d_tile), lambda d, t: (0, d)),
+            pl.BlockSpec((1, d_tile), lambda d, t: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+        out_shape=jax.ShapeDtypeStruct((T, D), x_shift.dtype),
+        scratch_shapes=[pltpu.VMEM((1, d_tile), jnp.float32)],
+        interpret=interpret,
+    )(x_shift, s_u, eps_u, packed_params, x0.reshape(1, D))

@@ -1,0 +1,59 @@
+"""Public wrapper: full DEER solve driven by the fused Pallas iteration.
+
+``pack_lrc_params`` adapts a core.lrc parameter dict to the kernel's packed
+(10, D) layout, so the kernel is a drop-in backend for LrcCellConfig models
+(same math as core.deer with grad="unroll", mode="fixed").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lrc_deer.kernel import lrc_deer_iteration_pallas
+
+PACK_ORDER = ("a_x", "b_x", "g_max_x", "k_max_x", "g_max_u", "k_max_u",
+              "w_x", "v_x", "g_leak", "e_leak")
+
+
+def pack_lrc_params(p: Dict[str, jax.Array]) -> jax.Array:
+    return jnp.stack([p[k].astype(jnp.float32) for k in PACK_ORDER], axis=0)
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "chunk", "d_tile",
+                                             "dt", "interpret"))
+def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
+                   packed_params: jax.Array, x0: jax.Array, *,
+                   n_iters: int = 10, chunk: int = 256, d_tile: int = 512,
+                   dt: float = 1.0, interpret: bool = True) -> jax.Array:
+    """DEER fixed-point solve of the LrcSSM recurrence using the fused
+    Pallas iteration. s_u, eps_u: (T, D); returns states (T, D)."""
+    T, D = s_u.shape
+    c = chunk if T >= chunk else max(8, 1 << max(T - 1, 1).bit_length())
+    dtile = d_tile if D >= d_tile else 128
+    su = _pad_axis(_pad_axis(s_u, 0, c), 1, dtile)
+    eu = _pad_axis(_pad_axis(eps_u, 0, c), 1, dtile)
+    pp = _pad_axis(packed_params, 1, dtile)
+    x0p = _pad_axis(x0, 0, dtile)
+    Tp, Dp = su.shape
+
+    def body(_, states):
+        x_shift = jnp.concatenate([x0p[None], states[:-1]], axis=0)
+        return lrc_deer_iteration_pallas(
+            x_shift, su, eu, pp, x0p, chunk=c, d_tile=dtile, dt=dt,
+            interpret=interpret)
+
+    states = jax.lax.fori_loop(
+        0, n_iters, body, jnp.zeros((Tp, Dp), s_u.dtype), unroll=False)
+    return states[:T, :D]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the fused LRC-DEER iteration kernel."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lrc_deer.kernel import (P_AX, P_BX, P_EL, P_GL, P_GMU,
+                                           P_GMX, P_KMU, P_KMX, P_VX, P_WX)
+
+
+def _step(pp, xs, su, eu, dt):
+    s_x = jax.nn.sigmoid(pp[P_AX] * xs + pp[P_BX])
+    f = pp[P_GMX] * s_x + pp[P_GMU] * su + pp[P_GL]
+    z = pp[P_KMX] * s_x + pp[P_KMU] * su + pp[P_GL]
+    eps = pp[P_WX] * xs + pp[P_VX] + eu
+    sig_f, sig_e, tau_z = (jax.nn.sigmoid(f), jax.nn.sigmoid(eps),
+                           jnp.tanh(z))
+    lam = 1.0 - dt * sig_f * sig_e
+    beta = dt * tau_z * sig_e * pp[P_EL]
+    return lam * xs + beta
+
+
+def lrc_deer_iteration_ref(x_shift, s_u, eps_u, packed_params, x0,
+                           dt: float = 1.0):
+    """One Newton iteration, unfused: jvp Jacobian + sequential scan."""
+    pp = packed_params.astype(jnp.float32)
+    xs = x_shift.astype(jnp.float32)
+    su = s_u.astype(jnp.float32)
+    eu = eps_u.astype(jnp.float32)
+
+    fn = lambda x: _step(pp, x, su, eu, dt)
+    f_s, J = jax.jvp(fn, (xs,), (jnp.ones_like(xs),))
+    b_lin = f_s - J * xs
+
+    def scan_step(x, jb):
+        j, b = jb
+        x = j * x + b
+        return x, x
+    _, states = jax.lax.scan(scan_step, x0.astype(jnp.float32), (J, b_lin))
+    return states.astype(x_shift.dtype)
+
+
+def lrc_deer_solve_ref(s_u, eps_u, packed_params, x0, n_iters: int = 10,
+                       dt: float = 1.0):
+    """Full DEER solve with the unfused reference iteration."""
+    T = s_u.shape[0]
+    states = jnp.zeros((T,) + x0.shape, s_u.dtype)
+    for _ in range(n_iters):
+        x_shift = jnp.concatenate([x0[None], states[:-1]], axis=0)
+        states = lrc_deer_iteration_ref(x_shift, s_u, eps_u, packed_params,
+                                        x0, dt)
+    return states

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent for every
+(architecture x input shape x mesh) cell without hardware.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*abstract_inputs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective byte parse
+
+``train``/``prefill`` shapes lower train_step; ``decode`` shapes lower
+serve_step (one token against seq_len caches). Everything is abstract
+(jax.eval_shape + ShapeDtypeStruct) — no arrays are ever allocated at full
+size on this CPU host.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b \
+        --shape train_4k [--multi-pod] [--out results.jsonl]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full 40-cell sweep
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES, TrainConfig
+from repro.configs import get_config, list_archs
+from repro.distributed import sharding as shd
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models import build_model
+from repro.optim.adamw import AdamWState
+from repro.roofline import analyze_compiled   # collective parse + 3 terms
+from repro.train.step import make_serve_step, make_train_step
+
+
+def _abstract_params(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _abstract_opt(params_shapes):
+    f32 = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree_util.tree_map(f32, params_shapes),
+        v=jax.tree_util.tree_map(f32, params_shapes),
+        master=jax.tree_util.tree_map(f32, params_shapes),
+    )
+
+
+def apply_overrides(arch, ov: Dict[str, Any]):
+    """dataclasses.replace with nested SSMConfig support: keys prefixed
+    ``ssm_`` update the mixer config (e.g. {"ssm_kind": "lrc"})."""
+    from repro.config import SSMConfig
+    ov = dict(ov)
+    ssm_ov = {k[4:]: ov.pop(k) for k in list(ov) if k.startswith("ssm_")}
+    moe_ov = {k[4:]: ov.pop(k) for k in list(ov) if k.startswith("moe_")}
+    if ssm_ov:
+        base = arch.ssm or SSMConfig()
+        arch = dataclasses.replace(arch, ssm=dataclasses.replace(base,
+                                                                 **ssm_ov))
+    if moe_ov and arch.moe is not None:
+        arch = dataclasses.replace(
+            arch, moe=dataclasses.replace(arch.moe, **moe_ov))
+    return dataclasses.replace(arch, **ov) if ov else arch
+
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
+               arch_overrides: Optional[Dict[str, Any]] = None,
+               tcfg: Optional[TrainConfig] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline record."""
+    arch = get_config(arch_name)
+    if arch_overrides:
+        arch_overrides = dict(arch_overrides)
+        # reserved keys routed to TrainConfig
+        tkeys = {k: arch_overrides.pop(k) for k in list(arch_overrides)
+                 if k.startswith("train_")}
+        if tkeys and tcfg is None:
+            tcfg = TrainConfig(**{k[6:]: v for k, v in tkeys.items()})
+        arch = apply_overrides(arch, arch_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = specs_lib.cell_is_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch.name, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    # MoE production dispatch per config (einsum | gather).
+    model = build_model(arch,
+                        moe_path=arch.moe.dispatch if arch.moe else "dense")
+    tcfg = tcfg or TrainConfig(microbatch=0)
+    t0 = time.time()
+
+    with shd.use_mesh(mesh), shd.use_strategy(arch.sharding_strategy):
+        params_s = _abstract_params(model)
+        pspecs = shd.param_specs(params_s, mesh)
+        pshard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspecs)
+
+        if shape.kind in ("train", "prefill"):
+            batch_s = specs_lib.train_input_specs(arch, shape)
+            opt_s = _abstract_opt(params_s)
+            opt_shard = AdamWState(NamedSharding(mesh, P()),
+                                   pshard, pshard, pshard)
+            bshard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                shd.batch_specs(batch_s, mesh))
+            mshard = NamedSharding(mesh, P())
+            step = make_train_step(model, tcfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, opt_shard, bshard),
+                out_shardings=(pshard, opt_shard,
+                               {"loss": mshard, "grad_norm": mshard,
+                                "lr": mshard}),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_s, opt_s, batch_s)
+        else:  # decode
+            cache_s = jax.eval_shape(
+                lambda p: model.init_cache(p, shape.global_batch,
+                                           shape.seq_len), params_s)
+            cshard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), shd.cache_specs(cache_s, mesh))
+            tok_s = specs_lib.decode_token_specs(arch, shape)
+            B = shape.global_batch
+            tok_shard = NamedSharding(mesh, shd.fit_spec(
+                P(shd.batch_axes(mesh)), (B, 1), mesh))
+            from repro.models.lm import padded_vocab
+            logit_shard = NamedSharding(mesh, shd.fit_spec(
+                P(shd.batch_axes(mesh), None, "model"),
+                (B, 1, padded_vocab(arch)), mesh))
+            step = make_serve_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, tok_shard, cshard),
+                out_shardings=(tok_shard, logit_shard, cshard),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_s, tok_s, cache_s)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    record = analyze_compiled(arch, shape, mesh, lowered, compiled)
+    record.update({
+        "status": "ok", "multi_pod": multi_pod, "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    })
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="full sweep: every (arch x shape), single-pod")
+    ap.add_argument("--out", type=str, default=None,
+                    help="append JSONL records here")
+    ap.add_argument("--override", type=str, default=None,
+                    help="JSON dict of ArchConfig overrides (perf iterations)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s, False))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch.replace("-", "_"), args.shape,
+                      args.multi_pod))
+
+    overrides = json.loads(args.override) if args.override else None
+    failures = 0
+    for arch_name, shape_name, mp in cells:
+        try:
+            rec = lower_cell(arch_name, shape_name, multi_pod=mp,
+                             arch_overrides=overrides)
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": arch_name, "shape": shape_name, "status": "error",
+                   "multi_pod": mp, "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        print(json.dumps(rec))
+        sys.stdout.flush()
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+BEFORE any jax import; smoke tests and benchmarks see the real single CPU
+device.
+
+Topology mapping (TPU v5e):
+  single-pod : (16, 16) ("data", "model") — 256 chips, 2D ICI torus; "model"
+               placed innermost so TP collectives ride the fastest ICI loop.
+  multi-pod  : (2, 16, 16) ("pod", "data", "model") — 512 chips; the "pod"
+               axis crosses DCN and carries only DP gradient all-reduce
+               (optionally int8-compressed).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,118 @@
+"""Render EXPERIMENTS.md tables from the results/*.jsonl sweep records.
+
+    PYTHONPATH=src python -m repro.launch.report [--results results/]
+"""
+import argparse
+import json
+import os
+from collections import defaultdict
+from typing import Dict, List
+
+
+def load(path: str, dedupe: bool = True) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    out, recs = [], {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            out.append(r)
+            recs[(r.get("arch", "?").replace("_", "-"), r.get("shape"))] = r
+    return list(recs.values()) if dedupe else out
+
+
+def fmt_bytes(x) -> str:
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024 or unit == "TB":
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}TB"
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(recs: List[Dict], fixed: List[Dict]) -> str:
+    merged = {(r["arch"].replace("_", "-"), r["shape"]): r for r in recs}
+    for r in fixed:
+        merged[(r["arch"].replace("_", "-"), r["shape"])] = r
+    lines = ["| arch | shape | status | peak bytes/dev | compile | collectives/chip |",
+             "|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(merged.items()):
+        if r["status"] == "ok":
+            lines.append(
+                f"| {a} | {s} | ok | {fmt_bytes(r.get('peak_bytes'))} | "
+                f"{r.get('compile_s', 0):.0f}s | "
+                f"{fmt_bytes(r.get('collective_bytes_per_chip'))} |")
+        elif r["status"] == "skipped":
+            lines.append(f"| {a} | {s} | SKIP (full-attention @512k) | - | - | - |")
+        else:
+            lines.append(f"| {a} | {s} | **{r['status']}** | - | - | - |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "useful/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(lines)
+
+
+def hillclimb_table(recs: List[Dict]) -> str:
+    lines = ["| cell | variant | compute | memory | collective | dominant | "
+             "roofline frac | bound |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r.get('arch')}/{r.get('shape')} | "
+                         f"{r.get('variant','?')} | - | - | - | ERROR | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r.get('variant', 'baseline')} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | {r['dominant']} | "
+            f"{r.get('roofline_fraction', 0):.4f} | "
+            f"{fmt_s(r.get('roofline_bound_s'))} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    args = ap.parse_args()
+    R = args.results
+
+    print("## §Dry-run — single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table(load(f"{R}/dryrun_single_pod.jsonl"),
+                       load(f"{R}/dryrun_single_pod_fixed.jsonl")))
+    print("\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(load(f"{R}/dryrun_multi_pod.jsonl"), []))
+    print("\n## §Roofline — baseline (megatron strategy, per-chip, v5e "
+          "constants)\n")
+    print(roofline_table(load(f"{R}/roofline.jsonl")))
+    print("\n## §Perf — hillclimb iterations\n")
+    print(hillclimb_table(load(f"{R}/hillclimb.jsonl", dedupe=False)))
+
+
+if __name__ == "__main__":
+    main()

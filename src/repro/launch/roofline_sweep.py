@@ -1,0 +1,198 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline sweep driver: exact per-step FLOPs and collective bytes for the
+FULL-depth models via depth extrapolation.
+
+Method: cost_analysis() counts while-loop bodies once, so the production
+scan-over-layers lowering undercounts depth-linear work. Instead we lower
+the model in exact-HLO mode (no interior loops: unrolled layers, one-block
+attention, unchunked loss/scans) at TWO reduced depths g1 < g2 layer-groups
+and extrapolate linearly to the full depth:
+
+    per_layer = (X(g2) - X(g1)) / (g2 - g1) / group_size
+    X(full)   = X(g2) + per_layer * (L_full - L(g2))
+
+Exactness: the layer stack is homogeneous at group granularity (the whole
+point of the group plan), embeddings/loss/optimizer are depth-independent
+(land in the intercept), and SPMD partitioning is per-layer identical —
+so linearity in depth holds exactly for FLOPs and collective bytes.
+
+The production-config lowering (scan/chunked) is ALSO compiled per cell —
+that is the runnability proof + memory_analysis (HBM fit) source. Records
+merge both.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.config import HW, SHAPES
+from repro.configs import get_config, list_archs
+from repro.launch import specs as specs_lib
+from repro.launch.dryrun import lower_cell
+from repro.models.lm import layer_plan
+
+
+def reduced_depth_overrides(arch, n_groups: int) -> Dict[str, Any]:
+    """ArchConfig overrides that keep group structure + tail but reduce the
+    number of scan groups to ``n_groups``."""
+    plan = layer_plan(arch) if arch.family != "audio" else None
+    ov: Dict[str, Any] = {"exact_hlo": True, "scan_layers": False}
+    if arch.family == "audio":
+        ov["n_layers"] = n_groups
+        ov["enc_layers"] = n_groups
+        return ov
+    gsize = len(plan.group)
+    ov["n_layers"] = n_groups * gsize + len(plan.tail)
+    return ov
+
+
+def extrapolate(rec1: Dict, rec2: Dict, g1: int, g2: int, g_full: int,
+                keys=("hlo_flops_per_chip", "collective_bytes_per_chip")
+                ) -> Dict[str, float]:
+    out = {}
+    for k in keys:
+        x1, x2 = rec1[k], rec2[k]
+        per_group = (x2 - x1) / (g2 - g1)
+        out[k] = x2 + per_group * (g_full - g2)
+        out[k + "_per_group"] = per_group
+    # collective breakdown extrapolated per kind
+    bd = {}
+    kinds = set(rec1["collective_breakdown"]) | set(rec2["collective_breakdown"])
+    for kind in kinds:
+        x1 = rec1["collective_breakdown"].get(kind, 0)
+        x2 = rec2["collective_breakdown"].get(kind, 0)
+        bd[kind] = max(0.0, x2 + (x2 - x1) / (g2 - g1) * (g_full - g2))
+    out["collective_breakdown"] = bd
+    return out
+
+
+def roofline_cell(arch_name: str, shape_name: str,
+                  extra_overrides: Optional[Dict[str, Any]] = None,
+                  g_pair: Tuple[int, int] = (1, 2),
+                  production: bool = True) -> Dict[str, Any]:
+    from repro.launch.dryrun import apply_overrides
+    arch = get_config(arch_name)
+    if extra_overrides:
+        # train_* keys are routed to TrainConfig by lower_cell; only the
+        # arch-level keys participate in the local ArchConfig replace
+        arch_only = {k: v for k, v in extra_overrides.items()
+                     if not k.startswith("train_")}
+        arch = apply_overrides(arch, arch_only)
+    shape = SHAPES[shape_name]
+    ok, why = specs_lib.cell_is_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch.name, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    plan = layer_plan(arch) if arch.family != "audio" else None
+    g_full = (arch.n_layers if arch.family == "audio"
+              else plan.n_groups)
+    g1, g2 = g_pair
+    base_ov = dict(extra_overrides or {})
+
+    ov1 = {**base_ov, **reduced_depth_overrides(arch, g1)}
+    ov2 = {**base_ov, **reduced_depth_overrides(arch, g2)}
+    rec1 = lower_cell(arch_name, shape_name, arch_overrides=ov1)
+    rec2 = lower_cell(arch_name, shape_name, arch_overrides=ov2)
+    if rec1.get("status") != "ok" or rec2.get("status") != "ok":
+        return {"arch": arch.name, "shape": shape_name, "status": "error",
+                "error": f"reduced-depth lowering failed: {rec1} / {rec2}"}
+
+    ext = extrapolate(rec1, rec2, g1, g2, g_full)
+    flops = ext["hlo_flops_per_chip"]
+    coll = ext["collective_bytes_per_chip"]
+    chips = rec2["chips"]
+
+    # full-arch analytic terms (the reduced-depth records carry reduced-L
+    # params; never use theirs)
+    from repro.roofline import analytic_hbm_bytes_per_chip, model_flops
+    amem = analytic_hbm_bytes_per_chip(arch, shape, chips)
+    mf = model_flops(arch, shape)
+
+    rec: Dict[str, Any] = {
+        "arch": arch.name, "shape": shape_name, "status": "ok",
+        "chips": chips, "mesh": rec2["mesh"],
+        "hlo_flops_per_chip": flops,
+        "collective_bytes_per_chip": coll,
+        "collective_breakdown": ext["collective_breakdown"],
+        "model_flops": mf,
+        "analytic_hbm_bytes_per_chip": amem["total"],
+        "analytic_hbm_breakdown": amem,
+        "extrapolation": {"g1": g1, "g2": g2, "g_full": g_full,
+                          "flops_g1": rec1["hlo_flops_per_chip"],
+                          "flops_g2": rec2["hlo_flops_per_chip"],
+                          "coll_g1": rec1["collective_bytes_per_chip"],
+                          "coll_g2": rec2["collective_bytes_per_chip"]},
+    }
+    rec["compute_s"] = flops / HW.peak_flops_bf16
+    rec["memory_s"] = rec["analytic_hbm_bytes_per_chip"] / HW.hbm_bw
+    rec["collective_s"] = coll / HW.ici_bw
+    dom = max((("compute", rec["compute_s"]), ("memory", rec["memory_s"]),
+               ("collective", rec["collective_s"])), key=lambda kv: kv[1])
+    rec["dominant"] = dom[0]
+    rec["roofline_bound_s"] = dom[1]
+    rec["useful_flops_ratio"] = rec["model_flops"] / max(flops * chips, 1.0)
+    rec["roofline_fraction"] = (
+        rec["model_flops"] / HW.peak_flops_bf16 / chips
+        / max(rec["roofline_bound_s"], 1e-12))
+
+    if production:
+        # production-config compile: runnability proof + HBM-fit numbers
+        prod = lower_cell(arch_name, shape_name,
+                          arch_overrides=base_ov or None)
+        if prod.get("status") == "ok":
+            rec["production"] = {
+                k: prod[k] for k in ("compile_s", "argument_bytes",
+                                     "output_bytes", "temp_bytes",
+                                     "peak_bytes")
+                if k in prod}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-production", action="store_true")
+    ap.add_argument("--override", type=str, default=None)
+    ap.add_argument("--variant", type=str, default="baseline",
+                    help="label recorded with the result (perf iterations)")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    cells = ([(a, s) for a in list_archs() for s in SHAPES]
+             if args.all else [(args.arch.replace("-", "_"), args.shape)])
+    overrides = json.loads(args.override) if args.override else None
+
+    failures = 0
+    for a, s in cells:
+        t0 = time.time()
+        try:
+            rec = roofline_cell(a, s, extra_overrides=overrides,
+                                production=not args.no_production)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        rec["variant"] = args.variant
+        rec["overrides"] = overrides
+        rec["wall_s"] = round(time.time() - t0, 1)
+        print(json.dumps(rec))
+        sys.stdout.flush()
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Input specifications per (architecture x shape).
+
+``input_specs(arch, shape)``  -> pytree of jax.ShapeDtypeStruct — the shapes
+the dry-run lowers against (weak-type-correct, shardable, no allocation).
+``make_batch(arch, shape, key)`` -> concrete arrays of the same structure
+for smoke tests / real training at reduced scale.
+
+Conventions (assignment):
+  * train shapes   -> train_step inputs {tokens, labels, ...frontend stubs}
+  * prefill shapes -> the same forward (teacher-forced logits over seq_len)
+  * decode shapes  -> serve_step inputs: one new token + caches of seq_len
+  * [vlm]/[audio]: the modality frontend is a STUB — patch/frame embeddings
+    arrive precomputed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+
+
+def train_input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+    if arch.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, arch.frontend_tokens, arch.frontend_dim), jnp.float32)
+    if arch.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, arch.enc_seq, arch.frontend_dim), jnp.float32)
+    return specs
+
+
+def decode_token_specs(arch: ArchConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+
+def make_batch(arch: ArchConfig, shape: ShapeConfig, key: jax.Array,
+               batch_override: int = 0, seq_override: int = 0
+               ) -> Dict[str, jax.Array]:
+    B = batch_override or shape.global_batch
+    T = seq_override or shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, T), 0, arch.vocab, jnp.int32),
+    }
+    batch["labels"] = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                              constant_values=-1)
+    if arch.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            k2, (B, arch.frontend_tokens, arch.frontend_dim), jnp.float32)
+        # image positions carry no LM label
+        batch["labels"] = batch["labels"].at[:, :arch.frontend_tokens].set(-1)
+    if arch.family == "audio":
+        batch["frames"] = jax.random.normal(
+            k3, (B, arch.enc_seq, arch.frontend_dim), jnp.float32)
+    return batch
+
+
+def cell_is_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """The 40-cell applicability matrix (skips recorded in DESIGN.md)."""
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, ("full-attention arch: 512k decode needs a full KV "
+                       "cache per layer and quadratic-prefill context; "
+                       "skipped per assignment (sub-quadratic archs only)")
+    return True, ""

@@ -1,0 +1,57 @@
+"""Model zoo facade: build_model(arch) returns a uniform functional surface
+regardless of family.
+
+    m = build_model(arch)
+    params = m.init(key)
+    loss   = m.loss(params, batch)            # train objective
+    logits, cache = m.decode_step(params, tokens, cache)
+    cache  = m.init_cache(params, batch_size, max_seq[, batch])
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    arch: ArchConfig
+    init: Callable
+    loss: Callable
+    apply: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def build_model(arch: ArchConfig, moe_path: str = "dense") -> Model:
+    if arch.family == "audio":
+        return Model(
+            arch=arch,
+            init=lambda key: encdec.init_encdec(arch, key),
+            loss=lambda p, b: encdec.encdec_loss(arch, p, b),
+            apply=lambda p, b: encdec.decode_train(
+                arch, p, b["tokens"], encdec.encode(arch, p, b["frames"])),
+            decode_step=lambda p, t, c: encdec.encdec_decode_step(arch, p, t, c),
+            init_cache=lambda p, bsz, max_seq, batch=None:
+                encdec.init_encdec_cache(
+                    arch, p,
+                    batch["frames"] if batch is not None else
+                    jnp.zeros((bsz, arch.enc_seq, arch.frontend_dim),
+                              arch.dtype),
+                    max_seq),
+        )
+    return Model(
+        arch=arch,
+        init=lambda key: lm.init_lm(arch, key),
+        loss=lambda p, b: lm.lm_loss(arch, p, b, moe_path=moe_path),
+        apply=lambda p, b: lm.apply_lm(arch, p, b, moe_path=moe_path),
+        decode_step=lambda p, t, c: lm.decode_step(arch, p, t, c),
+        init_cache=lambda p, bsz, max_seq, batch=None:
+            lm.init_cache(arch, bsz, max_seq),
+    )

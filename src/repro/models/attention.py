@@ -1,0 +1,318 @@
+"""Attention substrate: GQA + RoPE + causal/sliding-window masks, a
+flash-style KV-chunked implementation for long prefill, and the cached
+decode step.
+
+Memory discipline: materialising a (T, T) score matrix at prefill_32k would
+be 32768^2 * heads * batch elements — the chunked path keeps the working set
+at (T, kv_chunk) with running max/denominator (online softmax), the same
+blocking the Pallas kernel (kernels/flash_attn) uses on TPU; XLA fuses each
+chunk iteration into a bounded-footprint loop body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., T, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full / chunked attention
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, K*groups, hd) head-replication for GQA."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, kv_chunk: int = 1024) -> jax.Array:
+    """GQA attention. q: (B, T, H, hd); k, v: (B, S, K, hd), H % K == 0.
+
+    ``window``: sliding-window width (gemma3 local layers); None = full.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill
+    continuation); q position i attends to kv positions <= q_offset + i.
+    Uses the online-softmax KV-chunked schedule when S > kv_chunk.
+    """
+    B, T, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    groups = H // K
+    scale = hd ** -0.5
+
+    q32 = q.astype(jnp.float32) * scale
+    kh = _repeat_kv(k, groups).astype(jnp.float32)
+    vh = _repeat_kv(v, groups).astype(jnp.float32)
+
+    if S <= kv_chunk:
+        scores = jnp.einsum("bthd,bshd->bhts", q32, kh)
+        scores = _mask(scores, T, S, q_offset, causal, window)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", probs, vh)
+        return out.astype(q.dtype)
+
+    # flash-style online softmax over KV chunks
+    n_chunks = -(-S // kv_chunk)
+    pad = n_chunks * kv_chunk - S
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kh = kh.reshape(B, n_chunks, kv_chunk, H, hd)
+    vh = vh.reshape(B, n_chunks, kv_chunk, H, hd)
+
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kc, vc, cidx = inputs
+        scores = jnp.einsum("bthd,bshd->bhts", q32, kc)   # (B,H,T,chunk)
+        kv_pos = cidx * kv_chunk + jnp.arange(kv_chunk)
+        q_pos = q_offset + jnp.arange(T)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((T, kv_chunk), bool)
+        mask = jnp.logical_and(mask, kv_pos[None, :] < S)
+        if window is not None:
+            mask = jnp.logical_and(mask,
+                                   kv_pos[None, :] > q_pos[:, None] - window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhts,bshd->bhtd", p, vc)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, T), jnp.float32)
+    a0 = jnp.zeros((B, H, T, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kh.transpose(1, 0, 2, 3, 4), vh.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B,T,H,hd)
+
+
+def _mask(scores, T, S, q_offset, causal, window):
+    q_pos = q_offset + jnp.arange(T)
+    kv_pos = jnp.arange(S)
+    m = jnp.ones((T, S), bool)
+    if causal:
+        m = kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m = jnp.logical_and(m, kv_pos[None, :] > q_pos[:, None] - window)
+    return jnp.where(m[None, None], scores, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# ring attention (sequence parallelism over the "model" mesh axis)
+# ---------------------------------------------------------------------------
+
+def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mesh,
+                   axis: str = "model", causal: bool = True) -> jax.Array:
+    """Sequence-parallel attention: the time axis of q/k/v is sharded over
+    ``axis`` (P shards). Each shard flash-accumulates against its local KV
+    block, then the KV blocks rotate around the ring (collective-permute)
+    P-1 times.
+
+    Wire volume per chip: (P-1)/P * |K|+|V| bytes per layer — versus the
+    Megatron activation all-reduce of 2 * 2 * |activations| per block. For
+    long prefill (T >> d) this is the decisive win recorded in
+    EXPERIMENTS.md §Perf; the permutes also overlap with the local block
+    matmuls (XLA async collective-permute).
+
+    q: (B, T, H, hd); k, v: (B, T, K, hd) with H % K == 0 — the RAW kv heads
+    rotate around the ring (GQA repetition happens inside each local block:
+    rotating pre-repeated heads would multiply the wire volume by H/K —
+    the B2 -> B5 iteration in EXPERIMENTS.md §Perf).
+    """
+    n_shards = mesh.shape[axis]
+
+    def local_fn(qs, ks, vs):
+        idx = jax.lax.axis_index(axis)
+        B, Tl, H, hd = qs.shape
+        groups = H // ks.shape[2]
+        scale = hd ** -0.5
+        q32 = qs.astype(jnp.float32) * scale
+        m = jnp.full((B, H, Tl), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, Tl), jnp.float32)
+        acc = jnp.zeros((B, H, Tl, hd), jnp.float32)
+        q_pos = idx * Tl + jnp.arange(Tl)
+
+        ks_cur, vs_cur = ks, vs
+        for s in range(n_shards):
+            kv_idx = (idx - s) % n_shards
+            kv_pos = kv_idx * Tl + jnp.arange(Tl)
+            scores = jnp.einsum("bthd,bshd->bhts", q32,
+                                _repeat_kv(ks_cur, groups).astype(jnp.float32))
+            if causal:
+                mask = kv_pos[None, :] <= q_pos[:, None]
+                scores = jnp.where(mask[None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhts,bshd->bhtd", p,
+                _repeat_kv(vs_cur, groups).astype(jnp.float32))
+            m = m_new
+            if s < n_shards - 1:
+                perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+                ks_cur = jax.lax.ppermute(ks_cur, axis, perm)
+                vs_cur = jax.lax.ppermute(vs_cur, axis, perm)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(qs.dtype)
+
+    from jax.sharding import PartitionSpec as P_
+    # batch stays sharded over the DP axes INSIDE the shard_map — an
+    # in_spec of None there would force an all-gather of the batch (the
+    # B2-ring refuted-iteration bug: 16x redundant compute + gathers)
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    spec = P_(ba, axis, None, None)
+    return jax.shard_map(local_fn, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# sequence-sharded decode attention (shard_map; TP over context)
+# ---------------------------------------------------------------------------
+
+def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, k_new: jax.Array,
+                             v_new: jax.Array, slot: jax.Array,
+                             eff_len: jax.Array, *, mesh,
+                             axis: str = "model"):
+    """One-token decode against a SEQUENCE-sharded KV cache, fully manual.
+
+    The cache's time axis is sharded over ``axis``; the owning shard writes
+    the new (k, v) at ``slot``; every shard computes partial scores over its
+    context slice; the softmax combines with three tiny collectives
+    (pmax (B,H), psum (B,H), psum (B,H,hd)) — versus GSPMD's
+    involuntary full-cache fp32 regather (§Perf C).
+
+    q: (B,1,H,hd); caches: (B,S,K,hd); k_new/v_new: (B,1,K,hd).
+    Returns (out (B,1,H,hd), k_cache, v_cache).
+    """
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    S = k_cache.shape[1]
+    S_loc = S // n_shards
+
+    def local_fn(qs, kc, vc, kn, vn, slot_, eff_):
+        idx = jax.lax.axis_index(axes)
+        B, _, H, hd = qs.shape
+        K = kc.shape[2]
+        groups = H // K
+        # masked owner write
+        owner = (slot_ // S_loc) == idx
+        lpos = slot_ % S_loc
+        kc_w = jax.lax.dynamic_update_slice_in_dim(
+            kc, kn.astype(kc.dtype), lpos, axis=1)
+        vc_w = jax.lax.dynamic_update_slice_in_dim(
+            vc, vn.astype(vc.dtype), lpos, axis=1)
+        kc = jnp.where(owner, kc_w, kc)
+        vc = jnp.where(owner, vc_w, vc)
+        # partial attention over the local context slice
+        kh = _repeat_kv(kc, groups).astype(jnp.float32)
+        vh = _repeat_kv(vc, groups).astype(jnp.float32)
+        q32 = qs.astype(jnp.float32) * hd ** -0.5
+        scores = jnp.einsum("bthd,bshd->bhts", q32, kh)[:, :, 0]  # (B,H,Sl)
+        gpos = idx * S_loc + jnp.arange(S_loc)
+        valid = gpos[None, :] < jnp.asarray(eff_).reshape(-1, 1)
+        scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+        m_loc = jnp.max(scores, axis=-1)
+        m = jax.lax.pmax(m_loc, axes)                      # (B,H) tiny
+        p = jnp.exp(scores - m[..., None])
+        l = jax.lax.psum(jnp.sum(p, axis=-1), axes)        # (B,H) tiny
+        o = jax.lax.psum(jnp.einsum("bhs,bshd->bhd", p, vh), axes)
+        out = (o / jnp.maximum(l[..., None], 1e-30))[:, None]
+        return out.astype(qs.dtype), kc, vc
+
+    from jax.sharding import PartitionSpec as P_
+    B = q.shape[0]
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names
+               and a not in axes) or None
+    if ba is not None:
+        prod = 1
+        for a in ba:
+            prod *= mesh.shape[a]
+        if B % prod != 0:
+            ba = None
+    rep = P_(ba, None, None, None)
+    shd = P_(ba, axis, None, None)
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(rep, shd, shd, rep, rep, P_(), P_()),
+        out_specs=(rep, shd, shd))(
+            q, k_cache, v_cache, k_new, v_new,
+            jnp.asarray(slot), jnp.asarray(eff_len))
+
+
+# ---------------------------------------------------------------------------
+# decode step with KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, window: Optional[int] = None
+                     ) -> jax.Array:
+    """One-token decode. q: (B, 1, H, hd); caches: (B, S, K, hd) with valid
+    prefix of length cache_len (per-batch scalar or python int). Cost is
+    O(S * H * hd) — linear in context, the memory-bound regime the roofline
+    analysis shows dominating decode cells.
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    groups = H // K
+    scale = hd ** -0.5
+
+    q32 = q.astype(jnp.float32) * scale
+    kh = _repeat_kv(k_cache, groups).astype(jnp.float32)
+    vh = _repeat_kv(v_cache, groups).astype(jnp.float32)
+    scores = jnp.einsum("bthd,bshd->bhts", q32, kh)[:, :, 0]   # (B,H,S)
+    kv_pos = jnp.arange(S)
+    valid = kv_pos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    if window is not None:
+        valid = jnp.logical_and(
+            valid, kv_pos[None, :] >= jnp.asarray(cache_len).reshape(-1, 1) - window)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vh)
+    return out[:, None].astype(q.dtype)                         # (B,1,H,hd)
+
+
+def update_kv_cache(k_cache: jax.Array, v_cache: jax.Array,
+                    k_new: jax.Array, v_new: jax.Array,
+                    cache_len) -> Tuple[jax.Array, jax.Array]:
+    """Insert (B, 1, K, hd) new entries at position cache_len."""
+    idx = jnp.asarray(cache_len)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), idx, axis=1)
+    return k_cache, v_cache

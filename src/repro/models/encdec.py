@@ -1,0 +1,198 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+The conv/mel frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, enc_seq, d_model) directly. Sinusoidal
+positional embeddings, full bidirectional encoder self-attention, causal
+decoder self-attention + cross-attention.
+
+Decode caches: decoder self-attn KV ring + STATIC cross-attn KV computed
+once at prefill from the encoder output (cross K/V never change during
+decoding — the classic enc-dec serving optimisation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.config import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.models import attention as attn_lib
+
+Params = Dict[str, Any]
+
+
+def sinusoidal_pos(T: int, d: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + T, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None]
+    ang = pos / (10000.0 ** (dim / d))
+    pe = jnp.zeros((T, d))
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def _attn_init(arch: ArchConfig, key, cross: bool = False) -> Params:
+    d, H, hd = arch.d_model, arch.n_heads, arch.resolved_head_dim
+    k1, k2, k3 = jax.random.split(key, 3)
+    pdt = arch.param_dtype
+    return {
+        "wq": nn.lecun_normal(k1, (d, H * hd), pdt),
+        "wkv": nn.lecun_normal(k2, (d, 2 * H * hd), pdt),
+        "wo": nn.lecun_normal(k3, (H * hd, d), pdt, fan_in=H * hd),
+    }
+
+
+def _attn(arch: ArchConfig, p: Params, x: jax.Array, kv_src: jax.Array,
+          causal: bool) -> jax.Array:
+    B, T, _ = x.shape
+    H, hd = arch.n_heads, arch.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, T, H, hd)
+    kv = kv_src @ p["wkv"].astype(x.dtype)
+    k, v = jnp.split(kv, 2, axis=-1)
+    S = kv_src.shape[1]
+    k = k.reshape(B, S, H, hd)
+    v = v.reshape(B, S, H, hd)
+    o = attn_lib.attention(q, k, v, causal=causal)
+    return o.reshape(B, T, H * hd) @ p["wo"].astype(x.dtype)
+
+
+def _enc_layer_init(arch, key):
+    k1, k2 = jax.random.split(key)
+    d = arch.d_model
+    return {"norm1": nn.layernorm_init(d, arch.param_dtype),
+            "attn": _attn_init(arch, k1),
+            "norm2": nn.layernorm_init(d, arch.param_dtype),
+            "mlp": nn.mlp_init(k2, d, arch.d_ff, d, arch.param_dtype)}
+
+
+def _dec_layer_init(arch, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = arch.d_model
+    return {"norm1": nn.layernorm_init(d, arch.param_dtype),
+            "self_attn": _attn_init(arch, k1),
+            "norm2": nn.layernorm_init(d, arch.param_dtype),
+            "cross_attn": _attn_init(arch, k2),
+            "norm3": nn.layernorm_init(d, arch.param_dtype),
+            "mlp": nn.mlp_init(k3, d, arch.d_ff, d, arch.param_dtype)}
+
+
+def init_encdec(arch: ArchConfig, key) -> Params:
+    from repro.models.lm import padded_vocab
+    ks = jax.random.split(key, 4 + arch.enc_layers + arch.n_layers)
+    d = arch.d_model
+    pdt = arch.param_dtype
+    return {
+        "embed": (jax.random.normal(ks[0], (padded_vocab(arch), d))
+                  * d ** -0.5).astype(pdt),
+        "enc_layers": [_enc_layer_init(arch, ks[2 + i])
+                       for i in range(arch.enc_layers)],
+        "enc_norm": nn.layernorm_init(d, pdt),
+        "dec_layers": [_dec_layer_init(arch, ks[2 + arch.enc_layers + i])
+                       for i in range(arch.n_layers)],
+        "dec_norm": nn.layernorm_init(d, pdt),
+    }
+
+
+def encode(arch: ArchConfig, p: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, enc_seq, d_model) precomputed stub embeddings."""
+    p = nn.cast_tree(p, arch.dtype)
+    x = frames.astype(arch.dtype)
+    x = x + sinusoidal_pos(x.shape[1], arch.d_model).astype(x.dtype)
+    x = shard_activation(x, "act")
+    for lp in p["enc_layers"]:
+        x = x + _attn(arch, lp["attn"], nn.layernorm(lp["norm1"], x),
+                      nn.layernorm(lp["norm1"], x), causal=False)
+        x = x + nn.mlp(lp["mlp"], nn.layernorm(lp["norm2"], x))
+    return nn.layernorm(p["enc_norm"], x)
+
+
+def decode_train(arch: ArchConfig, p: Params, tokens: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    """Teacher-forced decoder forward: (B, T) tokens -> (B, T, D)."""
+    p = nn.cast_tree(p, arch.dtype)
+    x = jnp.take(p["embed"], tokens, axis=0).astype(arch.dtype)
+    x = x + sinusoidal_pos(x.shape[1], arch.d_model).astype(x.dtype)
+    x = shard_activation(x, "act")
+    for lp in p["dec_layers"]:
+        x = x + _attn(arch, lp["self_attn"], nn.layernorm(lp["norm1"], x),
+                      nn.layernorm(lp["norm1"], x), causal=True)
+        x = x + _attn(arch, lp["cross_attn"], nn.layernorm(lp["norm2"], x),
+                      enc_out, causal=False)
+        x = x + nn.mlp(lp["mlp"], nn.layernorm(lp["norm3"], x))
+    return nn.layernorm(p["dec_norm"], x)
+
+
+def encdec_loss(arch: ArchConfig, p: Params, batch: Dict) -> jax.Array:
+    from repro.models.lm import _mask_padded_logits
+    enc_out = encode(arch, p, batch["frames"])
+    h = decode_train(arch, p, batch["tokens"], enc_out)
+    logits = _mask_padded_logits(
+        (h @ p["embed"].T.astype(h.dtype)).astype(jnp.float32), arch.vocab)
+    labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                     constant_values=-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(arch: ArchConfig, p: Params, frames: jax.Array,
+                      max_seq: int) -> Dict:
+    """Prefill: run encoder once, precompute static cross-attn K/V."""
+    B = frames.shape[0]
+    H, hd = arch.n_heads, arch.resolved_head_dim
+    enc_out = encode(arch, p, frames)
+    layers = []
+    for lp in p["dec_layers"]:
+        kv = enc_out @ lp["cross_attn"]["wkv"].astype(enc_out.dtype)
+        ck, cv = jnp.split(kv, 2, axis=-1)
+        S = enc_out.shape[1]
+        layers.append({
+            "k": jnp.zeros((B, max_seq, H, hd), arch.dtype),
+            "v": jnp.zeros((B, max_seq, H, hd), arch.dtype),
+            "ck": ck.reshape(B, S, H, hd),
+            "cv": cv.reshape(B, S, H, hd),
+        })
+    return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+
+
+def encdec_decode_step(arch: ArchConfig, p: Params, tokens: jax.Array,
+                       cache: Dict) -> Tuple[jax.Array, Dict]:
+    """One decoder token. tokens: (B, 1)."""
+    p = nn.cast_tree(p, arch.dtype)
+    B = tokens.shape[0]
+    H, hd = arch.n_heads, arch.resolved_head_dim
+    pos = cache["pos"]
+    x = jnp.take(p["embed"], tokens, axis=0).astype(arch.dtype)
+    x = x + sinusoidal_pos(1, arch.d_model, offset=0).astype(x.dtype)  # static
+    new_layers = []
+    for lp, cl in zip(p["dec_layers"], cache["layers"]):
+        hn = nn.layernorm(lp["norm1"], x)
+        q = (hn @ lp["self_attn"]["wq"].astype(x.dtype)).reshape(B, 1, H, hd)
+        kv = hn @ lp["self_attn"]["wkv"].astype(x.dtype)
+        k, v = jnp.split(kv, 2, axis=-1)
+        kc, vc = attn_lib.update_kv_cache(cl["k"], cl["v"],
+                                          k.reshape(B, 1, H, hd),
+                                          v.reshape(B, 1, H, hd), pos)
+        o = attn_lib.decode_attention(q, kc, vc, pos + 1)
+        x = x + o.reshape(B, 1, H * hd) @ lp["self_attn"]["wo"].astype(x.dtype)
+        hn = nn.layernorm(lp["norm2"], x)
+        q = (hn @ lp["cross_attn"]["wq"].astype(x.dtype)).reshape(B, 1, H, hd)
+        o = attn_lib.decode_attention(q, cl["ck"], cl["cv"],
+                                      cl["ck"].shape[1])
+        x = x + o.reshape(B, 1, H * hd) @ lp["cross_attn"]["wo"].astype(x.dtype)
+        x = x + nn.mlp(lp["mlp"], nn.layernorm(lp["norm3"], x))
+        new_layers.append({**cl, "k": kc, "v": vc})
+    x = nn.layernorm(p["dec_norm"], x)
+    from repro.models.lm import _mask_padded_logits
+    logits = _mask_padded_logits(x @ p["embed"].T.astype(x.dtype),
+                                 arch.vocab)
+    return logits, {"pos": pos + 1, "layers": new_layers}

@@ -1,0 +1,501 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+assigned architectures. (Enc-dec audio lives in models/encdec.py.)
+
+Design notes (MaxText-style, compile-time-aware):
+  * scan-over-layers: identical layer groups are stacked on a leading axis
+    and iterated with jax.lax.scan — HLO size is O(1) in depth, which keeps
+    the 512-device SPMD compile of 26B-parameter graphs tractable.
+  * heterogeneous patterns (gemma3 5-local:1-global, zamba2 shared-attention
+    interleave) are expressed as a GROUP of layers that IS homogeneous at the
+    group level; trailing non-multiple layers are unrolled.
+  * remat: each group body is wrapped in jax.checkpoint(nothing_saveable),
+    so backward recomputes inside a group and only group-boundary activations
+    are live — the activation-memory term in the §Roofline analysis.
+  * losses are computed in sequence chunks so the (B, T, V) logits tensor for
+    a 256k vocab never materialises at once.
+
+Cache contract for decode (serve_step): every layer's recurrent state is
+stacked on the layer axis and carried through the same scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.config import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.models import attention as attn_lib
+from repro.models import mixers, moe as moe_lib
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# layer init
+# ---------------------------------------------------------------------------
+
+def padded_vocab(arch: ArchConfig) -> int:
+    """Vocab rounded up to a TP-friendly multiple (Megatron-style padding):
+    49155 -> 49408 etc. Padded logit columns are masked to -inf."""
+    return -(-arch.vocab // 256) * 256
+
+
+def _mask_padded_logits(logits: jax.Array, vocab: int) -> jax.Array:
+    Vp = logits.shape[-1]
+    if Vp == vocab:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < vocab, logits, jnp.asarray(-1e9, logits.dtype))
+
+
+def _norm_init(arch: ArchConfig, d: int):
+    return (nn.rmsnorm_init(d, arch.param_dtype) if arch.norm == "rmsnorm"
+            else nn.layernorm_init(d, arch.param_dtype))
+
+
+def _norm(arch: ArchConfig, p, x):
+    return nn.rmsnorm(p, x) if arch.norm == "rmsnorm" else nn.layernorm(p, x)
+
+
+def attn_block_init(arch: ArchConfig, key) -> Params:
+    d, H, K, hd = arch.d_model, arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    pdt = arch.param_dtype
+    p = {
+        "norm1": _norm_init(arch, d),
+        "wqkv": nn.lecun_normal(ks[0], (d, (H + 2 * K) * hd), pdt),
+        "wo": nn.lecun_normal(ks[1], (H * hd, d), pdt, fan_in=H * hd),
+        "norm2": _norm_init(arch, d),
+    }
+    if arch.moe is not None:
+        p["moe"] = moe_lib.moe_init(arch, ks[2])
+    elif arch.act in ("silu", "gelu_tanh"):  # gated (SwiGLU / GeGLU) archs
+        p["w_gate"] = nn.lecun_normal(ks[2], (d, arch.d_ff), pdt)
+        p["w_up"] = nn.lecun_normal(ks[3], (d, arch.d_ff), pdt)
+        p["w_down"] = nn.lecun_normal(ks[4], (arch.d_ff, d), pdt,
+                                      fan_in=arch.d_ff)
+    else:                                     # plain MLP (gelu / squared-relu)
+        p["fc1"] = nn.dense_init(ks[2], d, arch.d_ff, pdt)
+        p["fc2"] = nn.dense_init(ks[3], arch.d_ff, d, pdt)
+    return p
+
+
+def _ffn(arch: ArchConfig, p: Params, x: jax.Array,
+         moe_path: str = "dense") -> jax.Array:
+    act = nn.ACTIVATIONS[arch.act]
+    if arch.moe is not None:
+        return moe_lib.moe_apply(p["moe"], arch, x, path=moe_path)
+    if "w_gate" in p:
+        return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return nn.dense(p["fc2"], act(nn.dense(p["fc1"], x)))
+
+
+# ---------------------------------------------------------------------------
+# layer apply — full-sequence mode
+# ---------------------------------------------------------------------------
+
+def attn_block_apply(arch: ArchConfig, p: Params, h: jax.Array, *,
+                     window: Optional[int], positions: jax.Array,
+                     moe_path: str = "dense") -> jax.Array:
+    B, T, d = h.shape
+    H, K, hd = arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
+    hn = _norm(arch, p["norm1"], h)
+    qkv = (hn @ p["wqkv"].astype(h.dtype))
+    q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, K, hd)
+    v = v.reshape(B, T, K, hd)
+    if arch.rope_theta > 0:
+        q = attn_lib.apply_rope(q, positions, arch.rope_theta)
+        k = attn_lib.apply_rope(k, positions, arch.rope_theta)
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if (arch.attn_impl == "ring" and window is None and mesh is not None
+            and "model" in mesh.axis_names):
+        o = attn_lib.ring_attention(q, k, v, mesh=mesh, causal=True)
+    else:
+        kv_chunk = T if arch.exact_hlo else 1024
+        o = attn_lib.attention(q, k, v, causal=True, window=window,
+                               kv_chunk=kv_chunk)
+    o = o.reshape(B, T, H * hd) @ p["wo"].astype(h.dtype)
+    h = h + shard_activation(o, "act")
+    hn = _norm(arch, p["norm2"], h)
+    h = h + shard_activation(_ffn(arch, p, hn, moe_path), "act")
+    return h
+
+
+def mixer_block_init(arch: ArchConfig, key) -> Params:
+    kind = arch.ssm.kind
+    k1, k2 = jax.random.split(key)
+    return {"norm": _norm_init(arch, arch.d_model),
+            "mixer": mixers.MIXERS[kind][0](arch, k1)}
+
+
+def mixer_block_apply(arch: ArchConfig, p: Params, h: jax.Array,
+                      state: Optional[Dict] = None):
+    kind = arch.ssm.kind
+    hn = _norm(arch, p["norm"], h)
+    out, new_state = mixers.MIXERS[kind][1](p["mixer"], arch, hn, state)
+    return h + shard_activation(out, "act"), new_state
+
+
+# ---------------------------------------------------------------------------
+# group pattern resolution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Static description of the repeating layer group + trailing layers."""
+    group: Tuple[str, ...]       # e.g. ("local",)*5 + ("global",) or ("ssm",)
+    n_groups: int
+    tail: Tuple[str, ...]        # unrolled remainder
+    shared_attn: bool = False    # zamba2: shared block applied after "ssm_sh"
+
+
+def layer_plan(arch: ArchConfig) -> LayerPlan:
+    L = arch.n_layers
+    if arch.family in ("ssm",) or (arch.seq_mixer == "lrc" and arch.ssm):
+        if arch.hybrid_period:
+            g = ("ssm",) * (arch.hybrid_period - 1) + ("ssm_sh",)
+            n, r = divmod(L, arch.hybrid_period)
+            return LayerPlan(g, n, ("ssm",) * r, shared_attn=True)
+        return LayerPlan(("ssm",), L, ())
+    if arch.family == "hybrid":
+        g = ("ssm",) * (arch.hybrid_period - 1) + ("ssm_sh",)
+        n, r = divmod(L, arch.hybrid_period)
+        return LayerPlan(g, n, ("ssm",) * r, shared_attn=True)
+    if arch.window_pattern is not None:
+        _, per = arch.window_pattern
+        g = ("local",) * per + ("global",)
+        n, r = divmod(L, per + 1)
+        return LayerPlan(g, n, ("local",) * r)
+    return LayerPlan(("full",), L, ())
+
+
+def _layer_init(arch: ArchConfig, kind: str, key) -> Params:
+    if kind in ("ssm", "ssm_sh"):
+        return mixer_block_init(arch, key)
+    return attn_block_init(arch, key)
+
+
+def _window_for(arch: ArchConfig, kind: str) -> Optional[int]:
+    if kind == "local" and arch.window_pattern is not None:
+        return arch.window_pattern[0]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_lm(arch: ArchConfig, key: jax.Array) -> Params:
+    plan = layer_plan(arch)
+    n_keys = 4 + len(plan.tail) + 1
+    ks = jax.random.split(key, n_keys)
+    pdt = arch.param_dtype
+    scale = (1.0 / arch.d_model) ** 0.5
+    Vp = padded_vocab(arch)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (Vp, arch.d_model))
+                  * scale).astype(pdt),
+        "final_norm": _norm_init(arch, arch.d_model),
+    }
+    if not arch.tie_embeddings:
+        p["lm_head"] = nn.lecun_normal(ks[1], (arch.d_model, Vp), pdt)
+    if arch.frontend_dim:
+        p["projector"] = nn.mlp_init(ks[2], arch.frontend_dim,
+                                     arch.d_model * 2, arch.d_model, pdt)
+
+    # stacked group params via vmapped init
+    gkeys = jax.random.split(ks[3], max(plan.n_groups, 1))
+
+    def group_init(gk):
+        lkeys = jax.random.split(gk, len(plan.group))
+        return [_layer_init(arch, kind, lk)
+                for kind, lk in zip(plan.group, lkeys)]
+
+    if plan.n_groups > 0:
+        p["groups"] = jax.vmap(group_init)(gkeys)
+    p["tail"] = [_layer_init(arch, kind, ks[4 + i])
+                 for i, kind in enumerate(plan.tail)]
+    if plan.shared_attn:
+        p["shared_attn"] = attn_block_init(arch, ks[-1])
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill logits)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(arch: ArchConfig, p: Params, batch: Dict) -> jax.Array:
+    tok_emb = jnp.take(p["embed"], batch["tokens"], axis=0).astype(arch.dtype)
+    if arch.frontend_dim and "patch_embeds" in batch:
+        # VLM: projected frontend embeddings replace the leading positions.
+        pe = nn.mlp(p["projector"], batch["patch_embeds"].astype(arch.dtype))
+        n_img = pe.shape[1]
+        tok_emb = jnp.concatenate([pe, tok_emb[:, n_img:]], axis=1)
+    return shard_activation(tok_emb, "act")
+
+
+def _apply_layer(arch: ArchConfig, kind: str, lp: Params, h: jax.Array,
+                 positions: jax.Array, shared_p: Optional[Params],
+                 moe_path: str) -> jax.Array:
+    if kind in ("ssm", "ssm_sh"):
+        h, _ = mixer_block_apply(arch, lp, h)
+        if kind == "ssm_sh" and shared_p is not None:
+            h = attn_block_apply(arch, shared_p, h, window=None,
+                                 positions=positions, moe_path=moe_path)
+        return h
+    return attn_block_apply(arch, lp, h, window=_window_for(arch, kind),
+                            positions=positions, moe_path=moe_path)
+
+
+def apply_lm(arch: ArchConfig, p: Params, batch: Dict,
+             moe_path: str = "dense") -> jax.Array:
+    """batch {tokens (B,T), [patch_embeds]} -> final hidden states (B,T,D)."""
+    plan = layer_plan(arch)
+    p = nn.cast_tree(p, arch.dtype)
+    h = _embed_inputs(arch, p, batch)
+    B, T, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    shared_p = p.get("shared_attn")
+
+    def group_body(h, group_params):
+        for kind, lp in zip(plan.group, group_params):
+            h = _apply_layer(arch, kind, lp, h, positions, shared_p, moe_path)
+        return h, None
+
+    body = group_body
+    if arch.remat == "layer" and plan.n_groups > 0:
+        body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if plan.n_groups > 0:
+        if arch.scan_layers:
+            h, _ = jax.lax.scan(body, h, p["groups"])
+        else:
+            for gi in range(plan.n_groups):
+                gp = jax.tree_util.tree_map(lambda x: x[gi], p["groups"])
+                h, _ = body(h, gp)
+    for kind, lp in zip(plan.tail, p["tail"]):
+        h = _apply_layer(arch, kind, lp, h, positions, shared_p, moe_path)
+    return _norm(arch, p["final_norm"], h)
+
+
+def logits_fn(arch: ArchConfig, p: Params, h: jax.Array) -> jax.Array:
+    head = p["embed"].T if arch.tie_embeddings else p["lm_head"]
+    return _mask_padded_logits(h @ head.astype(h.dtype), arch.vocab)
+
+
+def lm_loss(arch: ArchConfig, p: Params, batch: Dict,
+            moe_path: str = "dense", loss_chunk: int = 1024) -> jax.Array:
+    """Next-token cross-entropy, computed in sequence chunks so the
+    (B, T, vocab) logits never materialise (vocab up to 262k)."""
+    h = apply_lm(arch, p, batch, moe_path=moe_path)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                         constant_values=-1)
+    B, T, D = h.shape
+    if arch.exact_hlo:
+        loss_chunk = T
+    n_chunks = max(T // loss_chunk, 1)
+    hc = h[:, :n_chunks * loss_chunk].reshape(B, n_chunks, -1, D)
+    lc = labels[:, :n_chunks * loss_chunk].reshape(B, n_chunks, -1)
+    head = (p["embed"].T if arch.tie_embeddings else p["lm_head"]).astype(h.dtype)
+
+    def chunk_loss(carry, xs):
+        hck, lck = xs                       # (B, C, D), (B, C)
+        logits = _mask_padded_logits((hck @ head).astype(jnp.float32),
+                                     arch.vocab)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lck, 0)[..., None], axis=-1)[..., 0]
+        mask = (lck >= 0).astype(jnp.float32)
+        nll = (logz - gold) * mask
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0), jnp.float32(0)),
+        (hc.swapaxes(0, 1), lc.swapaxes(0, 1)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(arch: ArchConfig, batch: int, max_seq: int) -> Dict:
+    """Per-layer decode state, stacked on the leading layer/group axes.
+
+    Attention layers get (k, v) rings; local layers allocate only the window
+    (a long_500k memory win); ssm layers get O(D) recurrent state.
+    """
+    plan = layer_plan(arch)
+    K, hd = arch.n_kv_heads, arch.resolved_head_dim
+
+    def layer_cache(kind):
+        if kind in ("ssm", "ssm_sh"):
+            return mixers.MIXERS[arch.ssm.kind][2](arch, batch)
+        window = _window_for(arch, kind)
+        S = min(max_seq, window) if window else max_seq
+        return {"k": jnp.zeros((batch, S, K, hd), arch.dtype),
+                "v": jnp.zeros((batch, S, K, hd), arch.dtype)}
+
+    def group_cache(_):
+        return [layer_cache(kind) for kind in plan.group]
+
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if plan.n_groups > 0:
+        cache["groups"] = jax.vmap(group_cache)(jnp.arange(plan.n_groups))
+    cache["tail"] = [layer_cache(kind) for kind in plan.tail]
+    if plan.shared_attn:
+        cache["shared"] = [
+            {"k": jnp.zeros((batch, max_seq, K, hd), arch.dtype),
+             "v": jnp.zeros((batch, max_seq, K, hd), arch.dtype)}
+            for _ in range(plan.n_groups + sum(k == "ssm_sh" for k in plan.tail))]
+    return cache
+
+
+def _attn_decode(arch: ArchConfig, lp: Params, h: jax.Array, cache_l: Dict,
+                 pos: jax.Array, window: Optional[int]):
+    B = h.shape[0]
+    H, K, hd = arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
+    hn = _norm(arch, lp["norm1"], h)
+    qkv = hn @ lp["wqkv"].astype(h.dtype)
+    q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, K, hd)
+    v = v.reshape(B, 1, K, hd)
+    positions = jnp.full((B, 1), pos)
+    if arch.rope_theta > 0:
+        q = attn_lib.apply_rope(q, positions, arch.rope_theta)
+        k = attn_lib.apply_rope(k, positions, arch.rope_theta)
+    # keep the per-step tensors batch-sharded only, so the cache layout is
+    # step-invariant (no whole-cache resharding — §Perf C finding)
+    from repro.distributed.sharding import constrain_batch_only
+    q, k, v = (constrain_batch_only(t) for t in (q, k, v))
+    S = cache_l["k"].shape[1]
+    slot = (pos % S) if window else pos
+    # ring semantics for windowed layers: all S slots valid once pos >= S
+    eff_len = jnp.minimum(pos + 1, S) if window else pos + 1
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    seq_axes = None
+    if mesh is not None and "model" in mesh.axis_names:
+        if B % mesh.shape.get("data", 1) == 0 and \
+                S % mesh.shape["model"] == 0:
+            seq_axes = "model"
+        elif S % (mesh.shape.get("data", 1) * mesh.shape["model"]) == 0:
+            seq_axes = ("data", "model")   # batch=1 long-context cells
+    if seq_axes is not None:
+        # sequence-sharded cache: manual shard_map decode (tiny collectives)
+        o, kc, vc = attn_lib.sharded_decode_attention(
+            q, cache_l["k"], cache_l["v"], k, v, slot, eff_len, mesh=mesh,
+            axis=seq_axes)
+    else:
+        kc, vc = attn_lib.update_kv_cache(cache_l["k"], cache_l["v"], k, v,
+                                          slot)
+        o = attn_lib.decode_attention(q, kc, vc, eff_len, window=None)
+    o = o.reshape(B, 1, H * hd) @ lp["wo"].astype(h.dtype)
+    h = h + o
+    hn = _norm(arch, lp["norm2"], h)
+    h = h + _ffn(arch, lp, hn)
+    return h, {**cache_l, "k": kc, "v": vc}
+
+
+def decode_step(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
+                ) -> Tuple[jax.Array, Dict]:
+    """One-token decode: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    plan = layer_plan(arch)
+    p = nn.cast_tree(p, arch.dtype)
+    pos = cache["pos"]
+    h = jnp.take(p["embed"], tokens, axis=0).astype(arch.dtype)
+    shared_p = p.get("shared_attn")
+    shared_caches = cache.get("shared", [])
+    shared_idx = 0
+
+    def apply_decode_layer(kind, lp, h, cl, shared_cache):
+        if kind in ("ssm", "ssm_sh"):
+            h, new_state = mixer_block_apply(
+                arch, lp, h[:, None] if h.ndim == 2 else h, cl)
+            new_cl = new_state
+            if kind == "ssm_sh" and shared_p is not None:
+                h, shared_cache = _attn_decode(arch, shared_p, h,
+                                               shared_cache, pos, None)
+            return h, new_cl, shared_cache
+        h, new_cl = _attn_decode(arch, lp, h, cl, pos,
+                                 _window_for(arch, kind))
+        return h, new_cl, shared_cache
+
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+    if plan.n_groups > 0 and not arch.scan_layers:
+        # unrolled path (exact-HLO measurement mode)
+        tm = jax.tree_util.tree_map
+        new_group_list = []
+        new_shared_list = list(cache.get("shared", []))
+        for gi in range(plan.n_groups):
+            gp = tm(lambda x: x[gi], p["groups"])
+            gc = tm(lambda x: x[gi], cache["groups"])
+            sc = cache["shared"][gi] if plan.shared_attn else None
+            new_gc = []
+            for i, kind in enumerate(plan.group):
+                h, ncl, sc = apply_decode_layer(kind, gp[i], h, gc[i], sc)
+                new_gc.append(ncl)
+            if plan.shared_attn:
+                new_shared_list[gi] = sc
+            new_group_list.append(new_gc)
+        new_cache["groups"] = tm(lambda *xs: jnp.stack(xs), *new_group_list) \
+            if plan.n_groups > 1 else tm(lambda x: x[None], new_group_list[0])
+        if plan.shared_attn:
+            new_cache["shared"] = new_shared_list
+        shared_idx = plan.n_groups
+    elif plan.n_groups > 0:
+        def group_body(h, xs):
+            if plan.shared_attn:
+                gp, gc, sc = xs
+            else:
+                (gp, gc), sc = xs, None
+            new_gc = []
+            for i, kind in enumerate(plan.group):
+                h, ncl, sc = apply_decode_layer(kind, gp[i], h, gc[i], sc)
+                new_gc.append(ncl)
+            return h, (new_gc, sc) if plan.shared_attn else new_gc
+
+        if plan.shared_attn:
+            sc_stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *cache["shared"][:plan.n_groups]) \
+                if plan.n_groups > 1 else jax.tree_util.tree_map(
+                    lambda x: x[None], cache["shared"][0])
+            h, (new_groups, new_sc) = jax.lax.scan(
+                group_body, h, (p["groups"], cache["groups"], sc_stacked))
+            new_cache["groups"] = new_groups
+            new_cache["shared"] = [
+                jax.tree_util.tree_map(lambda x: x[i], new_sc)
+                for i in range(plan.n_groups)]
+            shared_idx = plan.n_groups
+        else:
+            h, new_groups = jax.lax.scan(
+                group_body, h, (p["groups"], cache["groups"]))
+            new_cache["groups"] = new_groups
+
+    new_tail = []
+    for kind, lp, cl in zip(plan.tail, p["tail"], cache["tail"]):
+        sc = (cache["shared"][shared_idx]
+              if (kind == "ssm_sh" and plan.shared_attn) else None)
+        h, ncl, sc = apply_decode_layer(kind, lp, h, cl, sc)
+        if kind == "ssm_sh" and plan.shared_attn:
+            new_cache.setdefault("shared", list(cache["shared"]))[shared_idx] = sc
+            shared_idx += 1
+        new_tail.append(ncl)
+    new_cache["tail"] = new_tail
+    if plan.shared_attn and "shared" not in new_cache:
+        new_cache["shared"] = cache["shared"]
+
+    h = _norm(arch, p["final_norm"], h)
+    return logits_fn(arch, p, h), new_cache

@@ -1,0 +1,317 @@
+"""Sequence mixers for the LM zoo, all built on the same diagonal-recurrence
+machinery as the paper's core:
+
+  * mamba1 — selective SSM (falcon-mamba-7b): per-channel diagonal state,
+             input-dependent (Delta, B, C). LINEAR recurrence -> one scan.
+  * mamba2 — scalar-per-head decay (zamba2-7b): SSD-style, one scan.
+  * lrc    — the paper's NONLINEAR LrcSSM as an LM sequence mixer (the
+             technique as a first-class framework feature): DEER fixed-point,
+             K scans.
+
+All recurrences run through chunked_diag_scan: O(chunk * D) workspace
+(VMEM schedule on TPU via kernels/diag_scan), sequential carry across chunks.
+
+Decode: every mixer carries O(D) recurrent state — no KV cache — which is
+why ssm/hybrid cells are the only ones allowed at long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.config import ArchConfig, SSMConfig
+from repro.core.deer import DeerConfig, deer_solve
+from repro.core.scan import chunked_diag_scan, diag_linear_scan
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (mamba front-end)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (B, T, C), w: (W, C) depthwise, left-padded causal."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):                     # W is 4: unrolled taps fuse well
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def conv_step(w: jax.Array, b: jax.Array, buf: jax.Array, x_t: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Streaming conv for decode. buf: (B, W-1, C) past inputs."""
+    window = jnp.concatenate([buf, x_t[:, None]], axis=1)   # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b
+    return window[:, 1:], y
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 mixer
+# ---------------------------------------------------------------------------
+
+def mamba1_dims(arch: ArchConfig):
+    d = arch.d_model
+    s = arch.ssm
+    d_inner = s.expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def mamba1_init(arch: ArchConfig, key) -> Params:
+    d = arch.d_model
+    d_inner, dt_rank, N, W = mamba1_dims(arch)
+    ks = jax.random.split(key, 6)
+    pdt = arch.param_dtype
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (d_inner, 1))
+    return {
+        "in_proj": nn.dense_init(ks[0], d, 2 * d_inner, pdt, bias=False),
+        "conv_w": (jax.random.normal(ks[1], (W, d_inner)) * (1.0 / W)).astype(pdt),
+        "conv_b": jnp.zeros((d_inner,), pdt),
+        "x_proj": nn.dense_init(ks[2], d_inner, dt_rank + 2 * N, pdt, bias=False),
+        "dt_proj": nn.dense_init(ks[3], dt_rank, d_inner, pdt),
+        "A_log": jnp.log(A).astype(pdt),
+        "D": jnp.ones((d_inner,), pdt),
+        "out_proj": nn.dense_init(ks[4], d_inner, d, pdt, bias=False),
+    }
+
+
+def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
+                 state: Optional[Dict] = None):
+    """h: (B, T, d). Returns (out, new_state). state holds (ssm (B,di,N),
+    conv buffer (B,W-1,di)) for decode; None => full-sequence mode."""
+    B, T, _ = h.shape
+    d_inner, dt_rank, N, W = mamba1_dims(arch)
+    cdt = arch.dtype
+
+    xz = nn.dense(p["in_proj"], h)
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        x = causal_conv1d(p["conv_w"], p["conv_b"], x)
+        conv_buf_new = None
+    else:
+        conv_buf, ssm_prev = state["conv"], state["ssm"]
+        conv_buf_new, xs = conv_step(p["conv_w"], p["conv_b"], conv_buf, x[:, 0])
+        x = xs[:, None]
+    x = jax.nn.silu(x)
+
+    dbc = nn.dense(p["x_proj"], x)
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    delta = jax.nn.softplus(nn.dense(p["dt_proj"], dt))        # (B,T,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di,N)
+
+    lam = jnp.exp(delta[..., None].astype(jnp.float32) * A)    # (B,T,di,N)
+    beta = (delta[..., None] * Bc[..., None, :] * x[..., None]).astype(jnp.float32)
+
+    if state is None:
+        # (B,T,di,N) scan over T, vmapped over batch
+        chunk = 0 if arch.exact_hlo else arch.ssm.chunk
+        scan = lambda l, b: chunked_diag_scan(l, b, None, chunk=chunk)
+        hs = jax.vmap(scan)(lam, beta)                          # (B,T,di,N)
+        ssm_new = None
+    else:
+        hs = lam[:, 0] * state["ssm"] + beta[:, 0]              # (B,di,N)
+        ssm_new = hs
+        hs = hs[:, None]
+
+    y = jnp.einsum("btdn,btn->btd", hs, Cc.astype(jnp.float32))
+    y = y.astype(cdt) + p["D"].astype(cdt) * x
+    y = y * jax.nn.silu(z)
+    out = nn.dense(p["out_proj"], y)
+    new_state = None if state is None else {"conv": conv_buf_new, "ssm": ssm_new}
+    return out, new_state
+
+
+def mamba1_init_state(arch: ArchConfig, batch: int) -> Dict:
+    d_inner, _, N, W = mamba1_dims(arch)
+    return {"conv": jnp.zeros((batch, W - 1, d_inner), arch.dtype),
+            "ssm": jnp.zeros((batch, d_inner, N), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 mixer (scalar-per-head decay; zamba2)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(arch: ArchConfig):
+    d = arch.d_model
+    s = arch.ssm
+    d_inner = s.expand * d
+    n_heads = s.n_heads or d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.d_state, s.d_conv
+
+
+def mamba2_init(arch: ArchConfig, key) -> Params:
+    d = arch.d_model
+    d_inner, H, P, N, W = mamba2_dims(arch)
+    ks = jax.random.split(key, 4)
+    pdt = arch.param_dtype
+    # in_proj emits [x (d_inner), z (d_inner), B (N), C (N), dt (H)]
+    d_proj = 2 * d_inner + 2 * N + H
+    return {
+        "in_proj": nn.dense_init(ks[0], d, d_proj, pdt, bias=False),
+        "conv_w": (jax.random.normal(ks[1], (W, d_inner + 2 * N)) * 0.25).astype(pdt),
+        "conv_b": jnp.zeros((d_inner + 2 * N,), pdt),
+        "A_log": jnp.zeros((H,), pdt),
+        "dt_bias": jnp.zeros((H,), pdt),
+        "D": jnp.ones((H,), pdt),
+        "norm": nn.rmsnorm_init(d_inner, pdt),
+        "out_proj": nn.dense_init(ks[2], d_inner, d, pdt, bias=False),
+    }
+
+
+def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
+                 state: Optional[Dict] = None):
+    B, T, _ = h.shape
+    d_inner, H, P, N, W = mamba2_dims(arch)
+    cdt = arch.dtype
+
+    proj = nn.dense(p["in_proj"], h)
+    x, z, Bc, Cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    xbc = jnp.concatenate([x, Bc, Cc], axis=-1)
+    if state is None:
+        xbc = causal_conv1d(p["conv_w"], p["conv_b"], xbc)
+        conv_new = None
+    else:
+        conv_new, xs = conv_step(p["conv_w"], p["conv_b"], state["conv"],
+                                 xbc[:, 0])
+        xbc = xs[:, None]
+    xbc = jax.nn.silu(xbc)
+    x, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    xh = x.reshape(B, -1, H, P)
+    delta = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)  # (B,T,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (H,)
+    lam = jnp.exp(delta * A)                                        # (B,T,H)
+
+    # state (B, T, H, P, N): lam broadcast per head; beta = dt * B outer x
+    beta = (delta[..., None, None] * Bc.astype(jnp.float32)[:, :, None, None, :]
+            * xh.astype(jnp.float32)[..., None])                    # (B,T,H,P,N)
+    lam_full = lam[..., None, None]
+
+    if state is None:
+        chunk = 0 if arch.exact_hlo else arch.ssm.chunk
+        scan = lambda l, b: chunked_diag_scan(l, b, None, chunk=chunk)
+        hs = jax.vmap(scan)(jnp.broadcast_to(lam_full, beta.shape), beta)
+        ssm_new = None
+    else:
+        hs = lam_full[:, 0] * state["ssm"] + beta[:, 0]
+        ssm_new = hs
+        hs = hs[:, None]
+
+    y = jnp.einsum("bthpn,btn->bthp", hs, Cc.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, -1, d_inner).astype(cdt)
+    y = nn.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = nn.dense(p["out_proj"], y)
+    new_state = None if state is None else {"conv": conv_new, "ssm": ssm_new}
+    return out, new_state
+
+
+def mamba2_init_state(arch: ArchConfig, batch: int) -> Dict:
+    d_inner, H, P, N, W = mamba2_dims(arch)
+    return {"conv": jnp.zeros((batch, W - 1, d_inner + 2 * N), arch.dtype),
+            "ssm": jnp.zeros((batch, H, P, N), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# LrcSSM mixer — the paper's technique inside an LM block
+# ---------------------------------------------------------------------------
+
+def lrc_mixer_init(arch: ArchConfig, key) -> Params:
+    """LRC nonlinear SSM as sequence mixer: in_proj -> LRC(D=d_inner) via
+    DEER -> gated out_proj. Input features are full-rank in u (two matmuls);
+    state coupling is diagonal (the paper's design)."""
+    d = arch.d_model
+    d_inner = arch.ssm.expand * d
+    ks = jax.random.split(key, 5)
+    pdt = arch.param_dtype
+    return {
+        "in_proj": nn.dense_init(ks[0], d, 2 * d_inner, pdt, bias=False),
+        # input-dependent gate projections (computed once per sequence)
+        "a_u": nn.lecun_normal(ks[1], (d_inner, d_inner), pdt),
+        "w_u": nn.lecun_normal(ks[2], (d_inner, d_inner), pdt),
+        "b_u": jnp.zeros((d_inner,), pdt),
+        "v_u": jnp.zeros((d_inner,), pdt),
+        # self-loop (diagonal) state parameters
+        "a_x": nn.lecun_normal(ks[3], (d_inner,), pdt, fan_in=1),
+        "b_x": jnp.zeros((d_inner,), pdt),
+        "g_max_x": jnp.full((d_inner,), 0.5, pdt),
+        "k_max_x": jnp.full((d_inner,), 0.5, pdt),
+        "g_max_u": jnp.full((d_inner,), 0.5, pdt),
+        "k_max_u": jnp.full((d_inner,), 0.5, pdt),
+        "w_x": jnp.full((d_inner,), 0.5, pdt),
+        "v_x": jnp.zeros((d_inner,), pdt),
+        "g_leak": jnp.full((d_inner,), 0.1, pdt),
+        "e_leak": jnp.ones((d_inner,), pdt),
+        "out_proj": nn.dense_init(ks[4], d_inner, d, pdt, bias=False),
+    }
+
+
+def _lrc_mixer_step(p: Params, x, s_u, eps_u):
+    s_x = jax.nn.sigmoid(p["a_x"] * x + p["b_x"])
+    f = p["g_max_x"] * s_x + p["g_max_u"] * s_u + p["g_leak"]
+    z = p["k_max_x"] * s_x + p["k_max_u"] * s_u + p["g_leak"]
+    eps = p["w_x"] * x + p["v_x"] + eps_u
+    sig_e = jax.nn.sigmoid(eps)
+    lam = 1.0 - jax.nn.sigmoid(f) * sig_e
+    beta = jnp.tanh(z) * sig_e * p["e_leak"]
+    return lam * x + beta
+
+
+def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
+                    state: Optional[Dict] = None):
+    B, T, _ = h.shape
+    d_inner = arch.ssm.expand * arch.d_model
+    cdt = arch.dtype
+
+    xz = nn.dense(p["in_proj"], h)
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    # Newton-invariant input features: two matmuls, computed once.
+    s_u = jax.nn.sigmoid(u @ p["a_u"] + p["b_u"]).astype(jnp.float32)
+    eps_u = (u @ p["w_u"] + p["v_u"]).astype(jnp.float32)
+
+    if state is None:
+        cell_keys = ("a_x", "b_x", "g_max_x", "k_max_x", "g_max_u",
+                     "k_max_u", "w_x", "v_x", "g_leak", "e_leak")
+        cell_p = {k: p[k].astype(jnp.float32) for k in cell_keys}
+        step = lambda x, fs, cp: _lrc_mixer_step(cp, x, *fs)
+        x0 = jnp.zeros((d_inner,), jnp.float32)
+        dc = DeerConfig(max_iters=arch.ssm.deer_iters, mode="fixed",
+                        grad="implicit",
+                        scan_chunk=0 if arch.exact_hlo else arch.ssm.chunk,
+                        unroll=arch.exact_hlo)
+        solve = lambda su, eu: deer_solve(step, (su, eu), x0, T, dc,
+                                          params=cell_p)[0]
+        states = jax.vmap(solve)(s_u, eps_u)                # (B,T,di)
+        ssm_new = None
+    else:
+        states = _lrc_mixer_step(p, state["ssm"], s_u[:, 0], eps_u[:, 0])
+        ssm_new = states
+        states = states[:, None]
+
+    y = states.astype(cdt) * jax.nn.silu(z)
+    out = nn.dense(p["out_proj"], y)
+    return out, (None if state is None else {"ssm": ssm_new})
+
+
+def lrc_mixer_init_state(arch: ArchConfig, batch: int) -> Dict:
+    d_inner = arch.ssm.expand * arch.d_model
+    return {"ssm": jnp.zeros((batch, d_inner), jnp.float32)}
+
+
+MIXERS = {
+    "mamba1": (mamba1_init, mamba1_apply, mamba1_init_state),
+    "mamba2": (mamba2_init, mamba2_apply, mamba2_init_state),
+    "lrc": (lrc_mixer_init, lrc_mixer_apply, lrc_mixer_init_state),
+}

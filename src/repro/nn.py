@@ -1,0 +1,116 @@
+"""Minimal functional NN primitives shared framework-wide.
+
+No flax/haiku dependency: parameters are plain nested dicts of jax.Arrays,
+initialisers are explicit, and apply functions are pure. This keeps every
+layer trivially compatible with pjit/shard_map sharding rules (dict path ->
+PartitionSpec matching in distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def lecun_normal(key, shape, dtype=jnp.float32, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) * (1.0 / max(fan, 1)) ** 0.5).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / norm / mlp
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               bias: bool = True) -> Params:
+    p = {"w": lecun_normal(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # compute the reduction in fp32 for bf16 activations (numerics at scale)
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, d_in: int, d_hidden: int, d_out: int,
+             dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"fc1": dense_init(k1, d_in, d_hidden, dtype),
+            "fc2": dense_init(k2, d_hidden, d_out, dtype)}
+
+
+def mlp(p: Params, x: jax.Array, act=jax.nn.gelu) -> jax.Array:
+    return dense(p["fc2"], act(dense(p["fc1"], x)))
+
+
+def squared_relu(x: jax.Array) -> jax.Array:
+    """Nemotron-4's activation: relu(x)^2."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def cast_tree(tree, dtype):
+    """Cast floating-point leaves to the compute dtype (mixed-precision
+    entry point: master params stay fp32 in the optimizer)."""
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(cast, tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))

@@ -1,0 +1,98 @@
+"""AdamW + schedules + clipping, pure JAX (no optax).
+
+Mixed-precision discipline: compute/grads arrive in the compute dtype
+(bf16 at scale); the optimizer keeps fp32 master params and fp32 (m, v)
+moments. ZeRO-1/3 sharding of this state comes from the parameter sharding
+rules (distributed/sharding.py) — (m, v, master) inherit each parameter's
+PartitionSpec, which already spreads them over both mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any        # fp32 master copy (authoritative)
+
+
+def adamw_init(params) -> AdamWState:
+    # copy=True: master must never alias params (both are donated by the
+    # train step; aliased buffers trip "donate the same buffer twice")
+    f32 = lambda x: jnp.array(x, dtype=jnp.float32, copy=True)
+    zeros = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        master=jax.tree_util.tree_map(f32, params),
+    )
+
+
+def cosine_schedule(cfg: TrainConfig):
+    def lr_fn(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * cfg.learning_rate * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr_fn
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(cfg: TrainConfig, grads, state: AdamWState, params
+                 ) -> Tuple[Any, AdamWState, dict]:
+    """Returns (new params in original dtype, new state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_schedule(cfg)(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + 1e-8) + cfg.weight_decay * master
+        master_new = master - lr * delta
+        return m_new, v_new, master_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_ma = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    flat_p = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [ma.astype(p.dtype) for ma, p in
+         zip([o[2] for o in out], flat_p)])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v, new_master), metrics

@@ -1,0 +1,306 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e:
+
+    compute    = HLO_FLOPs            / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes_accessed   / (chips * 819e9   B/s HBM)
+    collective = collective_bytes     / (chips * n_links * 50e9 B/s link)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(). collective_bytes is
+NOT in cost_analysis: we parse the optimized HLO (compiled.as_text()) and
+sum the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op, attributing each op's bytes to the
+devices in its replica groups. MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D
+(MoE) gives the useful-compute ratio that exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.config import HW, ArchConfig, ShapeConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\((?:[^)]*)\)|[\w\[\],{}]+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|collective-permute-start)"
+    r"\b(.*)$",
+    re.MULTILINE)
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line_rest: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line_rest)
+    if m:
+        return int(m.group(2))            # [n_groups, group_size]<=[total]
+    m = _GROUPS_BRACE_RE.search(line_rest)
+    if m:
+        return m.group(1).count(",") + 1
+    return 1
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of one HLO shape string like 'bf16[128,1024]{1,0}' or a
+    tuple '(f32[2,4], u32[])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-chip WIRE bytes per collective kind from the optimized HLO.
+
+    Ring-algorithm accounting per op (group size g from replica_groups —
+    both explicit {{...}} and iota [n,g]<=[N] forms):
+      all-gather         : output * (g-1)/g      (output = gathered tensor)
+      all-reduce         : 2 * output * (g-1)/g
+      reduce-scatter     : output * (g-1)        (output = 1/g of input)
+      all-to-all         : output * (g-1)/g
+      collective-permute : output
+    """
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
+        kind = kind.replace("-start", "")
+        nbytes = _shape_bytes(shape_str)
+        g = max(_group_size(rest), 1)
+        if kind == "all-reduce":
+            wire = 2 * nbytes * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            wire = nbytes * (g - 1)
+        elif kind == "collective-permute":
+            wire = nbytes
+        else:  # all-gather, all-to-all
+            wire = nbytes * (g - 1) / max(g, 1)
+        out[kind] = out.get(kind, 0) + int(wire)
+    return out
+
+
+def model_flops(arch: ArchConfig, shape: ShapeConfig,
+                n_params: Optional[int] = None) -> float:
+    """6*N*D (training) or 2*N*D (inference fwd) with N = active params."""
+    N = n_params if n_params is not None else active_param_count(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * N * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * N * tokens        # train_step lowered (fwd+bwd)
+    tokens = shape.global_batch * 1    # decode: one token per sequence
+    return 2.0 * N * tokens
+
+
+def param_count(arch: ArchConfig) -> int:
+    """Analytic total parameter count (no allocation)."""
+    d, L, V = arch.d_model, arch.n_layers, arch.vocab
+    H, K, hd = arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
+    total = V * d                        # embed
+    if not arch.tie_embeddings:
+        total += d * V
+    if arch.frontend_dim:
+        total += arch.frontend_dim * 2 * d + 2 * d * d  # projector mlp
+    per_attn = d * (H + 2 * K) * hd + H * hd * d
+    if arch.moe is not None:
+        per_ffn = d * arch.moe.n_experts + 3 * arch.moe.n_experts * d * arch.d_ff
+    elif arch.act in ("silu", "gelu_tanh"):
+        per_ffn = 3 * d * arch.d_ff
+    else:
+        per_ffn = 2 * d * arch.d_ff
+    if arch.family == "audio":
+        enc = arch.enc_layers * (2 * per_attn / 2 + 2 * d * arch.d_ff)
+        dec = L * (2 * (d * H * hd + 2 * d * H * hd // 1) + 2 * d * arch.d_ff)
+        return int(total + enc + dec)
+    if arch.ssm is not None and arch.family in ("ssm", "hybrid"):
+        di = arch.ssm.expand * d
+        if arch.ssm.kind == "mamba1":
+            dt_rank = max(1, -(-d // 16))
+            per_ssm = (d * 2 * di + 4 * di + di * (dt_rank + 2 * arch.ssm.d_state)
+                       + dt_rank * di + 2 * di + di * d)
+        else:
+            Hh = arch.ssm.n_heads or di // arch.ssm.head_dim
+            per_ssm = (d * (2 * di + 2 * arch.ssm.d_state + Hh)
+                       + 4 * (di + 2 * arch.ssm.d_state) + 3 * Hh + di
+                       + di * d)
+        if arch.hybrid_period:
+            n_sh = 1                      # one SHARED attn block
+            return int(total + L * per_ssm + n_sh * (per_attn + per_ffn))
+        return int(total + L * per_ssm)
+    return int(total + L * (per_attn + per_ffn))
+
+
+def active_param_count(arch: ArchConfig) -> int:
+    """Active (per-token) params: MoE counts top_k of n_experts."""
+    total = param_count(arch)
+    if arch.moe is not None:
+        expert_p = arch.n_layers * 3 * arch.moe.n_experts * arch.d_model * arch.d_ff
+        active_e = expert_p * arch.moe.top_k / arch.moe.n_experts
+        return int(total - expert_p + active_e)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM-traffic model (XLA:CPU "bytes accessed" is fusion-naive and
+# overcounts by ~50x; this napkin model is the roofline memory term)
+# ---------------------------------------------------------------------------
+
+def analytic_hbm_bytes_per_chip(arch: ArchConfig, shape: ShapeConfig,
+                                chips: int) -> Dict[str, float]:
+    """Per-chip HBM bytes for one step, assuming TPU-typical fusion:
+    every major tensor is read/written once per producing/consuming fusion.
+
+    train: params 3 reads (fwd, bwd, opt) + 1 write (bf16) and fp32
+           opt-state m/v/master read+write (24 B/param);
+           activations: one (B,T,D) residual stream saved per layer
+           (remat "nothing_saveable": boundaries only) — written fwd,
+           read bwd, plus ~2x recompute internal streaming;
+           attention KV streaming: k,v re-read once per q-block sweep;
+           logits/lm_head activations at the loss.
+    decode: params read once + full KV/state cache read + small writes.
+    """
+    P = float(param_count(arch))
+    d, L, V = arch.d_model, arch.n_layers, arch.vocab
+    B, T = shape.global_batch, shape.seq_len
+    act_b = 2.0  # bf16
+
+    if shape.kind in ("train", "prefill"):
+        param_traffic = P * (2 + 2 + 2) + P * 4 * 6   # bf16 fwd/bwd/write + f32 opt rw
+        tokens = float(B) * T
+        # residual-stream checkpoints + internal recompute streams (~4 passes)
+        act_traffic = L * tokens * d * act_b * 4.0
+        if arch.ssm is not None and arch.family in ("ssm", "hybrid"):
+            di = arch.ssm.expand * d
+            # mixer streams: in_proj outs, conv, scan lam/beta/state chunks
+            act_traffic += L * tokens * di * act_b * 6.0
+        kv_heads = max(arch.n_kv_heads, 0)
+        hd = arch.resolved_head_dim
+        n_attn = (L if arch.ssm is None else
+                  (L // arch.hybrid_period if arch.hybrid_period else 0))
+        if n_attn and kv_heads:
+            kv_chunk = 1024.0
+            sweeps = max(T / kv_chunk / 2.0, 1.0)   # causal ~half
+            att_traffic = n_attn * tokens * kv_heads * hd * act_b * 2 * sweeps
+        else:
+            att_traffic = 0.0
+        loss_traffic = tokens * V * act_b           # logits write (chunked read~write)
+        total = param_traffic + act_traffic + att_traffic + loss_traffic
+        return {"total": total / chips,
+                "params": param_traffic / chips,
+                "activations": act_traffic / chips,
+                "attention_kv": att_traffic / chips,
+                "loss": loss_traffic / chips}
+
+    # decode: one token
+    param_traffic = P * 2.0
+    kv_heads = max(arch.n_kv_heads, 0)
+    hd = arch.resolved_head_dim
+    cache_traffic = 0.0
+    if arch.family == "audio":
+        n_full, n_local, window = L, 0, 0
+    elif arch.window_pattern is not None:
+        per = arch.window_pattern[1]
+        n_full = L // (per + 1)
+        n_local = L - n_full
+        window = arch.window_pattern[0]
+    elif arch.ssm is not None:
+        n_full = (L // arch.hybrid_period) if arch.hybrid_period else 0
+        n_local, window = 0, 0
+        di = arch.ssm.expand * d
+        N = arch.ssm.d_state
+        cache_traffic += L * float(B) * di * N * 4 * 2   # ssm state rw f32
+    else:
+        n_full, n_local, window = L, 0, 0
+    if kv_heads:
+        cache_traffic += n_full * float(B) * T * kv_heads * hd * act_b * 2
+        if n_local:
+            cache_traffic += n_local * float(B) * min(T, window) * kv_heads * hd * act_b * 2
+    logits_traffic = float(B) * V * act_b
+    total = param_traffic + cache_traffic + logits_traffic
+    return {"total": total / chips, "params": param_traffic / chips,
+            "kv_cache": cache_traffic / chips, "logits": logits_traffic / chips}
+
+
+def analyze_compiled(arch: ArchConfig, shape: ShapeConfig, mesh,
+                     lowered, compiled) -> Dict[str, Any]:
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                                  getattr(mem, "temp_size_in_bytes", 0)),
+        }
+    except Exception:
+        mem_info = {}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)     # already wire-factored
+    coll_wire = sum(coll.values())
+
+    # NOTE on per-chip semantics: cost_analysis flops on an SPMD module are
+    # per-program (per-device) in XLA:CPU. The assignment's collective term
+    # is collective_bytes / (chips * link_bw); with per-chip bytes the chip
+    # factor cancels — we use the conservative single-link 50 GB/s figure
+    # (v5e has 4 ICI links; best case divides this by 4).
+    compute_s = flops / HW.peak_flops_bf16
+    memory_s = bytes_accessed / HW.hbm_bw
+    collective_s = coll_wire / HW.ici_bw
+
+    mf = model_flops(arch, shape)
+    useful_ratio = mf / max(flops * chips, 1.0)
+
+    amem = analytic_hbm_bytes_per_chip(arch, shape, chips)
+    memory_s_analytic = amem["total"] / HW.hbm_bw
+
+    dom = max((("compute", compute_s), ("memory", memory_s_analytic),
+               ("collective", collective_s)), key=lambda kv: kv[1])
+
+    return {
+        "arch": arch.name, "shape": shape.name,
+        "mesh": dict(mesh.shape),
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "analytic_hbm_bytes_per_chip": amem["total"],
+        "analytic_hbm_breakdown": amem,
+        "collective_bytes_per_chip": coll_wire,
+        "collective_breakdown": coll,
+        "compute_s": compute_s,
+        "memory_s_xla": memory_s,
+        "memory_s": memory_s_analytic,
+        "collective_s": collective_s,
+        "dominant": dom[0],
+        "model_flops": mf,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_bound_s": max(compute_s, memory_s_analytic, collective_s),
+        **mem_info,
+    }

@@ -1,0 +1,203 @@
+"""DEER/ELK solvers: convergence to the sequential oracle, gradient parity,
+iteration counts, stability properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deer import DeerConfig, deer_residual, deer_solve
+from repro.core.elk import ElkConfig, elk_solve, kalman_smoother_parallel
+from repro.core.lrc import (LrcCellConfig, init_lrc_params, input_features,
+                            lrc_sequential, lrc_step, lrc_step_and_diag_jac)
+from repro.core import variants
+
+
+def _make_lrc(T=48, n=6, D=12, seed=0, **kw):
+    cfg = LrcCellConfig(d_input=n, d_state=D, **kw)
+    key = jax.random.PRNGKey(seed)
+    p = init_lrc_params(cfg, key)
+    u = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, n))
+    return cfg, p, u
+
+
+def test_diag_jacobian_is_exact():
+    """The jvp-extracted diagonal equals the full autodiff Jacobian diagonal,
+    and the off-diagonals are exactly zero (diagonal BY DESIGN — Sec. 3.1)."""
+    cfg, p, u = _make_lrc(T=1, D=6)
+    s_u, eps_u = input_features(p, u)
+    x = jax.random.normal(jax.random.PRNGKey(2), (6,))
+    step = lambda xx: lrc_step(p, cfg, xx, s_u[0], eps_u[0])
+    J = jax.jacfwd(step)(x)
+    _, diag = lrc_step_and_diag_jac(p, cfg, x, s_u[0], eps_u[0])
+    np.testing.assert_allclose(np.diag(J), diag, rtol=1e-5, atol=1e-6)
+    off = J - np.diag(np.diag(J))
+    np.testing.assert_allclose(off, np.zeros_like(off), atol=1e-7)
+
+
+@pytest.mark.parametrize("mode", ["fixed", "tol"])
+def test_deer_converges_to_sequential(mode):
+    cfg, p, u = _make_lrc()
+    want = lrc_sequential(p, cfg, u)
+    s_u, eps_u = input_features(p, u)
+    step = lambda x, fs: lrc_step(p, cfg, x, *fs)
+    x0 = jnp.zeros((cfg.d_state,))
+    dc = DeerConfig(max_iters=25, tol=1e-9, mode=mode, grad="unroll")
+    got, iters = deer_solve(step, (s_u, eps_u), x0, u.shape[0], dc)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    assert deer_residual(step, (s_u, eps_u), x0, got) < 1e-4
+    if mode == "tol":
+        assert int(iters) < 25, "should converge well before the cap"
+
+
+def test_deer_long_sequence():
+    cfg, p, u = _make_lrc(T=2048, D=8)
+    want = lrc_sequential(p, cfg, u)
+    s_u, eps_u = input_features(p, u)
+    step = lambda x, fs: lrc_step(p, cfg, x, *fs)
+    x0 = jnp.zeros((cfg.d_state,))
+    got, _ = deer_solve(step, (s_u, eps_u), x0, 2048,
+                        DeerConfig(max_iters=30, mode="tol", grad="unroll",
+                                   tol=1e-8))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_deer_rho_clamp_contractive():
+    """With the rho clamp (Appendix A.1), |lam| <= rho so trajectories from
+    two inits contract at rate rho^t (Lemma 1)."""
+    cfg, p, u = _make_lrc(T=64, rho=0.9)
+    xa = lrc_sequential(p, cfg, u, x0=jnp.full((cfg.d_state,), 2.0))
+    xb = lrc_sequential(p, cfg, u, x0=jnp.full((cfg.d_state,), -2.0))
+    d = jnp.linalg.norm(xa - xb, axis=-1)
+    assert d[-1] <= (0.9 ** 32) * d[0] + 1e-5
+
+
+def test_gradient_stability_theorem1():
+    """|grad_{x0} L| <= rho^T |grad_{x_T} L| for loss on final state."""
+    cfg, p, u = _make_lrc(T=40, rho=0.95)
+
+    def loss(x0):
+        xs = lrc_sequential(p, cfg, u, x0=x0)
+        return jnp.sum(xs[-1])
+
+    g = jax.grad(loss)(jnp.zeros((cfg.d_state,)))
+    gT = jnp.ones((cfg.d_state,))  # grad at x_T of sum(x_T)
+    assert jnp.linalg.norm(g) <= (0.95 ** 40) * jnp.linalg.norm(gT) + 1e-6
+
+
+def test_implicit_grad_matches_unrolled():
+    """custom_vjp (IFT adjoint scan) == BPTT through converged iterations."""
+    cfg, p, u = _make_lrc(T=32, D=8)
+    x0 = jnp.zeros((cfg.d_state,))
+
+    def run(mode, s_u, eps_u):
+        step = lambda x, fs: lrc_step(p, cfg, x, *fs)
+        dc = DeerConfig(max_iters=30, mode="fixed", grad=mode)
+        states, _ = deer_solve(step, (s_u, eps_u), x0, 32, dc)
+        return jnp.sum(states ** 2)
+
+    s_u, eps_u = input_features(p, u)
+    g_imp = jax.grad(run, argnums=(1, 2))("implicit", s_u, eps_u)
+    g_unr = jax.grad(run, argnums=(1, 2))("unroll", s_u, eps_u)
+    for a, b in zip(g_imp, g_unr):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+
+
+def test_implicit_grad_matches_sequential_bptt():
+    """Implicit grads == classic BPTT through the sequential rollout —
+    the strongest exactness check for the adjoint parallel scan."""
+    cfg, p, u = _make_lrc(T=24, D=6)
+    x0 = jnp.zeros((cfg.d_state,))
+
+    def loss_seq(u_):
+        return jnp.sum(lrc_sequential(p, cfg, u_) ** 2)
+
+    def loss_deer(u_):
+        s_u, eps_u = input_features(p, u_)
+        step = lambda x, fs: lrc_step(p, cfg, x, *fs)
+        st, _ = deer_solve(step, (s_u, eps_u), x0, 24,
+                           DeerConfig(max_iters=40, grad="implicit"))
+        return jnp.sum(st ** 2)
+
+    np.testing.assert_allclose(jax.grad(loss_deer)(u), jax.grad(loss_seq)(u),
+                               rtol=5e-3, atol=5e-4)
+
+
+@pytest.mark.parametrize("kind", ["gru", "mgu", "lstm", "stc"])
+def test_variant_cells_deer_match_sequential(kind):
+    """Appendix D: the generalised diagonal design parallelises every cell."""
+    ccfg = variants.CellConfig(d_input=5, d_state=9)
+    key = jax.random.PRNGKey(7)
+    init, feat_fn, step_fn = variants.CELLS[kind]
+    p = init(ccfg, key)
+    u = jax.random.normal(jax.random.PRNGKey(8), (40, 5))
+    want = variants.sequential(kind, p, ccfg, u)
+    feats = feat_fn(p, u)
+    step = lambda x, fs: step_fn(p, ccfg, x, *fs)
+    x0 = jnp.zeros((9,))
+    got, _ = deer_solve(step, feats, x0, 40,
+                        DeerConfig(max_iters=40, mode="tol", tol=1e-9,
+                                   grad="unroll"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_kalman_smoother_uninformative_obs_equals_scan():
+    """mu -> 0 (obs var -> inf): ELK's smoother must reproduce the exact
+    linear-recurrence solution (pure Newton/DEER step)."""
+    T, D = 33, 4
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    F = jax.random.uniform(k1, (T, D)) * 0.9
+    c = jax.random.normal(k2, (T, D))
+    y = jnp.zeros((T, D))
+    m0 = jax.random.normal(k3, (D,))
+    from repro.core.scan import diag_linear_scan_seq
+    want = diag_linear_scan_seq(F, c, m0)
+    ms, _ = kalman_smoother_parallel(F, c, 1.0, y, 1e12, m0,
+                                     jnp.zeros((D,)) + 1e-9)
+    np.testing.assert_allclose(ms, want, rtol=1e-3, atol=1e-3)
+
+
+def test_kalman_smoother_matches_sequential_reference():
+    """Parallel associative-scan smoother == classic sequential RTS."""
+    T, D = 21, 3
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    F = jax.random.uniform(ks[0], (T, D)) * 0.8 + 0.1
+    c = jax.random.normal(ks[1], (T, D)) * 0.3
+    y = jax.random.normal(ks[2], (T, D))
+    q, r = 0.7, 1.3
+    m0 = jax.random.normal(ks[3], (D,))
+    P0 = jnp.abs(jax.random.normal(ks[4], (D,))) + 0.5
+
+    # sequential Kalman filter + RTS smoother (numpy reference)
+    Fn, cn, yn = map(np.asarray, (F, c, y))
+    m_f = np.zeros((T, D)); P_f = np.zeros((T, D))
+    m, P = np.asarray(m0), np.asarray(P0)
+    for t in range(T):
+        mp = Fn[t] * m + cn[t]
+        Pp = Fn[t] ** 2 * P + q
+        K = Pp / (Pp + r)
+        m = mp + K * (yn[t] - mp)
+        P = (1 - K) * Pp
+        m_f[t], P_f[t] = m, P
+    ms = np.zeros((T, D)); Ps = np.zeros((T, D))
+    ms[-1], Ps[-1] = m_f[-1], P_f[-1]
+    for t in range(T - 2, -1, -1):
+        Pp = Fn[t + 1] ** 2 * P_f[t] + q
+        G = P_f[t] * Fn[t + 1] / Pp
+        ms[t] = m_f[t] + G * (ms[t + 1] - (Fn[t + 1] * m_f[t] + cn[t + 1]))
+        Ps[t] = P_f[t] + G ** 2 * (Ps[t + 1] - Pp)
+
+    got_m, got_P = kalman_smoother_parallel(F, c, q, y, r, m0, P0)
+    np.testing.assert_allclose(got_m, ms, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_P, Ps, rtol=1e-4, atol=1e-4)
+
+
+def test_elk_converges_to_sequential():
+    cfg, p, u = _make_lrc(T=40, D=8)
+    want = lrc_sequential(p, cfg, u)
+    s_u, eps_u = input_features(p, u)
+    step = lambda x, fs: lrc_step(p, cfg, x, *fs)
+    x0 = jnp.zeros((cfg.d_state,))
+    got, _ = elk_solve(step, (s_u, eps_u), x0, 40,
+                       ElkConfig(max_iters=60, mode="tol", tol=1e-10,
+                                 trust_mu=0.05))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

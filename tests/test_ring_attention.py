@@ -1,0 +1,110 @@
+"""Ring attention == local attention (subprocess, 8 forced devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_sharded_decode_attention_matches_reference():
+    body = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.models.attention import (decode_attention,
+                                            sharded_decode_attention,
+                                            update_kv_cache)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, S, H, K, hd = 2, 32, 4, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        q = jax.random.normal(ks[0], (B, 1, H, hd))
+        kc = jax.random.normal(ks[1], (B, S, K, hd))
+        vc = jax.random.normal(ks[2], (B, S, K, hd))
+        kn = jax.random.normal(ks[3], (B, 1, K, hd))
+        vn = jax.random.normal(ks[4], (B, 1, K, hd))
+        pos = 17
+        with mesh:
+            got, kc2, vc2 = jax.jit(lambda *a: sharded_decode_attention(
+                *a, mesh=mesh))(q, kc, vc, kn, vn,
+                                jnp.asarray(pos), jnp.asarray(pos + 1))
+        kc_ref, vc_ref = update_kv_cache(kc, vc, kn, vn, pos)
+        want = decode_attention(q, kc_ref, vc_ref, pos + 1)
+        err = float(jnp.max(jnp.abs(got - want)))
+        cerr = float(jnp.max(jnp.abs(kc2 - kc_ref)))
+        print(json.dumps({"err": err, "cache_err": cerr}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["err"] < 1e-4 and out["cache_err"] < 1e-6, out
+
+
+def test_local_moe_matches_gather_dispatch():
+    """shard_map local MoE (replicated experts, tokens sharded over
+    data x model) == single-device gather dispatch."""
+    body = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.config import ArchConfig, MoEConfig
+        from repro.models import moe as moe_lib
+        from repro.distributed import sharding as shd
+        arch = ArchConfig(name="t", family="moe", n_layers=1, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=16, vocab=128,
+                          moe=MoEConfig(n_experts=4, top_k=2,
+                                        capacity_factor=8.0))
+        p = moe_lib.moe_init(arch, jax.random.PRNGKey(0))
+        h = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+        want = moe_lib.moe_apply_gather(p, arch, h)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with shd.use_mesh(mesh):
+            got = jax.jit(lambda pp, hh: moe_lib.moe_apply_local(
+                pp, arch, hh))(p, h)
+        err = float(jnp.max(jnp.abs(got - want)))
+        print(json.dumps({"err": err}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    # capacity is per local T-chunk under the sharded dispatch: with ample
+    # capacity_factor the results are identical
+    assert out["err"] < 1e-4, out
+
+
+def test_ring_attention_matches_reference():
+    body = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.models.attention import attention, ring_attention
+        mesh = jax.make_mesh((8,), ("model",))
+        B, T, H, hd = 2, 64, 4, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, T, H, hd))
+        k = jax.random.normal(ks[1], (B, T, H, hd))
+        v = jax.random.normal(ks[2], (B, T, H, hd))
+        with mesh:
+            got = jax.jit(lambda a,b,c: ring_attention(
+                a,b,c, mesh=mesh, causal=True))(q, k, v)
+        want = attention(q, k, v, causal=True)
+        err = float(jnp.max(jnp.abs(got - want)))
+        print(json.dumps({"err": err}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["err"] < 1e-4, out

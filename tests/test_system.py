@@ -1,0 +1,127 @@
+"""End-to-end system behaviour tests for the paper's system.
+
+The full pipeline: data generator -> Figure-1 LrcSSM classifier ->
+exact-DEER parallel solve -> implicit-diff gradients -> AdamW -> accuracy;
+plus solver interchangeability (deer == elk == sequential at the model
+level) and the LM integration of the technique.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.configs.lrcssm_uea import ablation_config
+from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+from repro.core.deer import DeerConfig
+from repro.data.pipeline import UEALikeSource
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def _train(cfg, steps=120, lr=1e-2, seed=0, seq_len=256, batch=16):
+    src = UEALikeSource("scp1", batch=batch, seed=seed, seq_len=seq_len)
+    params = init_lrcssm(cfg, jax.random.PRNGKey(seed))
+    tcfg = TrainConfig(learning_rate=lr, warmup_steps=10, total_steps=steps)
+    opt = adamw_init(params)
+
+    def loss_fn(p, x, y):
+        logits = apply_lrcssm(cfg, p, x)
+        return jnp.mean(jax.nn.logsumexp(logits, -1)
+                        - jnp.take_along_axis(logits, y[:, None], -1)[:, 0])
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o, _ = adamw_update(tcfg, g, o, p)
+        return p, o, l
+
+    losses = []
+    for s in range(steps):
+        x, y = src.batch_at(s)
+        params, opt, l = step(params, opt, x, y)
+        losses.append(float(l))
+    correct = tot = 0
+    for s in range(3):
+        x, y = src.batch_at(10_000 + s)
+        pred = jnp.argmax(apply_lrcssm(cfg, params, x), -1)
+        correct += int(jnp.sum(pred == y)); tot += len(y)
+    return correct / tot, losses
+
+
+def test_lrcssm_learns_long_horizon_classification():
+    """The headline system behaviour: the DEER-parallel LrcSSM classifier
+    learns a long-horizon task end to end (loss falls, acc >> chance)."""
+    cfg = ablation_config("lrc", d_input=6, n_classes=2, d_hidden=32,
+                          d_state=32, n_blocks=2)
+    acc, losses = _train(cfg)
+    assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
+    assert acc > 0.8, acc
+
+
+def test_solvers_agree_at_model_level():
+    """deer(fixed) vs sequential oracle produce identical logits on the
+    same parameters — exactness end to end through the block stack."""
+    base = ablation_config("lrc", d_input=6, n_classes=2, d_hidden=16,
+                           d_state=16, n_blocks=2,
+                           deer=DeerConfig(max_iters=25, mode="fixed",
+                                           grad="unroll"))
+    p = init_lrcssm(base, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 6))
+    logits_deer = apply_lrcssm(base, p, x)
+    seq = dataclasses.replace(base, solver="sequential")
+    logits_seq = apply_lrcssm(seq, p, x)
+    np.testing.assert_allclose(np.asarray(logits_deer),
+                               np.asarray(logits_seq), rtol=1e-3, atol=1e-4)
+    elk = dataclasses.replace(base, solver="elk")
+    logits_elk = apply_lrcssm(elk, p, x)
+    np.testing.assert_allclose(np.asarray(logits_elk),
+                               np.asarray(logits_seq), rtol=2e-2, atol=2e-2)
+
+
+def test_implicit_gradient_trains_equivalently():
+    """grad='implicit' (adjoint scan, O(TD) memory) trains as well as
+    unrolled BPTT on the same data/seed."""
+    common = dict(d_input=6, n_classes=2, d_hidden=16, d_state=16,
+                  n_blocks=1)
+    cfg_imp = ablation_config("lrc", **common,
+                              deer=DeerConfig(max_iters=12, mode="fixed",
+                                              grad="implicit"))
+    cfg_unr = ablation_config("lrc", **common,
+                              deer=DeerConfig(max_iters=12, mode="fixed",
+                                              grad="unroll"))
+    acc_i, li = _train(cfg_imp, steps=80)
+    acc_u, lu = _train(cfg_unr, steps=80)
+    assert abs(li[-1] - lu[-1]) < 0.15, (li[-1], lu[-1])
+
+
+def test_lm_trains_on_induction_task():
+    """LM integration: a small LM with the paper's LrcSSM mixer learns the
+    copy/induction pattern (loss falls and stays finite)."""
+    from repro.config import SSMConfig
+    from repro.configs.falcon_mamba_7b import REDUCED
+    from repro.data.pipeline import TokenTaskSource
+    from repro.models import build_model
+
+    arch = dataclasses.replace(
+        REDUCED, dtype=jnp.float32,
+        ssm=SSMConfig(kind="lrc", expand=2, chunk=16, deer_iters=6))
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=10, grad_clip=1.0)
+    opt = adamw_init(params)
+    src = TokenTaskSource(vocab=arch.vocab, seq_len=64, batch=8, seed=0)
+
+    @jax.jit
+    def step(p, o, batch):
+        l, g = jax.value_and_grad(model.loss)(p, batch)
+        p, o, _ = adamw_update(tcfg, g, o, p)
+        return p, o, l
+
+    losses = []
+    for s in range(60):
+        params, opt, l = step(params, opt, src.batch_at(s))
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.9
+    assert np.isfinite(losses).all()
