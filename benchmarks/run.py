@@ -15,7 +15,7 @@ def main() -> None:
                     help="run benchmarks whose name contains this substring")
     args = ap.parse_args()
 
-    from benchmarks import ablations, paper_tables
+    from benchmarks import ablations, paper_tables, seq_parallel
     benches = [
         paper_tables.table1_accuracy,
         paper_tables.table2_variants,
@@ -27,6 +27,7 @@ def main() -> None:
         ablations.table10_state_dependency,
         ablations.table11_complex_params,
         ablations.kernels_micro,
+        seq_parallel.bench_seq_parallel,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,113 @@
+"""Sequence-parallel DEER benchmark: replicated vs time-sharded Newton solve.
+
+Measures, on a forced 8-host-device mesh (same substrate as the distributed
+tests), for the LrcSSM cell:
+
+  * tokens/sec of the jitted solve (replicated ``deer_solve`` vs
+    ``sharded_deer_solve`` with the trajectory sharded over the mesh);
+  * per-device peak/temp memory from the compiled executable's
+    ``memory_analysis()`` — the O(T*D) vs O(T/P*D) trajectory-residency
+    claim, measured rather than asserted.
+
+Because the forced device count must be set before jax initialises, the
+``bench_seq_parallel`` entry registered in benchmarks/run.py re-execs this
+module in a subprocess (the shared pattern from tests/conftest.py) and
+relays its CSV rows.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.seq_parallel --inner
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+N_DEV = 8
+T, B, D = 4096, 4, 64
+ITERS = 12
+
+
+def _inner() -> None:
+    """Runs with XLA_FLAGS already set (subprocess entry)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.deer import DeerConfig, deer_solve
+    from repro.core.deer_sharded import sharded_deer_solve
+    from repro.core.lrc import (LrcCellConfig, init_lrc_params,
+                                input_features, lrc_step)
+
+    mesh = jax.make_mesh((N_DEV,), ("data",))
+    cfg = LrcCellConfig(d_input=D, d_state=D)
+    p = init_lrc_params(cfg, jax.random.PRNGKey(0))
+    u = jax.random.normal(jax.random.PRNGKey(1), (T, B, D))
+    s_u, eps_u = input_features(p, u)
+    step = lambda x, fs, cp: lrc_step(cp, cfg, x, *fs)
+    x0 = jnp.zeros((B, D))
+    dc = DeerConfig(max_iters=ITERS, mode="fixed", grad="unroll")
+
+    def replicated(su, eu, pp):
+        return deer_solve(step, (su, eu), x0, T, dc, params=pp)[0]
+
+    def sharded(su, eu, pp):
+        return sharded_deer_solve(step, (su, eu), x0, T, dc, mesh=mesh,
+                                  seq_axis="data", params=pp)[0]
+
+    def measure(name, fn):
+        with mesh:
+            jitted = jax.jit(fn)
+            lowered = jitted.lower(s_u, eps_u, p)
+            compiled = lowered.compile()
+            mem = "mem_na"
+            try:
+                ma = compiled.memory_analysis()
+                if ma is not None:
+                    mem = (f"temp_bytes={int(ma.temp_size_in_bytes)}"
+                           f";arg_bytes={int(ma.argument_size_in_bytes)}")
+            except Exception:
+                pass
+            jax.block_until_ready(jitted(s_u, eps_u, p))   # warmup
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(jitted(s_u, eps_u, p))
+                ts.append(time.perf_counter() - t0)
+        us = float(np.median(ts) * 1e6)
+        tok_s = T * B / (us * 1e-6)
+        print(f"{name},{us:.1f},tokens_per_s={tok_s:.0f};{mem}", flush=True)
+
+    measure(f"deer_replicated_T{T}", replicated)
+    measure(f"deer_seq_sharded_T{T}_P{N_DEV}", sharded)
+
+
+def bench_seq_parallel() -> None:
+    """benchmarks/run.py entry: re-exec with forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-m", "benchmarks.seq_parallel",
+                        "--inner"],
+                       capture_output=True, text=True, timeout=1800, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    sys.stderr.write(r.stderr)
+    if r.returncode != 0:
+        raise RuntimeError(f"seq_parallel subprocess failed:\n{r.stdout}")
+    for line in r.stdout.strip().splitlines():
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    if "--inner" in sys.argv:
+        # unconditional: a pre-set XLA_FLAGS (e.g. a leaked debug flag)
+        # would otherwise leave device_count at 1 and break make_mesh
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={N_DEV}")
+        _inner()
+    else:
+        bench_seq_parallel()

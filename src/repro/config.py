@@ -41,6 +41,11 @@ class SSMConfig:
     head_dim: int = 64            # mamba2
     chunk: int = 256              # scan chunk (VMEM schedule)
     deer_iters: int = 8           # lrc mixer Newton iterations (fixed mode)
+    # sequence-parallel DEER for the lrc mixer: shard the Newton solve's
+    # time axis over the "model" mesh axis (core/deer_sharded.py) instead
+    # of replicating the (T, d_inner) trajectory per device. Falls back to
+    # the replicated solver when no mesh / non-divisible T.
+    seq_shard: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,6 +11,11 @@ The SSM core is selectable: "lrc" (the paper's model), "stc", "gru", "mgu",
 "lstm" (Appendix D variants) — all solved with the same exact-diagonal DEER
 solver, or "elk" solver, or "sequential" (oracle; O(T) depth) for parity
 tests and the runtime benchmark (Table 6 comparison).
+
+Long-context scaling: with ``seq_axis`` set (and an active mesh), the DEER
+solve itself runs sequence-parallel (core/deer_sharded.py) — the trajectory
+is sharded over the mesh for the whole Newton iteration, so per-device
+memory is O(T/P * D) instead of O(T * D).
 """
 from __future__ import annotations
 
@@ -50,6 +55,11 @@ class LrcSSMConfig:
     pool: str = "mean"           # mean | last  (classification readout)
     param_dtype: Any = jnp.float32
     include_time: bool = False   # append normalised time channel
+    # sequence-parallel DEER (core/deer_sharded.py): shard the time axis of
+    # the Newton solve over this mesh axis. None = replicated solver. Takes
+    # effect only for solver="deer" under an active mesh containing the
+    # axis; otherwise falls back to the vmapped replicated path.
+    seq_axis: Optional[str] = None
 
 
 def _cell_cfg(cfg: LrcSSMConfig):
@@ -125,6 +135,64 @@ def _solve_cell(cfg: LrcSSMConfig, cell_p: Params, h: jax.Array
     return states, iters
 
 
+def _seq_shard_mesh(cfg: LrcSSMConfig, T: int):
+    """The active mesh when the sequence-parallel solve applies, else None."""
+    if cfg.seq_axis is None or cfg.solver != "deer":
+        return None
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if (mesh is None or cfg.seq_axis not in mesh.axis_names
+            or T % mesh.shape[cfg.seq_axis] != 0):
+        return None
+    return mesh
+
+
+def _solve_cell_seq_sharded(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
+                            mesh) -> Tuple[jax.Array, jax.Array]:
+    """Batched sequence-parallel solve: hn (B, T, H) -> states (B, T, S).
+
+    The batch rides along in the trailing dims ((T, B, ·) layout — every
+    cell step is elementwise/matmul-on-last-dim, so the solver is oblivious
+    to it), and the TIME axis is sharded over cfg.seq_axis for the whole
+    Newton iteration (per-device trajectory (T/P, B, S))."""
+    from repro.core.deer_sharded import sharded_deer_solve
+    ccfg = _cell_cfg(cfg)
+    hT = jnp.swapaxes(hn, 0, 1)                       # (T, B, H)
+    T, B = hT.shape[0], hT.shape[1]
+
+    if cfg.cell == "lrc":
+        feats = input_features(cell_p, hT)
+        step = lambda x, fs, cp: lrc_step(cp, ccfg, x, *fs)
+        x0 = jnp.zeros((B, cfg.d_state),
+                       ccfg.state_dtype if cfg.complex_state_params
+                       else hn.dtype)
+    else:
+        _, feat_fn, step_fn = variants.CELLS[cfg.cell]
+        feats = feat_fn(cell_p, hT)
+        step = lambda x, fs, cp: step_fn(cp, ccfg, x, *fs)
+        x0 = jnp.zeros((B, cfg.d_state), hn.dtype)
+
+    states, iters = sharded_deer_solve(step, feats, x0, T, cfg.deer,
+                                       mesh=mesh, seq_axis=cfg.seq_axis,
+                                       params=cell_p)
+    if cfg.complex_state_params:
+        states = states.real
+    if cfg.cell == "lstm":
+        states = variants.lstm_readout(cell_p, states, feats[3])
+    return jnp.swapaxes(states, 0, 1), iters
+
+
+def _solve_block(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Solve one block's cell over the batch: (B, T, H) -> ((B, T, S), iters
+    scalar). Dispatches to the sequence-parallel solver when configured."""
+    mesh = _seq_shard_mesh(cfg, hn.shape[1])
+    if mesh is not None:
+        return _solve_cell_seq_sharded(cfg, cell_p, hn, mesh)
+    states, iters = jax.vmap(lambda seq: _solve_cell(cfg, cell_p, seq))(hn)
+    return states, jnp.max(iters)
+
+
 def apply_lrcssm(cfg: LrcSSMConfig, p: Params, x: jax.Array,
                  return_iters: bool = False):
     """Forward pass. x: (B, T, p) -> logits (B, n_classes)."""
@@ -140,8 +208,8 @@ def apply_lrcssm(cfg: LrcSSMConfig, p: Params, x: jax.Array,
     iters_acc = []
     for blk in p["blocks"]:
         hn = nn.layernorm(blk["norm"], h)
-        states, iters = jax.vmap(lambda seq: _solve_cell(cfg, blk["cell"], seq))(hn)
-        iters_acc.append(jnp.max(iters))
+        states, iters = _solve_block(cfg, blk["cell"], hn)
+        iters_acc.append(iters)
         h = h + nn.mlp(blk["mlp"], states)
 
     h = nn.layernorm(p["post_norm"], h)
@@ -162,7 +230,7 @@ def apply_lrcssm_regression(cfg: LrcSSMConfig, p: Params, x: jax.Array):
     h = nn.layernorm(p["pre_norm"], h)
     for blk in p["blocks"]:
         hn = nn.layernorm(blk["norm"], h)
-        states, _ = jax.vmap(lambda seq: _solve_cell(cfg, blk["cell"], seq))(hn)
+        states, _ = _solve_block(cfg, blk["cell"], hn)
         h = h + nn.mlp(blk["mlp"], states)
     h = nn.layernorm(p["post_norm"], h)
     return nn.dense(p["decoder"], jnp.mean(h, axis=1))[..., 0]

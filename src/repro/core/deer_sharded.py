@@ -1,0 +1,300 @@
+"""Sequence-parallel DEER Newton solver (solver-level sequence parallelism).
+
+``core/deer.py`` parallelises each Newton iteration's *linear solve* over
+time but keeps the full (T, D) trajectory replicated on every device —
+capping context length at single-device memory. This module pushes the
+sharding up into the Newton iteration itself (the ParaRNN / predictability-
+parallelisation construction): the time axis lives sharded over a mesh axis
+for the ENTIRE solve, so per-device trajectory memory is O(T/P * D) and the
+collective volume per iteration is O(P * D) — independent of T.
+
+Per Newton iteration, on each time shard (all inside one shard_map):
+
+  1. boundary exchange — the shard's left-edge predecessor state
+     x_{t0 - 1} arrives from the left neighbour with ONE ppermute of a
+     single (D,) state (shard 0 substitutes x0);
+  2. local linearisation — one jvp of the elementwise step over the local
+     (T/P, D) slice gives the exact diagonal Jacobian J and affine term b
+     (same algebra as core/deer.py, no approximation);
+  3. distributed linear solve — local associative scan + all-gather of the
+     P per-shard (lam_prod, b_total) summaries + exclusive-prefix fixup
+     (``core/scan.sharded_scan_local``, the same body the scan-level
+     primitive uses);
+  4. convergence (``tol`` mode) — the global residual max|x_new - x| is the
+     pmax of the per-shard residuals, so every shard runs the identical
+     while_loop trip count.
+
+Differentiation mirrors core/deer.py:
+  * ``unroll``   — differentiate straight through the shard_map'd Newton
+                   loop (fixed mode; collective transposes are handled by
+                   jax: all_gather <-> psum_scatter, ppermute <-> inverse).
+  * ``implicit`` — custom_vjp via the implicit function theorem; the adjoint
+                   g_t = gbar_t + J_{t+1} g_{t+1} is a REVERSED diagonal
+                   recurrence solved with the mirrored suffix-summary
+                   sharded scan, plus one local vjp. Parameter cotangents
+                   psum over the sequence axis; x0's cotangent comes from
+                   shard 0 only.
+
+Fallback: when T is not divisible by the shard count (or the axis is absent
+from the mesh) the replicated ``deer_solve`` is used — same contract, no
+caller-side branching.
+
+All collectives resolve through distributed/compat.py (version-portable
+shard_map: jax 0.4.x through current).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.deer import DeerConfig, StepFn, deer_solve
+from repro.core.scan import sharded_scan_local
+from repro.distributed import compat
+
+
+# ---------------------------------------------------------------------------
+# boundary exchange
+# ---------------------------------------------------------------------------
+
+def _left_boundary(states_s: jax.Array, x0: jax.Array, seq_axis: str,
+                   n_shards: int) -> jax.Array:
+    """State just left of this shard: neighbour's last state, or x0 on
+    shard 0. One (D,)-sized ppermute."""
+    idx = compat.axis_index(seq_axis)
+    if n_shards == 1:
+        return jnp.asarray(x0, states_s.dtype)
+    prev_last = compat.ppermute(
+        states_s[-1], seq_axis,
+        [(i, i + 1) for i in range(n_shards - 1)])
+    return jnp.where(idx == 0, jnp.asarray(x0, states_s.dtype), prev_last)
+
+
+def _right_jac_first(jac_s: jax.Array, seq_axis: str,
+                     n_shards: int) -> jax.Array:
+    """J at the first step of the right neighbour (zero past the end) —
+    the boundary element of the shifted-left Jacobian the adjoint needs."""
+    idx = compat.axis_index(seq_axis)
+    if n_shards == 1:
+        return jnp.zeros_like(jac_s[0])
+    nxt = compat.ppermute(
+        jac_s[0], seq_axis,
+        [(i + 1, i) for i in range(n_shards - 1)])
+    return jnp.where(idx == n_shards - 1, jnp.zeros_like(nxt), nxt)
+
+
+# ---------------------------------------------------------------------------
+# one Newton iteration on a time shard
+# ---------------------------------------------------------------------------
+
+def _local_newton_iteration(step_fn, feats_s, params, x0, states_s,
+                            cfg: DeerConfig, seq_axis: str, n_shards: int):
+    left = _left_boundary(states_s, x0, seq_axis, n_shards)
+    shifted = jnp.concatenate([left[None], states_s[:-1]], axis=0)
+    fn = lambda xs: step_fn(xs, feats_s, params)
+    ones = jnp.ones_like(shifted)
+    # One jvp = value + exact diagonal Jacobian (J @ 1 == diag(J)).
+    f_s, jac = jax.jvp(fn, (shifted,), (ones,))
+    if cfg.jac_clip is not None:
+        jac = jnp.clip(jac, -cfg.jac_clip, cfg.jac_clip)
+    b_s = f_s - jac * shifted
+    new_states = sharded_scan_local(jac, b_s, x0, seq_axis)
+    if cfg.damping != 1.0:
+        new_states = (1.0 - cfg.damping) * states_s + cfg.damping * new_states
+    return new_states
+
+
+# ---------------------------------------------------------------------------
+# sharded Newton loop (forward)
+# ---------------------------------------------------------------------------
+
+def _specs(feats, params, seq_axis, batch_axes):
+    t_spec = P(seq_axis, batch_axes) if batch_axes else P(seq_axis)
+    x0_spec = P(batch_axes) if batch_axes else P()
+    feats_specs = jax.tree_util.tree_map(lambda _: t_spec, feats)
+    params_specs = jax.tree_util.tree_map(lambda _: P(), params)
+    return t_spec, x0_spec, feats_specs, params_specs
+
+
+def _replicated_axes(seq_axis, batch_axes):
+    """Mesh axes over which per-shard PARTIAL sums must be psum'd to make a
+    replicated quantity: the sequence axis always, plus the batch axes when
+    the batch rides sharded through the solve."""
+    axes = (seq_axis,)
+    if batch_axes:
+        axes = axes + (batch_axes if isinstance(batch_axes, tuple)
+                       else (batch_axes,))
+    return axes
+
+
+def _solve_shmapped(step_fn, feats, params, x0, init_guess, cfg: DeerConfig,
+                    mesh, seq_axis, batch_axes):
+    n_shards = mesh.shape[seq_axis]
+    t_spec, x0_spec, feats_specs, params_specs = _specs(
+        feats, params, seq_axis, batch_axes)
+
+    def local(feats_s, params_r, x0_r, init_s):
+        if cfg.mode == "fixed":
+            def body(_, st):
+                return _local_newton_iteration(step_fn, feats_s, params_r,
+                                               x0_r, st, cfg, seq_axis,
+                                               n_shards)
+            states = jax.lax.fori_loop(0, cfg.max_iters, body, init_s,
+                                       unroll=cfg.unroll)
+            return states, jnp.asarray(cfg.max_iters, jnp.int32)
+
+        def cond(carry):
+            _, diff, it = carry
+            return jnp.logical_and(diff > cfg.tol, it < cfg.max_iters)
+
+        def body(carry):
+            st, _, it = carry
+            new = _local_newton_iteration(step_fn, feats_s, params_r, x0_r,
+                                          st, cfg, seq_axis, n_shards)
+            # global max-norm residual: pmax of the per-shard residual over
+            # the time axis AND any batch axes, so the while_loop trip
+            # count (and the returned iters) is identical on every device
+            diff = compat.pmax(
+                jnp.max(jnp.abs(new - st)).astype(jnp.float32),
+                _replicated_axes(seq_axis, batch_axes))
+            return new, diff, it + 1
+
+        states, _, iters = jax.lax.while_loop(
+            cond, body, (init_s, jnp.asarray(jnp.inf, jnp.float32),
+                         jnp.asarray(0, jnp.int32)))
+        return states, iters
+
+    return compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(feats_specs, params_specs, x0_spec, t_spec),
+        out_specs=(t_spec, P()),
+        check_vma=False,
+    )(feats, params, x0, init_guess)
+
+
+# ---------------------------------------------------------------------------
+# implicit differentiation at the fixed point (sharded adjoint)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5, 6, 7, 8))
+def _sharded_fixed_point(step_fn, feats, params, x0, init_guess,
+                         cfg: DeerConfig, mesh, seq_axis, batch_axes):
+    states, _ = _solve_shmapped(step_fn, feats, params, x0,
+                                jax.lax.stop_gradient(init_guess), cfg,
+                                mesh, seq_axis, batch_axes)
+    return states
+
+
+def _sfp_fwd(step_fn, feats, params, x0, init_guess, cfg, mesh, seq_axis,
+             batch_axes):
+    states = _sharded_fixed_point(step_fn, feats, params, x0, init_guess,
+                                  cfg, mesh, seq_axis, batch_axes)
+    return states, (feats, params, x0, states)
+
+
+def _sfp_bwd(step_fn, cfg, mesh, seq_axis, batch_axes, res, gbar):
+    feats, params, x0, states = res
+    n_shards = mesh.shape[seq_axis]
+    t_spec, x0_spec, feats_specs, params_specs = _specs(
+        feats, params, seq_axis, batch_axes)
+
+    def local(feats_s, params_r, x0_r, states_s, gbar_s):
+        idx = compat.axis_index(seq_axis)
+        left = _left_boundary(states_s, x0_r, seq_axis, n_shards)
+        shifted = jnp.concatenate([left[None], states_s[:-1]], axis=0)
+
+        fn_of_x = lambda xs: step_fn(xs, feats_s, params_r)
+        ones = jnp.ones_like(shifted)
+        _, jac = jax.jvp(fn_of_x, (shifted,), (ones,))  # J_t = dF_t/dx_{t-1}
+
+        # Adjoint recurrence g_t = gbar_t + J_{t+1} g_{t+1}: shift J left
+        # (boundary element from the right neighbour), then the REVERSED
+        # sharded scan with the suffix-summary fixup.
+        nxt = _right_jac_first(jac, seq_axis, n_shards)
+        jac_next = jnp.concatenate([jac[1:], nxt[None]], axis=0)
+        g = sharded_scan_local(jac_next, gbar_s, None, seq_axis,
+                               reverse=True)
+
+        # Cotangents via one local vjp through the step at the converged
+        # trajectory. Interior-state cotangents (d_shifted[1:], and slot 0
+        # on shards > 0 — the neighbour's last state) are already folded
+        # into g by the adjoint solve and are discarded, exactly as in the
+        # replicated core/deer.py adjoint.
+        _, vjp = jax.vjp(lambda sh, ft, pr: step_fn(sh, ft, pr),
+                         shifted, feats_s, params_r)
+        d_shifted, d_feats, d_params = vjp(g)
+        # params are replicated over BOTH the time shards and any batch
+        # shards: each device holds the partial sum of its (time, batch)
+        # slice, so the cotangent reduces over all of those axes
+        d_params = jax.tree_util.tree_map(
+            lambda t: compat.psum(t, _replicated_axes(seq_axis, batch_axes)),
+            d_params)
+        # x0 enters only through shard 0's boundary slot
+        d_x0 = compat.psum(
+            jnp.where(idx == 0, d_shifted[0], jnp.zeros_like(d_shifted[0])),
+            seq_axis)
+        return d_feats, d_params, d_x0
+
+    d_feats, d_params, d_x0 = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(feats_specs, params_specs, x0_spec, t_spec, t_spec),
+        out_specs=(feats_specs, params_specs, x0_spec),
+        check_vma=False,
+    )(feats, params, x0, states, gbar)
+    d_init = jnp.zeros_like(states)  # init guess does not affect the solution
+    return d_feats, d_params, d_x0, d_init
+
+
+_sharded_fixed_point.defvjp(_sfp_fwd, _sfp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+def sharded_deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
+                       cfg: DeerConfig = DeerConfig(), *, mesh,
+                       seq_axis: str = "data",
+                       init_guess: Optional[jax.Array] = None,
+                       params=None,
+                       batch_axes=None) -> Tuple[jax.Array, jax.Array]:
+    """Solve x_t = step_fn(x_{t-1}, feats_t[, params]) with the trajectory
+    SHARDED over mesh axis ``seq_axis`` for the whole Newton solve.
+
+    Same contract as ``core.deer.deer_solve`` — returns (states (T, ...),
+    n_iters ()), differentiable per cfg.grad w.r.t. feats, x0 and params —
+    plus:
+
+      mesh / seq_axis: the device mesh and the axis the time dimension is
+        sharded over (P shards; per-device trajectory is (T/P, ...)).
+      batch_axes: optional mesh axis (or tuple) the SECOND feats dimension /
+        first x0 dimension is sharded over, so a batch folded into the state
+        dims stays distributed instead of being all-gathered into every
+        shard (the ring-attention batch-spec lesson).
+
+    Falls back to the replicated ``deer_solve`` when T is not divisible by
+    the shard count or ``seq_axis`` is missing from the mesh.
+    """
+    if params is None:
+        orig = step_fn
+        step_fn = lambda x, f, _p: orig(x, f)
+        params = ()
+
+    n_shards = mesh.shape.get(seq_axis, 0) if hasattr(mesh.shape, "get") \
+        else dict(mesh.shape).get(seq_axis, 0)
+    if n_shards == 0 or T % max(n_shards, 1) != 0:
+        return deer_solve(step_fn, feats, x0, T, cfg,
+                          init_guess=init_guess, params=params)
+
+    if init_guess is None:
+        init_guess = jnp.zeros((T,) + x0.shape, x0.dtype)
+
+    if cfg.grad == "implicit":
+        states = _sharded_fixed_point(step_fn, feats, params, x0, init_guess,
+                                      cfg, mesh, seq_axis, batch_axes)
+        return states, jnp.asarray(cfg.max_iters, jnp.int32)
+    return _solve_shmapped(step_fn, feats, params, x0, init_guess, cfg,
+                           mesh, seq_axis, batch_axes)

@@ -21,7 +21,17 @@ Three implementations, one contract:
                                 all-gather of per-shard summaries + prefix fixup.
                                 Used for long-context cells (seq sharded over mesh).
 
+Sequence parallelism exists at TWO levels. This module provides the
+scan-level primitive (one linear solve distributed over the mesh), and
+``sharded_scan_local`` exposes its per-shard body so that SOLVER-level
+sequence parallelism (core/deer_sharded.py — the whole DEER Newton
+iteration on time shards, trajectory never replicated) can reuse the exact
+same summary/fixup algebra inside its own shard_map, in both time
+directions (the reverse scan serves the implicit-diff adjoint).
+
 All operate on leading time axis: lam, b have shape (T, ...) broadcastable.
+All collectives resolve through distributed/compat.py (version-portable
+shard_map).
 """
 from __future__ import annotations
 
@@ -31,6 +41,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.distributed import compat
 
 
 def _combine(elem_a, elem_b):
@@ -118,39 +130,72 @@ def chunked_diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array | None = None,
     return states.reshape(lam.shape[0:1] + b.shape[1:])
 
 
-def sharded_diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array,
-                      *, mesh, seq_axis: str) -> jax.Array:
-    """Sequence-parallel diagonal scan via shard_map.
+def sharded_scan_local(lam_s: jax.Array, b_s: jax.Array,
+                       x0: jax.Array | None, seq_axis: str, *,
+                       reverse: bool = False) -> jax.Array:
+    """Per-shard body of the sequence-parallel scan. MUST run inside a
+    shard_map whose time axis is sharded over ``seq_axis``.
 
-    The time axis is sharded over mesh axis ``seq_axis`` (P shards). Each
-    shard computes its local cumulative affine map (O(T/P) work, O(log T/P)
-    depth), the per-shard summaries (one (lam_prod, b_total) pair each) are
-    all-gathered (P tiny elements), an exclusive prefix over shards is
-    computed redundantly on every device, and applied locally.
+    Forward (reverse=False): solves x_t = lam_t * x_{t-1} + b_t globally,
+    with x_0 := ``x0`` (replicated; None = zero). Each shard computes its
+    local cumulative affine map (O(T/P) work, O(log T/P) depth), the
+    per-shard summaries (one (lam_prod, b_total) pair each) are all-gathered
+    (P tiny elements), an exclusive prefix over shards is computed
+    redundantly on every device, and applied locally.
+
+    Reverse (reverse=True): solves g_t = lam_t * g_{t+1} + b_t with terminal
+    g_{T+1} := ``x0`` (None = zero) — the adjoint recurrence of the
+    implicit-diff backward pass, distributed with the mirrored
+    suffix-summary fixup.
 
     Collective volume: 2 * P * D elements per call — independent of T.
     """
-
-    def local(lam_s, b_s, x0_s):
-        # lam_s, b_s: (T/P, ...) local shard. x0_s replicated.
-        A_cum, B_cum = jax.lax.associative_scan(_combine, (lam_s, b_s), axis=0)
-        # Per-shard summary = last cumulative element.
-        summ_A = jax.lax.all_gather(A_cum[-1], seq_axis)   # (P, ...)
-        summ_B = jax.lax.all_gather(B_cum[-1], seq_axis)
-        # Exclusive prefix over shards, applied to x0: state at my shard's left edge.
-        idx = jax.lax.axis_index(seq_axis)
-        A_pref, B_pref = jax.lax.associative_scan(_combine, (summ_A, summ_B), axis=0)
-        # prefix state BEFORE shard i = combine of shards < i applied to x0
+    A_cum, B_cum = jax.lax.associative_scan(_combine, (lam_s, b_s), axis=0,
+                                            reverse=reverse)
+    idx = compat.axis_index(seq_axis)
+    if reverse:
+        # Per-shard summary = cumulative map across the whole shard, seen
+        # from its LEFT edge (element 0 of the reverse cumulative scan).
+        summ_A = compat.all_gather(A_cum[0], seq_axis)     # (P, ...)
+        summ_B = compat.all_gather(B_cum[0], seq_axis)
+        n = summ_A.shape[0]
+        A_suf, B_suf = jax.lax.associative_scan(_combine, (summ_A, summ_B),
+                                                axis=0, reverse=True)
         ones = jnp.ones_like(summ_A[0])
         zeros = jnp.zeros_like(summ_B[0])
-        A_excl = jnp.where(idx == 0, ones, A_pref[jnp.maximum(idx - 1, 0)])
-        B_excl = jnp.where(idx == 0, zeros, B_pref[jnp.maximum(idx - 1, 0)])
-        x_left = A_excl * x0_s + B_excl
-        return A_cum * x_left + B_cum
+        # exclusive suffix: state just RIGHT of shard i = shards > i applied
+        # to the terminal condition
+        last = idx == n - 1
+        A_excl = jnp.where(last, ones, A_suf[jnp.minimum(idx + 1, n - 1)])
+        B_excl = jnp.where(last, zeros, B_suf[jnp.minimum(idx + 1, n - 1)])
+        x_right = B_excl if x0 is None else A_excl * x0 + B_excl
+        return A_cum * x_right + B_cum
 
+    summ_A = compat.all_gather(A_cum[-1], seq_axis)        # (P, ...)
+    summ_B = compat.all_gather(B_cum[-1], seq_axis)
+    A_pref, B_pref = jax.lax.associative_scan(_combine, (summ_A, summ_B),
+                                              axis=0)
+    # prefix state BEFORE shard i = combine of shards < i applied to x0
+    ones = jnp.ones_like(summ_A[0])
+    zeros = jnp.zeros_like(summ_B[0])
+    A_excl = jnp.where(idx == 0, ones, A_pref[jnp.maximum(idx - 1, 0)])
+    B_excl = jnp.where(idx == 0, zeros, B_pref[jnp.maximum(idx - 1, 0)])
+    x_left = B_excl if x0 is None else A_excl * x0 + B_excl
+    return A_cum * x_left + B_cum
+
+
+def sharded_diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array,
+                      *, mesh, seq_axis: str) -> jax.Array:
+    """Sequence-parallel diagonal scan: shard_map over ``sharded_scan_local``.
+
+    The time axis is sharded over mesh axis ``seq_axis`` (P shards);
+    collective volume is 2 * P * D elements per call — independent of T.
+    """
     pspec = P(seq_axis)
-    return jax.shard_map(
-        local, mesh=mesh,
+    return compat.shard_map(
+        lambda lam_s, b_s, x0_s: sharded_scan_local(lam_s, b_s, x0_s,
+                                                    seq_axis),
+        mesh=mesh,
         in_specs=(pspec, pspec, P()),
         out_specs=pspec,
     )(lam, b, x0)

@@ -1,2 +1,4 @@
-"""Distributed runtime: mesh context, parameter/activation sharding rules,
-sequence parallelism, compressed cross-pod collectives."""
+"""Distributed runtime: version-portable shard_map/collectives (compat.py —
+the ONLY place jax's shard_map is imported), mesh context,
+parameter/activation sharding rules, sequence parallelism, compressed
+cross-pod collectives."""

@@ -1,0 +1,86 @@
+"""Version-portable distributed-execution layer.
+
+``shard_map`` has moved twice in jax's public API:
+
+  * jax <= 0.4.x / 0.5.x : ``jax.experimental.shard_map.shard_map`` with a
+    ``check_rep=`` kwarg (replication checking);
+  * jax >= 0.6           : ``jax.shard_map`` with the kwarg renamed to
+    ``check_vma=`` (varying-manual-axes checking — same contract).
+
+Every call site in this repo resolves ``shard_map`` — and the collectives it
+composes with — through THIS module, so the rest of the codebase is version
+agnostic. The contract exposed here:
+
+    shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=True)
+
+``check_vma`` is translated to ``check_rep`` on old jax. ``mesh`` is
+required (we never rely on the new-API ambient-mesh default: it does not
+exist on 0.4.x).
+
+The collectives re-exported below (``psum``, ``pmax``, ``pmean``,
+``all_gather``, ``ppermute``, ``psum_scatter``, ``axis_index``) are stable
+``jax.lax`` API across the supported range, but call sites import them from
+here so the repo has exactly ONE distribution API surface — if a future jax
+moves or renames any of them, this module is the single place to patch.
+
+Supported jax range: 0.4.30 — current (feature-detected at import time;
+``HAS_NATIVE_SHARD_MAP`` records which branch was taken).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+if not HAS_NATIVE_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool = True, **kwargs: Any) -> Callable:
+    """Map ``f`` over shards of the mesh — portable across jax versions.
+
+    Args:
+      f: per-shard function (sees local shards; collectives see mesh axes).
+      mesh: jax.sharding.Mesh (required; no ambient-mesh default).
+      in_specs / out_specs: PartitionSpec pytrees (prefix trees allowed).
+      check_vma: enable replication/varying-axes checking (maps to
+        ``check_rep`` on jax < 0.6). Pass False for bodies with data-dependent
+        collectives inside lax control flow, where the checker is too strict.
+    """
+    # accept legacy spelling so downstream code written against either jax
+    # API keeps working through this shim
+    if "check_rep" in kwargs:
+        check_vma = kwargs.pop("check_rep")
+    if kwargs:
+        raise TypeError(f"unsupported shard_map kwargs: {sorted(kwargs)}")
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_rep=check_vma)
+
+
+# ---------------------------------------------------------------------------
+# collectives — stable names, one import surface
+# ---------------------------------------------------------------------------
+
+psum = jax.lax.psum
+pmax = jax.lax.pmax
+pmin = jax.lax.pmin
+pmean = jax.lax.pmean
+all_gather = jax.lax.all_gather
+ppermute = jax.lax.ppermute
+psum_scatter = jax.lax.psum_scatter
+axis_index = jax.lax.axis_index
+
+
+def axis_size(mesh, axis) -> int:
+    """Number of shards along ``axis`` (a mesh axis name or tuple of them)."""
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

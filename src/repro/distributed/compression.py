@@ -24,6 +24,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import compat
+
 BLOCK = 256
 
 
@@ -64,8 +66,8 @@ def compressed_psum(tree, axis_name: str, error_state=None):
         # WIRE FORMAT: int8 payload + per-block fp32 scales (1/256 overhead).
         # all_gather keeps the transferred bytes at 1/4 of an fp32 psum;
         # each pod dequantises and reduces locally.
-        q_all = jax.lax.all_gather(q, axis_name)          # (P, blocks, BLOCK) int8
-        s_all = jax.lax.all_gather(s, axis_name)          # (P, blocks, 1) f32
+        q_all = compat.all_gather(q, axis_name)           # (P, blocks, BLOCK) int8
+        s_all = compat.all_gather(s, axis_name)           # (P, blocks, 1) f32
         P = q_all.shape[0]
         deq_sum = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
         flat = deq_sum.reshape(-1)[:g32.size].reshape(g32.shape)

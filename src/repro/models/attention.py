@@ -16,6 +16,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import compat
+
 NEG_INF = -1e30
 
 
@@ -153,7 +155,7 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mesh,
     n_shards = mesh.shape[axis]
 
     def local_fn(qs, ks, vs):
-        idx = jax.lax.axis_index(axis)
+        idx = compat.axis_index(axis)
         B, Tl, H, hd = qs.shape
         groups = H // ks.shape[2]
         scale = hd ** -0.5
@@ -182,8 +184,8 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mesh,
             m = m_new
             if s < n_shards - 1:
                 perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
-                ks_cur = jax.lax.ppermute(ks_cur, axis, perm)
-                vs_cur = jax.lax.ppermute(vs_cur, axis, perm)
+                ks_cur = compat.ppermute(ks_cur, axis, perm)
+                vs_cur = compat.ppermute(vs_cur, axis, perm)
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return out.transpose(0, 2, 1, 3).astype(qs.dtype)
 
@@ -193,8 +195,9 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mesh,
     # B2-ring refuted-iteration bug: 16x redundant compute + gathers)
     ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
     spec = P_(ba, axis, None, None)
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=(spec, spec, spec),
-                         out_specs=spec)(q, k, v)
+    return compat.shard_map(local_fn, mesh=mesh,
+                            in_specs=(spec, spec, spec),
+                            out_specs=spec)(q, k, v)
 
 
 # ---------------------------------------------------------------------------
@@ -218,14 +221,12 @@ def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
     Returns (out (B,1,H,hd), k_cache, v_cache).
     """
     axes = axis if isinstance(axis, tuple) else (axis,)
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
+    n_shards = compat.axis_size(mesh, axes)
     S = k_cache.shape[1]
     S_loc = S // n_shards
 
     def local_fn(qs, kc, vc, kn, vn, slot_, eff_):
-        idx = jax.lax.axis_index(axes)
+        idx = compat.axis_index(axes)
         B, _, H, hd = qs.shape
         K = kc.shape[2]
         groups = H // K
@@ -247,10 +248,10 @@ def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
         valid = gpos[None, :] < jnp.asarray(eff_).reshape(-1, 1)
         scores = jnp.where(valid[:, None, :], scores, NEG_INF)
         m_loc = jnp.max(scores, axis=-1)
-        m = jax.lax.pmax(m_loc, axes)                      # (B,H) tiny
+        m = compat.pmax(m_loc, axes)                       # (B,H) tiny
         p = jnp.exp(scores - m[..., None])
-        l = jax.lax.psum(jnp.sum(p, axis=-1), axes)        # (B,H) tiny
-        o = jax.lax.psum(jnp.einsum("bhs,bshd->bhd", p, vh), axes)
+        l = compat.psum(jnp.sum(p, axis=-1), axes)         # (B,H) tiny
+        o = compat.psum(jnp.einsum("bhs,bshd->bhd", p, vh), axes)
         out = (o / jnp.maximum(l[..., None], 1e-30))[:, None]
         return out.astype(qs.dtype), kc, vc
 
@@ -258,15 +259,11 @@ def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
     B = q.shape[0]
     ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names
                and a not in axes) or None
-    if ba is not None:
-        prod = 1
-        for a in ba:
-            prod *= mesh.shape[a]
-        if B % prod != 0:
-            ba = None
+    if ba is not None and B % compat.axis_size(mesh, ba) != 0:
+        ba = None
     rep = P_(ba, None, None, None)
     shd = P_(ba, axis, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(rep, shd, shd, rep, rep, P_(), P_()),
         out_specs=(rep, shd, shd))(

@@ -16,6 +16,12 @@ Design notes (MaxText-style, compile-time-aware):
 
 Cache contract for decode (serve_step): every layer's recurrent state is
 stacked on the layer axis and carried through the same scan.
+
+Distribution: all shard_map/collective call sites (the sequence-sharded
+decode path via models/attention.py, ring attention, the local-MoE
+dispatch, and the lrc mixer's optional sequence-parallel DEER solve —
+``SSMConfig.seq_shard``) resolve through distributed/compat.py, so the LM
+runs unmodified across the supported jax version range.
 """
 from __future__ import annotations
 

@@ -286,14 +286,12 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
                      "k_max_u", "w_x", "v_x", "g_leak", "e_leak")
         cell_p = {k: p[k].astype(jnp.float32) for k in cell_keys}
         step = lambda x, fs, cp: _lrc_mixer_step(cp, x, *fs)
-        x0 = jnp.zeros((d_inner,), jnp.float32)
         dc = DeerConfig(max_iters=arch.ssm.deer_iters, mode="fixed",
                         grad="implicit",
                         scan_chunk=0 if arch.exact_hlo else arch.ssm.chunk,
                         unroll=arch.exact_hlo)
-        solve = lambda su, eu: deer_solve(step, (su, eu), x0, T, dc,
-                                          params=cell_p)[0]
-        states = jax.vmap(solve)(s_u, eps_u)                # (B,T,di)
+        states = _lrc_solve_trajectory(arch, step, cell_p, s_u, eps_u,
+                                       d_inner, dc)          # (B,T,di)
         ssm_new = None
     else:
         states = _lrc_mixer_step(p, state["ssm"], s_u[:, 0], eps_u[:, 0])
@@ -303,6 +301,39 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
     y = states.astype(cdt) * jax.nn.silu(z)
     out = nn.dense(p["out_proj"], y)
     return out, (None if state is None else {"ssm": ssm_new})
+
+
+def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
+                          d_inner: int, dc: DeerConfig) -> jax.Array:
+    """DEER solve of the lrc-mixer trajectory. s_u/eps_u: (B, T, di).
+
+    With ``arch.ssm.seq_shard`` and an active mesh carrying a "model" axis
+    (the ring-attention convention for the time dimension), the Newton solve
+    runs sequence-parallel (core/deer_sharded.py): time over "model", batch
+    over the DP axes, per-device trajectory (T/P, B_local, di). Otherwise:
+    replicated solve vmapped over the batch.
+    """
+    B, T = s_u.shape[0], s_u.shape[1]
+    if arch.ssm.seq_shard:
+        from repro.core.deer_sharded import sharded_deer_solve
+        from repro.distributed import compat
+        from repro.distributed.sharding import batch_axes, current_mesh
+        mesh = current_mesh()
+        if (mesh is not None and "model" in mesh.axis_names
+                and T % mesh.shape["model"] == 0):
+            ba = batch_axes(mesh)
+            if ba is not None and B % compat.axis_size(mesh, ba) != 0:
+                ba = None
+            x0 = jnp.zeros((B, d_inner), jnp.float32)
+            states, _ = sharded_deer_solve(
+                step, (jnp.swapaxes(s_u, 0, 1), jnp.swapaxes(eps_u, 0, 1)),
+                x0, T, dc, mesh=mesh, seq_axis="model", params=cell_p,
+                batch_axes=ba)
+            return jnp.swapaxes(states, 0, 1)
+    x0 = jnp.zeros((d_inner,), jnp.float32)
+    solve = lambda su, eu: deer_solve(step, (su, eu), x0, T, dc,
+                                      params=cell_p)[0]
+    return jax.vmap(solve)(s_u, eps_u)
 
 
 def lrc_mixer_init_state(arch: ArchConfig, batch: int) -> Dict:

@@ -155,6 +155,7 @@ def moe_apply_local(p: Params, arch: ArchConfig, h: jax.Array) -> jax.Array:
     226 MB/layer bf16) — EP would move orders of magnitude more activation
     bytes than the expert weights occupy. §Perf D7.
     """
+    from repro.distributed import compat
     from repro.distributed.sharding import batch_axes, current_mesh
     from jax.sharding import PartitionSpec as P_
     mesh = current_mesh()
@@ -163,10 +164,7 @@ def moe_apply_local(p: Params, arch: ArchConfig, h: jax.Array) -> jax.Array:
     ba = batch_axes(mesh)
     if ba is None:
         return moe_apply_gather(p, arch, h)
-    prod = 1
-    for a in ba:
-        prod *= mesh.shape[a]
-    if h.shape[0] % prod != 0:
+    if h.shape[0] % compat.axis_size(mesh, ba) != 0:
         return moe_apply_gather(p, arch, h)
 
     # tokens additionally sharded over "model": the dispatch is local per
@@ -176,7 +174,7 @@ def moe_apply_local(p: Params, arch: ArchConfig, h: jax.Array) -> jax.Array:
               and h.shape[1] % mesh.shape["model"] == 0 else None)
     hspec = P_(ba, seq_ax, None)
     pspec = jax.tree_util.tree_map(lambda _: P_(), p)
-    return jax.shard_map(
+    return compat.shard_map(
         lambda pp, hh: moe_apply_gather(pp, arch, hh),
         mesh=mesh, in_specs=(pspec, hspec), out_specs=hspec,
         check_vma=False)(p, h)

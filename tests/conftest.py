@@ -1,0 +1,47 @@
+"""Shared test infrastructure.
+
+``run_in_subprocess`` is the single subprocess-spawn helper for every
+multi-device test (previously duplicated across test_distributed.py and
+test_ring_attention.py): it prepends the forced-host-device-count preamble,
+scrubs ``XLA_FLAGS`` from the parent environment (so the main pytest
+process keeps seeing exactly 1 device), pins ``PYTHONPATH`` to the repo's
+``src``, and parses the last stdout line as JSON.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_subprocess(body: str, n_dev: int = 8, timeout: int = 600) -> dict:
+    """Run ``body`` in a fresh python with ``n_dev`` forced host devices.
+
+    ``body`` sees ``json``, ``jax``, ``jnp``, ``np`` pre-imported and must
+    print a JSON object as its last stdout line, which is returned.
+    """
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
+        import json
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        assert jax.device_count() == {n_dev}
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+@pytest.fixture
+def run_sub():
+    return run_in_subprocess

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional dep absent: fixed-seed-grid fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.scan import (chunked_diag_scan, diag_linear_scan,
                              diag_linear_scan_seq)

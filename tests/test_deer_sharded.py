@@ -1,0 +1,156 @@
+"""Sequence-parallel DEER solver == replicated solver (subprocess, 8 forced
+host devices). The trajectory lives sharded over the mesh for the whole
+Newton solve (core/deer_sharded.py); these tests pin its contract:
+
+  * fixed / tol convergence modes match the single-device ``deer_solve``
+    oracle (and the sequential rollout) within fp32 tolerance;
+  * implicit-mode gradients (feats, params, x0) agree with the replicated
+    implicit adjoint;
+  * non-divisible T falls back to the replicated solver transparently;
+  * the block-level wiring (LrcSSMConfig.seq_axis) is end-to-end exact.
+"""
+
+_SETUP = """
+    from repro.core.deer import DeerConfig, deer_solve
+    from repro.core.deer_sharded import sharded_deer_solve
+    from repro.core.lrc import (LrcCellConfig, init_lrc_params,
+                                input_features, lrc_step, lrc_sequential)
+    mesh = jax.make_mesh((8,), ("data",))
+    T, n, D = 64, 6, 12
+    cfg = LrcCellConfig(d_input=n, d_state=D)
+    p = init_lrc_params(cfg, jax.random.PRNGKey(0))
+    u = jax.random.normal(jax.random.PRNGKey(1), (T, n))
+    s_u, eps_u = input_features(p, u)
+    step = lambda x, fs, cp: lrc_step(cp, cfg, x, *fs)
+    x0 = jnp.zeros((D,))
+"""
+
+
+def test_sharded_deer_matches_oracle_fixed_and_tol(run_sub):
+    out = run_sub(_SETUP + """
+    want = lrc_sequential(p, cfg, u)
+    res = {}
+    for mode in ("fixed", "tol"):
+        dc = DeerConfig(max_iters=30, tol=1e-7, mode=mode, grad="unroll")
+        with mesh:
+            got, iters = jax.jit(lambda su, eu, pp: sharded_deer_solve(
+                step, (su, eu), x0, T, dc, mesh=mesh, seq_axis="data",
+                params=pp))(s_u, eps_u, p)
+        ref, _ = deer_solve(step, (s_u, eps_u), x0, T, dc, params=p)
+        res[f"err_{mode}"] = float(jnp.max(jnp.abs(got - want)))
+        res[f"err_vs_deer_{mode}"] = float(jnp.max(jnp.abs(got - ref)))
+        res[f"iters_{mode}"] = int(iters)
+    print(json.dumps(res))
+    """)
+    assert out["err_fixed"] < 1e-4, out
+    assert out["err_tol"] < 1e-4, out
+    assert out["err_vs_deer_fixed"] < 1e-5, out
+    assert out["iters_tol"] < 30, "tol mode should converge before the cap"
+
+
+def test_sharded_deer_implicit_gradients_match(run_sub):
+    out = run_sub(_SETUP + """
+    dc = DeerConfig(max_iters=25, mode="fixed", grad="implicit")
+    x0r = jax.random.normal(jax.random.PRNGKey(3), (D,))
+
+    def loss(solver, su, eu, pp, x0_):
+        st, _ = solver(step, (su, eu), x0_, T, dc, params=pp)
+        return jnp.sum(st ** 2)
+
+    import functools
+    sharded = functools.partial(sharded_deer_solve, mesh=mesh,
+                                seq_axis="data")
+    with mesh:
+        g_sh = jax.jit(jax.grad(
+            lambda su, eu, pp, x0_: loss(sharded, su, eu, pp, x0_),
+            argnums=(0, 1, 2, 3)))(s_u, eps_u, p, x0r)
+    g_ref = jax.grad(lambda su, eu, pp, x0_: loss(deer_solve, su, eu, pp,
+                                                  x0_),
+                     argnums=(0, 1, 2, 3))(s_u, eps_u, p, x0r)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(g_sh), jax.tree_util.tree_leaves(g_ref)))
+    print(json.dumps({"grad_err": err}))
+    """)
+    assert out["grad_err"] < 1e-4, out
+
+
+def test_sharded_deer_fallback_non_divisible(run_sub):
+    """T=63 is not divisible by 8 shards: transparent fallback to the
+    replicated solver, identical contract."""
+    out = run_sub(_SETUP + """
+    u63 = u[:63]
+    s63, e63 = input_features(p, u63)
+    dc = DeerConfig(max_iters=30, mode="fixed", grad="unroll")
+    with mesh:
+        got, _ = jax.jit(lambda su, eu, pp: sharded_deer_solve(
+            step, (su, eu), x0, 63, dc, mesh=mesh, seq_axis="data",
+            params=pp))(s63, e63, p)
+    want = lrc_sequential(p, cfg, u63)
+    print(json.dumps({"err": float(jnp.max(jnp.abs(got - want)))}))
+    """)
+    assert out["err"] < 1e-4, out
+
+
+def test_lm_mixer_seq_shard_matches_replicated(run_sub):
+    """SSMConfig.seq_shard wiring (the only caller passing batch_axes):
+    LM loss AND gradients with the lrc mixer's Newton solve time-sharded
+    over "model" + batch over "data" match the replicated mixer."""
+    out = run_sub("""
+    import dataclasses
+    from repro.config import SSMConfig
+    from repro.configs.falcon_mamba_7b import REDUCED
+    from repro.models import build_model
+    from repro.distributed import sharding as shd
+    arch = dataclasses.replace(
+        REDUCED, dtype=jnp.float32,
+        ssm=SSMConfig(kind="lrc", expand=2, chunk=16, deer_iters=8))
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64),
+                                          0, arch.vocab)}
+    want = float(model.loss(params, batch))
+    g_ref = jax.grad(model.loss)(params, batch)
+    arch_s = dataclasses.replace(
+        arch, ssm=dataclasses.replace(arch.ssm, seq_shard=True))
+    model_s = build_model(arch_s)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with shd.use_mesh(mesh):
+        got = float(jax.jit(model_s.loss)(params, batch))
+        g_sh = jax.jit(jax.grad(model_s.loss))(params, batch)
+    gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(g_ref), jax.tree_util.tree_leaves(g_sh)))
+    print(json.dumps({"loss_diff": abs(got - want), "grad_err": gerr}))
+    """, timeout=900)
+    assert out["loss_diff"] < 1e-5, out
+    assert out["grad_err"] < 1e-3, out
+
+
+def test_block_level_seq_sharded_matches_replicated(run_sub):
+    """LrcSSMConfig.seq_axis wiring: logits AND parameter gradients through
+    the sequence-parallel block stack match the replicated path."""
+    out = run_sub("""
+    import dataclasses
+    from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+    from repro.core.deer import DeerConfig
+    from repro.distributed import sharding as shd
+    base = LrcSSMConfig(d_input=6, n_classes=2, d_hidden=16, d_state=16,
+                        n_blocks=2,
+                        deer=DeerConfig(max_iters=20, mode="fixed",
+                                        grad="implicit"))
+    p = init_lrcssm(base, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 6))
+    want = apply_lrcssm(base, p, x)
+    g_ref = jax.grad(lambda pp: jnp.sum(apply_lrcssm(base, pp, x) ** 2))(p)
+    mesh = jax.make_mesh((8,), ("data",))
+    shard = dataclasses.replace(base, seq_axis="data")
+    with shd.use_mesh(mesh):
+        got = jax.jit(lambda pp, xx: apply_lrcssm(shard, pp, xx))(p, x)
+        g_sh = jax.jit(jax.grad(
+            lambda pp: jnp.sum(apply_lrcssm(shard, pp, x) ** 2)))(p)
+    err = float(jnp.max(jnp.abs(got - want)))
+    gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(g_ref), jax.tree_util.tree_leaves(g_sh)))
+    print(json.dumps({"err": err, "grad_err": gerr}))
+    """)
+    assert out["err"] < 1e-4, out
+    assert out["grad_err"] < 1e-3, out

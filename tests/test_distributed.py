@@ -10,37 +10,10 @@ exactly 1 device. The subprocess scripts exercise:
   * checkpoint saved on an 8-device mesh restores onto a 4-device mesh
     (elastic resharding)
 """
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-
-def run_sub(body: str, n_dev: int = 8, timeout: int = 600) -> dict:
-    script = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
-        import json
-        import jax
-        import jax.numpy as jnp
-        import numpy as np
-        assert jax.device_count() == {n_dev}
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, timeout=timeout, env=env)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return json.loads(r.stdout.strip().splitlines()[-1])
-
-
-def test_sharded_train_step_matches_single_device():
+def test_sharded_train_step_matches_single_device(run_sub):
     out = run_sub("""
         from repro.configs import get_reduced
         from repro.models import build_model
@@ -82,7 +55,7 @@ def test_sharded_train_step_matches_single_device():
     assert out["max_param_diff"] < 1e-3, out
 
 
-def test_sequence_parallel_scan():
+def test_sequence_parallel_scan(run_sub):
     out = run_sub("""
         from repro.core.scan import sharded_diag_scan, diag_linear_scan_seq
         from functools import partial
@@ -102,14 +75,15 @@ def test_sequence_parallel_scan():
     assert out["err"] < 1e-4, out
 
 
-def test_compressed_psum_approximates_mean():
+def test_compressed_psum_approximates_mean(run_sub):
     out = run_sub("""
+        from repro.distributed.compat import shard_map
         from repro.distributed.compression import compressed_psum
         import functools
         mesh = jax.make_mesh((8,), ("pod",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024))
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
             in_specs=jax.sharding.PartitionSpec("pod"),
             out_specs=jax.sharding.PartitionSpec("pod"))
         def f(xs):
@@ -124,7 +98,7 @@ def test_compressed_psum_approximates_mean():
     assert out["rel"] < 0.01, out
 
 
-def test_elastic_checkpoint_reshard(tmp_path):
+def test_elastic_checkpoint_reshard(run_sub, tmp_path):
     ckpt_dir = str(tmp_path / "ck")
     out = run_sub(f"""
         from repro.checkpoint.manager import CheckpointManager
@@ -154,7 +128,7 @@ def test_elastic_checkpoint_reshard(tmp_path):
     assert out["ok"]
 
 
-def test_multipod_mesh_shape():
+def test_multipod_mesh_shape(run_sub):
     out = run_sub("""
         import os
         from repro.launch.mesh import make_production_mesh, mesh_chip_count

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional dep absent: fixed-seed-grid fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.deer import DeerConfig, deer_residual, deer_solve
 from repro.core.lrc import (LrcCellConfig, init_lrc_params, input_features,

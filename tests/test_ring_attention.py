@@ -1,18 +1,13 @@
-"""Ring attention == local attention (subprocess, 8 forced devices)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
+"""Ring attention == local attention (subprocess, 8 forced devices).
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+Subprocess spawning goes through the shared conftest helper; the exercised
+code paths (ring attention, sequence-sharded decode, local MoE) all resolve
+shard_map via repro.distributed.compat.
+"""
 
 
-def test_sharded_decode_attention_matches_reference():
-    body = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json, jax, jax.numpy as jnp, numpy as np
+def test_sharded_decode_attention_matches_reference(run_sub):
+    out = run_sub("""
         from repro.models.attention import (decode_attention,
                                             sharded_decode_attention,
                                             update_kv_cache)
@@ -35,23 +30,13 @@ def test_sharded_decode_attention_matches_reference():
         cerr = float(jnp.max(jnp.abs(kc2 - kc_ref)))
         print(json.dumps({"err": err, "cache_err": cerr}))
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
-                       text=True, timeout=600, env=env)
-    assert r.returncode == 0, r.stderr
-    out = json.loads(r.stdout.strip().splitlines()[-1])
     assert out["err"] < 1e-4 and out["cache_err"] < 1e-6, out
 
 
-def test_local_moe_matches_gather_dispatch():
+def test_local_moe_matches_gather_dispatch(run_sub):
     """shard_map local MoE (replicated experts, tokens sharded over
     data x model) == single-device gather dispatch."""
-    body = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json, jax, jax.numpy as jnp, numpy as np
+    out = run_sub("""
         from repro.config import ArchConfig, MoEConfig
         from repro.models import moe as moe_lib
         from repro.distributed import sharding as shd
@@ -69,23 +54,13 @@ def test_local_moe_matches_gather_dispatch():
         err = float(jnp.max(jnp.abs(got - want)))
         print(json.dumps({"err": err}))
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
-                       text=True, timeout=600, env=env)
-    assert r.returncode == 0, r.stderr
-    out = json.loads(r.stdout.strip().splitlines()[-1])
     # capacity is per local T-chunk under the sharded dispatch: with ample
     # capacity_factor the results are identical
     assert out["err"] < 1e-4, out
 
 
-def test_ring_attention_matches_reference():
-    body = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json, jax, jax.numpy as jnp, numpy as np
+def test_ring_attention_matches_reference(run_sub):
+    out = run_sub("""
         from repro.models.attention import attention, ring_attention
         mesh = jax.make_mesh((8,), ("model",))
         B, T, H, hd = 2, 64, 4, 16
@@ -100,11 +75,4 @@ def test_ring_attention_matches_reference():
         err = float(jnp.max(jnp.abs(got - want)))
         print(json.dumps({"err": err}))
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
-                       text=True, timeout=600, env=env)
-    assert r.returncode == 0, r.stderr
-    out = json.loads(r.stdout.strip().splitlines()[-1])
     assert out["err"] < 1e-4, out
