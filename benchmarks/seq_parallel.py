@@ -1,18 +1,30 @@
-"""Sequence-parallel DEER benchmark: replicated vs time-sharded Newton solve.
+"""Sequence-parallel solver benchmark: replicated vs time-sharded solves.
 
 Measures, on a forced 8-host-device mesh (same substrate as the distributed
-tests), for the LrcSSM cell:
+tests), for the LrcSSM cell, ALL THREE solver-parallelism tiers:
 
-  * tokens/sec of the jitted solve (replicated ``deer_solve`` vs
-    ``sharded_deer_solve`` with the trajectory sharded over the mesh);
-  * per-device peak/temp memory from the compiled executable's
-    ``memory_analysis()`` — the O(T*D) vs O(T/P*D) trajectory-residency
-    claim, measured rather than asserted.
+  * ``deer``  — replicated ``deer_solve`` vs ``sharded_deer_solve``;
+  * ``elk``   — replicated ``elk_solve`` vs ``sharded_elk_solve`` (the
+    trust-region Kalman-smoother path on time shards);
+  * ``fused`` — the fused Pallas iteration, replicated ``lrc_deer_solve``
+    vs shard-composable ``sharded_lrc_deer_solve`` (interpret mode on CPU,
+    so absolute us/call is NOT comparable to the lax tiers — the record is
+    the sharded-vs-replicated ratio and the memory columns).
+
+For each: tokens/sec of the jitted solve and per-device peak/temp memory
+from ``memory_analysis()`` — the O(T*D) vs O(T/P*D) trajectory-residency
+claim, measured rather than asserted.
 
 Because the forced device count must be set before jax initialises, the
 ``bench_seq_parallel`` entry registered in benchmarks/run.py re-execs this
 module in a subprocess (the shared pattern from tests/conftest.py) and
 relays its CSV rows.
+
+Environment knobs (read by the subprocess):
+  SEQ_PARALLEL_TOY=1   — toy sizes for the CI benchmark-smoke job;
+  BENCH_JSON_OUT=path  — ALSO write the rows as a JSON list (the CI
+                         workflow uploads this as the BENCH_* artifact so
+                         the perf trajectory accumulates per commit).
 
 Standalone:  PYTHONPATH=src python -m benchmarks.seq_parallel --inner
 """
@@ -25,10 +37,13 @@ import sys
 N_DEV = 8
 T, B, D = 4096, 4, 64
 ITERS = 12
+TOY_T, TOY_B, TOY_D = 512, 2, 32
+TOY_ITERS = 6
 
 
 def _inner() -> None:
     """Runs with XLA_FLAGS already set (subprocess entry)."""
+    import json
     import time
 
     import jax
@@ -37,50 +52,94 @@ def _inner() -> None:
 
     from repro.core.deer import DeerConfig, deer_solve
     from repro.core.deer_sharded import sharded_deer_solve
+    from repro.core.elk import ElkConfig, elk_solve
+    from repro.core.elk_sharded import sharded_elk_solve
     from repro.core.lrc import (LrcCellConfig, init_lrc_params,
                                 input_features, lrc_step)
+    from repro.kernels.lrc_deer.ops import (lrc_deer_solve, pack_lrc_params,
+                                            sharded_lrc_deer_solve)
+
+    toy = os.environ.get("SEQ_PARALLEL_TOY") == "1"
+    t, b, d = (TOY_T, TOY_B, TOY_D) if toy else (T, B, D)
+    iters = TOY_ITERS if toy else ITERS
 
     mesh = jax.make_mesh((N_DEV,), ("data",))
-    cfg = LrcCellConfig(d_input=D, d_state=D)
+    cfg = LrcCellConfig(d_input=d, d_state=d)
     p = init_lrc_params(cfg, jax.random.PRNGKey(0))
-    u = jax.random.normal(jax.random.PRNGKey(1), (T, B, D))
+    u = jax.random.normal(jax.random.PRNGKey(1), (t, b, d))
     s_u, eps_u = input_features(p, u)
     step = lambda x, fs, cp: lrc_step(cp, cfg, x, *fs)
-    x0 = jnp.zeros((B, D))
-    dc = DeerConfig(max_iters=ITERS, mode="fixed", grad="unroll")
+    x0 = jnp.zeros((b, d))
+    dc = DeerConfig(max_iters=iters, mode="fixed", grad="unroll")
+    ec = ElkConfig(max_iters=iters, mode="fixed")
 
-    def replicated(su, eu, pp):
-        return deer_solve(step, (su, eu), x0, T, dc, params=pp)[0]
+    # fused tier operates on (T, D) with the batch folded into channels
+    su_f = s_u.reshape(t, b * d)
+    eu_f = eps_u.reshape(t, b * d)
+    pp_f = jnp.tile(pack_lrc_params(p), (1, b))
+    x0_f = jnp.zeros((b * d,))
 
-    def sharded(su, eu, pp):
-        return sharded_deer_solve(step, (su, eu), x0, T, dc, mesh=mesh,
-                                  seq_axis="data", params=pp)[0]
+    rows = []
 
-    def measure(name, fn):
+    def measure(name, fn, args):
         with mesh:
             jitted = jax.jit(fn)
-            lowered = jitted.lower(s_u, eps_u, p)
-            compiled = lowered.compile()
+            compiled = jitted.lower(*args).compile()
             mem = "mem_na"
+            temp_bytes = arg_bytes = None
             try:
                 ma = compiled.memory_analysis()
                 if ma is not None:
-                    mem = (f"temp_bytes={int(ma.temp_size_in_bytes)}"
-                           f";arg_bytes={int(ma.argument_size_in_bytes)}")
+                    temp_bytes = int(ma.temp_size_in_bytes)
+                    arg_bytes = int(ma.argument_size_in_bytes)
+                    mem = f"temp_bytes={temp_bytes};arg_bytes={arg_bytes}"
             except Exception:
                 pass
-            jax.block_until_ready(jitted(s_u, eps_u, p))   # warmup
+            jax.block_until_ready(jitted(*args))   # warmup
             ts = []
             for _ in range(3):
                 t0 = time.perf_counter()
-                jax.block_until_ready(jitted(s_u, eps_u, p))
+                jax.block_until_ready(jitted(*args))
                 ts.append(time.perf_counter() - t0)
         us = float(np.median(ts) * 1e6)
-        tok_s = T * B / (us * 1e-6)
+        tok_s = t * b / (us * 1e-6)
+        rows.append({"name": name, "us_per_call": us, "tokens_per_s": tok_s,
+                     "temp_bytes": temp_bytes, "arg_bytes": arg_bytes,
+                     "T": t, "B": b, "D": d, "iters": iters,
+                     "n_dev": N_DEV})
         print(f"{name},{us:.1f},tokens_per_s={tok_s:.0f};{mem}", flush=True)
 
-    measure(f"deer_replicated_T{T}", replicated)
-    measure(f"deer_seq_sharded_T{T}_P{N_DEV}", sharded)
+    lax_args = (s_u, eps_u, p)
+    measure(f"deer_replicated_T{t}",
+            lambda su, eu, pp: deer_solve(step, (su, eu), x0, t, dc,
+                                          params=pp)[0], lax_args)
+    measure(f"deer_seq_sharded_T{t}_P{N_DEV}",
+            lambda su, eu, pp: sharded_deer_solve(
+                step, (su, eu), x0, t, dc, mesh=mesh, seq_axis="data",
+                params=pp)[0], lax_args)
+    measure(f"elk_replicated_T{t}",
+            lambda su, eu, pp: elk_solve(step, (su, eu), x0, t, ec,
+                                         params=pp)[0], lax_args)
+    measure(f"elk_seq_sharded_T{t}_P{N_DEV}",
+            lambda su, eu, pp: sharded_elk_solve(
+                step, (su, eu), x0, t, ec, mesh=mesh, seq_axis="data",
+                params=pp)[0], lax_args)
+
+    fused_args = (su_f, eu_f, pp_f, x0_f)
+    chunk = min(256, t // N_DEV)
+    measure(f"fused_replicated_T{t}",
+            lambda su, eu, pp, x_: lrc_deer_solve(
+                su, eu, pp, x_, n_iters=iters, chunk=chunk), fused_args)
+    measure(f"fused_seq_sharded_T{t}_P{N_DEV}",
+            lambda su, eu, pp, x_: sharded_lrc_deer_solve(
+                su, eu, pp, x_, mesh=mesh, seq_axis="data", n_iters=iters,
+                chunk=chunk), fused_args)
+
+    out = os.environ.get("BENCH_JSON_OUT")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {out}", file=sys.stderr, flush=True)
 
 
 def bench_seq_parallel() -> None:

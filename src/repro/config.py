@@ -43,8 +43,11 @@ class SSMConfig:
     deer_iters: int = 8           # lrc mixer Newton iterations (fixed mode)
     # sequence-parallel DEER for the lrc mixer: shard the Newton solve's
     # time axis over the "model" mesh axis (core/deer_sharded.py) instead
-    # of replicating the (T, d_inner) trajectory per device. Falls back to
-    # the replicated solver when no mesh / non-divisible T.
+    # of replicating the (T, d_inner) trajectory per device. When the batch
+    # cannot shard over the DP axes (batch=1 long-sequence cells, e.g.
+    # long_500k), the time axis is sharded over ("data", "model") so the
+    # whole mesh still participates. Falls back to the replicated solver
+    # when no mesh / non-divisible T.
     seq_shard: bool = False
 
 

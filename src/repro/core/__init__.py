@@ -2,16 +2,20 @@
 with exact parallel (DEER/ELK) fixed-point iterations.
 
 Public surface:
-  scan      — diagonal linear recurrence solvers (assoc / chunked / sharded)
-  lrc       — the LrcSSM cell (Eqs. 8-14)
-  deer      — exact-Newton parallel solver + implicit differentiation
-  elk       — trust-region (parallel Kalman) solver
-  variants  — Gru/Mgu/Lstm/Stc diagonal-design cells (Appendix D)
-  full_lrc  — dense-Jacobian LRC + quasi-DEER baseline (Table 9)
-  block     — Figure 1 block architecture & sequence classifier
+  scan          — diagonal linear recurrence solvers (assoc/chunked/sharded)
+  lrc           — the LrcSSM cell (Eqs. 8-14)
+  deer          — exact-Newton parallel solver + implicit differentiation
+  deer_sharded  — the whole Newton solve on time shards (seq parallel)
+  elk           — trust-region (parallel Kalman) solver
+  elk_sharded   — the whole ELK solve on time shards (seq parallel)
+  variants      — Gru/Mgu/Lstm/Stc diagonal-design cells (Appendix D)
+  full_lrc      — dense-Jacobian LRC + quasi-DEER baseline (Table 9)
+  block         — Figure 1 block architecture & sequence classifier
 """
 from repro.core.deer import DeerConfig, deer_solve, deer_residual
+from repro.core.deer_sharded import sharded_deer_solve
 from repro.core.elk import ElkConfig, elk_solve
+from repro.core.elk_sharded import sharded_elk_solve
 from repro.core.lrc import (LrcCellConfig, init_lrc_params, input_features,
                             lrc_gates, lrc_step, lrc_step_and_diag_jac,
                             lrc_sequential)

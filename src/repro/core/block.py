@@ -12,10 +12,22 @@ The SSM core is selectable: "lrc" (the paper's model), "stc", "gru", "mgu",
 solver, or "elk" solver, or "sequential" (oracle; O(T) depth) for parity
 tests and the runtime benchmark (Table 6 comparison).
 
-Long-context scaling: with ``seq_axis`` set (and an active mesh), the DEER
-solve itself runs sequence-parallel (core/deer_sharded.py) — the trajectory
-is sharded over the mesh for the whole Newton iteration, so per-device
-memory is O(T/P * D) instead of O(T * D).
+Long-context scaling — the block picks the fastest applicable solver tier:
+
+  1. sharded-fused   (kernels/lrc_deer): the fused Pallas Newton iteration
+     on a local T/P time slice per device, cross-shard prefix fixup between
+     kernel invocations. Requires ``fused`` + ``seq_axis`` + an active mesh
+     + the plain-lrc cell form; forward-only. Interpret-mode on CPU.
+  2. sharded-lax     (core/deer_sharded.py / core/elk_sharded.py): the
+     whole Newton/ELK solve on time shards — per-device trajectory memory
+     O(T/P * D) instead of O(T * D). Requires ``seq_axis`` + an active
+     mesh; differentiable (unroll or implicit).
+  3. replicated      (core/deer.py / core/elk.py, vmapped over batch).
+
+``seq_axis`` may be a mesh-axis name or a TUPLE of names (time sharded over
+the flattened product axis — e.g. ("data", "model") engages the whole mesh
+for a batch=1 long-sequence cell). Any tier falls back to the next when its
+preconditions (mesh axes present, T divisible by the shard count) fail.
 """
 from __future__ import annotations
 
@@ -55,11 +67,19 @@ class LrcSSMConfig:
     pool: str = "mean"           # mean | last  (classification readout)
     param_dtype: Any = jnp.float32
     include_time: bool = False   # append normalised time channel
-    # sequence-parallel DEER (core/deer_sharded.py): shard the time axis of
-    # the Newton solve over this mesh axis. None = replicated solver. Takes
-    # effect only for solver="deer" under an active mesh containing the
-    # axis; otherwise falls back to the vmapped replicated path.
-    seq_axis: Optional[str] = None
+    # sequence-parallel solve (core/deer_sharded.py, core/elk_sharded.py):
+    # shard the time axis of the Newton/ELK solve over this mesh axis — a
+    # name or a tuple of names (time over the flattened product axis). None
+    # = replicated solver. Takes effect for solver="deer" | "elk" under an
+    # active mesh containing the axes; otherwise falls back to the vmapped
+    # replicated path.
+    seq_axis: Optional[Any] = None
+    # fused-kernel tier (kernels/lrc_deer): drive the sequence-parallel DEER
+    # solve with the fused Pallas iteration (sharded-fused > sharded-lax >
+    # replicated). Honoured only for the plain lrc cell (solver="deer",
+    # mode="fixed", no rho/damping/jac_clip, real params, both
+    # state-dependency flags). Forward-only; interpret-mode on CPU.
+    fused: bool = False
 
 
 def _cell_cfg(cfg: LrcSSMConfig):
@@ -137,14 +157,51 @@ def _solve_cell(cfg: LrcSSMConfig, cell_p: Params, h: jax.Array
 
 def _seq_shard_mesh(cfg: LrcSSMConfig, T: int):
     """The active mesh when the sequence-parallel solve applies, else None."""
-    if cfg.seq_axis is None or cfg.solver != "deer":
+    if cfg.seq_axis is None or cfg.solver not in ("deer", "elk"):
         return None
+    from repro.core.deer_sharded import n_seq_shards
     from repro.distributed.sharding import current_mesh
     mesh = current_mesh()
-    if (mesh is None or cfg.seq_axis not in mesh.axis_names
-            or T % mesh.shape[cfg.seq_axis] != 0):
+    if mesh is None:
+        return None
+    n = n_seq_shards(mesh, cfg.seq_axis)
+    if n == 0 or T % n != 0:
         return None
     return mesh
+
+
+def _fused_applicable(cfg: LrcSSMConfig) -> bool:
+    """The fused Pallas tier covers exactly the kernel's closed-form cell:
+    plain real-parameter lrc with both state-dependency flags, fixed-count
+    undamped Newton."""
+    d = cfg.deer
+    return (cfg.fused and cfg.cell == "lrc" and cfg.solver == "deer"
+            and cfg.rho is None and cfg.state_dependent_a
+            and cfg.state_dependent_b and not cfg.complex_state_params
+            and d.mode == "fixed" and d.damping == 1.0 and d.jac_clip is None)
+
+
+def _solve_cell_fused_sharded(cfg: LrcSSMConfig, cell_p: Params,
+                              hn: jax.Array, mesh
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Sharded-fused tier: (B, T, H) -> (B, T, S) with the fused Pallas
+    Newton iteration on time shards. The batch folds into the channel axis
+    — every kernel quantity is per-channel elementwise, so the packed
+    (10, S) parameters simply tile to (10, B*S)."""
+    from repro.kernels.lrc_deer.ops import (pack_lrc_params,
+                                            sharded_lrc_deer_solve)
+    B, T, _ = hn.shape
+    S = cfg.d_state
+    hT = jnp.swapaxes(hn, 0, 1)                       # (T, B, H)
+    s_u, eps_u = input_features(cell_p, hT)           # (T, B, S)
+    pp = jnp.tile(pack_lrc_params(cell_p), (1, B))
+    x0 = jnp.zeros((B * S,), hn.dtype)
+    states = sharded_lrc_deer_solve(
+        s_u.reshape(T, B * S), eps_u.reshape(T, B * S), pp, x0,
+        mesh=mesh, seq_axis=cfg.seq_axis, n_iters=cfg.deer.max_iters,
+        dt=cfg.dt, interpret=jax.default_backend() != "tpu")
+    states = jnp.swapaxes(states.reshape(T, B, S), 0, 1)
+    return states, jnp.asarray(cfg.deer.max_iters, jnp.int32)
 
 
 def _solve_cell_seq_sharded(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
@@ -154,8 +211,10 @@ def _solve_cell_seq_sharded(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
     The batch rides along in the trailing dims ((T, B, ·) layout — every
     cell step is elementwise/matmul-on-last-dim, so the solver is oblivious
     to it), and the TIME axis is sharded over cfg.seq_axis for the whole
-    Newton iteration (per-device trajectory (T/P, B, S))."""
+    Newton (solver="deer") or ELK (solver="elk") iteration (per-device
+    trajectory (T/P, B, S))."""
     from repro.core.deer_sharded import sharded_deer_solve
+    from repro.core.elk_sharded import sharded_elk_solve
     ccfg = _cell_cfg(cfg)
     hT = jnp.swapaxes(hn, 0, 1)                       # (T, B, H)
     T, B = hT.shape[0], hT.shape[1]
@@ -172,9 +231,14 @@ def _solve_cell_seq_sharded(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
         step = lambda x, fs, cp: step_fn(cp, ccfg, x, *fs)
         x0 = jnp.zeros((B, cfg.d_state), hn.dtype)
 
-    states, iters = sharded_deer_solve(step, feats, x0, T, cfg.deer,
-                                       mesh=mesh, seq_axis=cfg.seq_axis,
-                                       params=cell_p)
+    if cfg.solver == "elk":
+        states, iters = sharded_elk_solve(step, feats, x0, T, cfg.elk,
+                                          mesh=mesh, seq_axis=cfg.seq_axis,
+                                          params=cell_p)
+    else:
+        states, iters = sharded_deer_solve(step, feats, x0, T, cfg.deer,
+                                           mesh=mesh, seq_axis=cfg.seq_axis,
+                                           params=cell_p)
     if cfg.complex_state_params:
         states = states.real
     if cfg.cell == "lstm":
@@ -185,8 +249,14 @@ def _solve_cell_seq_sharded(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
 def _solve_block(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
                  ) -> Tuple[jax.Array, jax.Array]:
     """Solve one block's cell over the batch: (B, T, H) -> ((B, T, S), iters
-    scalar). Dispatches to the sequence-parallel solver when configured."""
+    scalar). Tier order: sharded-fused > sharded-lax > replicated — a tier
+    whose preconditions fail falls to the NEXT tier (a non-viable fused
+    shard layout must not silently re-replicate the trajectory)."""
     mesh = _seq_shard_mesh(cfg, hn.shape[1])
+    if mesh is not None and _fused_applicable(cfg):
+        from repro.kernels.lrc_deer.ops import sharded_fused_viable
+        if sharded_fused_viable(hn.shape[1], mesh, cfg.seq_axis):
+            return _solve_cell_fused_sharded(cfg, cell_p, hn, mesh)
     if mesh is not None:
         return _solve_cell_seq_sharded(cfg, cell_p, hn, mesh)
     states, iters = jax.vmap(lambda seq: _solve_cell(cfg, cell_p, seq))(hn)

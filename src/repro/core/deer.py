@@ -175,8 +175,15 @@ def _dfp_fwd(step_fn, feats, params, x0, init_guess, cfg):
     return states, (feats, params, x0, states)
 
 
-def _dfp_bwd(step_fn, cfg, res, gbar):
-    feats, params, x0, states = res
+def implicit_adjoint(step_fn, feats, params, x0, states, gbar):
+    """IFT adjoint of the fixed point x = F(shift(x)) at the converged
+    ``states``. Returns (d_feats, d_params, d_x0).
+
+    SHARED by the DEER and ELK replicated solvers: the ELK trust-region
+    iteration converges to the same fixed-point equation (the smoother's
+    observations y = x^prev become self-consistent at the solution), so the
+    backward pass is identical.
+    """
     shifted = _shift_right(states, x0)
 
     fn_of_x = lambda xs: step_fn(xs, feats, params)
@@ -194,6 +201,13 @@ def _dfp_bwd(step_fn, cfg, res, gbar):
     _, vjp = jax.vjp(step_all, shifted, feats, params)
     d_shifted, d_feats, d_params = vjp(g)
     d_x0 = d_shifted[0]           # shift puts x0 at slot 0
+    return d_feats, d_params, d_x0
+
+
+def _dfp_bwd(step_fn, cfg, res, gbar):
+    feats, params, x0, states = res
+    d_feats, d_params, d_x0 = implicit_adjoint(step_fn, feats, params, x0,
+                                               states, gbar)
     d_init = jnp.zeros_like(states)  # init guess does not affect the solution
     return d_feats, d_params, d_x0, d_init
 

@@ -57,10 +57,33 @@ from repro.distributed import compat
 
 
 # ---------------------------------------------------------------------------
+# axis plumbing
+# ---------------------------------------------------------------------------
+
+def seq_axis_tuple(seq_axis) -> tuple:
+    """Normalise a seq_axis spec (name or tuple of names) to a tuple."""
+    return seq_axis if isinstance(seq_axis, tuple) else (seq_axis,)
+
+
+def n_seq_shards(mesh, seq_axis) -> int:
+    """Number of time shards for ``seq_axis`` (a mesh axis name or a tuple of
+    them — sharded over the row-major-flattened product axis). Returns 0 when
+    any named axis is absent from the mesh (caller falls back to the
+    replicated solver)."""
+    shape = dict(mesh.shape)
+    n = 1
+    for a in seq_axis_tuple(seq_axis):
+        if a not in shape:
+            return 0
+        n *= shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
 # boundary exchange
 # ---------------------------------------------------------------------------
 
-def _left_boundary(states_s: jax.Array, x0: jax.Array, seq_axis: str,
+def _left_boundary(states_s: jax.Array, x0: jax.Array, seq_axis,
                    n_shards: int) -> jax.Array:
     """State just left of this shard: neighbour's last state, or x0 on
     shard 0. One (D,)-sized ppermute."""
@@ -73,7 +96,7 @@ def _left_boundary(states_s: jax.Array, x0: jax.Array, seq_axis: str,
     return jnp.where(idx == 0, jnp.asarray(x0, states_s.dtype), prev_last)
 
 
-def _right_jac_first(jac_s: jax.Array, seq_axis: str,
+def _right_jac_first(jac_s: jax.Array, seq_axis,
                      n_shards: int) -> jax.Array:
     """J at the first step of the right neighbour (zero past the end) —
     the boundary element of the shifted-left Jacobian the adjoint needs."""
@@ -121,9 +144,9 @@ def _specs(feats, params, seq_axis, batch_axes):
 
 def _replicated_axes(seq_axis, batch_axes):
     """Mesh axes over which per-shard PARTIAL sums must be psum'd to make a
-    replicated quantity: the sequence axis always, plus the batch axes when
+    replicated quantity: the sequence axes always, plus the batch axes when
     the batch rides sharded through the solve."""
-    axes = (seq_axis,)
+    axes = seq_axis_tuple(seq_axis)
     if batch_axes:
         axes = axes + (batch_axes if isinstance(batch_axes, tuple)
                        else (batch_axes,))
@@ -132,7 +155,7 @@ def _replicated_axes(seq_axis, batch_axes):
 
 def _solve_shmapped(step_fn, feats, params, x0, init_guess, cfg: DeerConfig,
                     mesh, seq_axis, batch_axes):
-    n_shards = mesh.shape[seq_axis]
+    n_shards = n_seq_shards(mesh, seq_axis)
     t_spec, x0_spec, feats_specs, params_specs = _specs(
         feats, params, seq_axis, batch_axes)
 
@@ -195,9 +218,18 @@ def _sfp_fwd(step_fn, feats, params, x0, init_guess, cfg, mesh, seq_axis,
     return states, (feats, params, x0, states)
 
 
-def _sfp_bwd(step_fn, cfg, mesh, seq_axis, batch_axes, res, gbar):
-    feats, params, x0, states = res
-    n_shards = mesh.shape[seq_axis]
+def sharded_implicit_adjoint(step_fn, feats, params, x0, states, gbar, *,
+                             mesh, seq_axis, batch_axes):
+    """IFT adjoint of the fixed point x = F(shift(x)), distributed on time
+    shards. SHARED between the sharded DEER and sharded ELK solvers: both
+    iterations converge to the same fixed-point equation, so the backward
+    pass — reversed suffix-summary scan for g_t = gbar_t + J_{t+1} g_{t+1},
+    one local vjp, psum of parameter cotangents over the sequence axes AND
+    any batch shards, x0 cotangent from shard 0 — is identical.
+
+    Returns (d_feats, d_params, d_x0).
+    """
+    n_shards = n_seq_shards(mesh, seq_axis)
     t_spec, x0_spec, feats_specs, params_specs = _specs(
         feats, params, seq_axis, batch_axes)
 
@@ -238,12 +270,19 @@ def _sfp_bwd(step_fn, cfg, mesh, seq_axis, batch_axes, res, gbar):
             seq_axis)
         return d_feats, d_params, d_x0
 
-    d_feats, d_params, d_x0 = compat.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(feats_specs, params_specs, x0_spec, t_spec, t_spec),
         out_specs=(feats_specs, params_specs, x0_spec),
         check_vma=False,
     )(feats, params, x0, states, gbar)
+
+
+def _sfp_bwd(step_fn, cfg, mesh, seq_axis, batch_axes, res, gbar):
+    feats, params, x0, states = res
+    d_feats, d_params, d_x0 = sharded_implicit_adjoint(
+        step_fn, feats, params, x0, states, gbar, mesh=mesh,
+        seq_axis=seq_axis, batch_axes=batch_axes)
     d_init = jnp.zeros_like(states)  # init guess does not affect the solution
     return d_feats, d_params, d_x0, d_init
 
@@ -257,7 +296,7 @@ _sharded_fixed_point.defvjp(_sfp_fwd, _sfp_bwd)
 
 def sharded_deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
                        cfg: DeerConfig = DeerConfig(), *, mesh,
-                       seq_axis: str = "data",
+                       seq_axis="data",
                        init_guess: Optional[jax.Array] = None,
                        params=None,
                        batch_axes=None) -> Tuple[jax.Array, jax.Array]:
@@ -270,21 +309,23 @@ def sharded_deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
 
       mesh / seq_axis: the device mesh and the axis the time dimension is
         sharded over (P shards; per-device trajectory is (T/P, ...)).
+        ``seq_axis`` may be a TUPLE of mesh axes (e.g. ("data", "model")) —
+        the time axis is then sharded over the row-major-flattened product
+        axis, engaging the whole mesh for batch=1 long-sequence cells.
       batch_axes: optional mesh axis (or tuple) the SECOND feats dimension /
         first x0 dimension is sharded over, so a batch folded into the state
         dims stays distributed instead of being all-gathered into every
         shard (the ring-attention batch-spec lesson).
 
     Falls back to the replicated ``deer_solve`` when T is not divisible by
-    the shard count or ``seq_axis`` is missing from the mesh.
+    the shard count or any ``seq_axis`` name is missing from the mesh.
     """
     if params is None:
         orig = step_fn
         step_fn = lambda x, f, _p: orig(x, f)
         params = ()
 
-    n_shards = mesh.shape.get(seq_axis, 0) if hasattr(mesh.shape, "get") \
-        else dict(mesh.shape).get(seq_axis, 0)
+    n_shards = n_seq_shards(mesh, seq_axis)
     if n_shards == 0 or T % max(n_shards, 1) != 0:
         return deer_solve(step_fn, feats, x0, T, cfg,
                           init_guess=init_guess, params=params)

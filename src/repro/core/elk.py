@@ -29,12 +29,13 @@ a robustness fallback selectable per-layer (solver="elk").
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.deer import DeerConfig, StepFn, _shift_right
+from repro.core.deer import DeerConfig, StepFn, _shift_right, implicit_adjoint
 
 
 # ---------------------------------------------------------------------------
@@ -135,38 +136,32 @@ class ElkConfig:
     tol: float = 1e-6
     mode: str = "fixed"
     trust_mu: float = 0.1        # observation precision; 0 => pure DEER step
+    grad: str = "unroll"         # "unroll" | "implicit" (IFT at fixed point)
 
 
-def elk_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
-              cfg: ElkConfig = ElkConfig(),
-              init_guess: Optional[jax.Array] = None,
-              params=None) -> Tuple[jax.Array, jax.Array]:
-    """Trust-region (LM/Kalman) variant of deer_solve. Same contract."""
-    if params is None:
-        orig = step_fn
-        step_fn = lambda x, f, _p: orig(x, f)
-        params = ()
-    if init_guess is None:
-        init_guess = jnp.zeros((T,) + x0.shape, x0.dtype)
+def _elk_iteration(step_fn, feats, params, x0, states, cfg: ElkConfig):
+    """One LM-damped Newton step = linearise + one parallel Kalman smoother
+    pass. Shared by the replicated loops below; the sharded solver
+    (core/elk_sharded.py) mirrors this body on time shards."""
+    shifted = _shift_right(states, x0)
+    fn = lambda xs: step_fn(xs, feats, params)
+    ones = jnp.ones_like(shifted)
+    f_s, jac = jax.jvp(fn, (shifted,), (ones,))
+    b_s = f_s - jac * shifted
+    q = jnp.ones_like(states)
+    r = jnp.full_like(states, 1.0 / max(cfg.trust_mu, 1e-12))
+    P0 = jnp.zeros_like(x0) + 1e-6
+    ms, _ = kalman_smoother_parallel(jac, b_s, q, states, r, x0, P0)
+    return ms
 
-    r_obs = 1.0 / max(cfg.trust_mu, 1e-12)
 
-    def iteration(states):
-        shifted = _shift_right(states, x0)
-        fn = lambda xs: step_fn(xs, feats, params)
-        ones = jnp.ones_like(shifted)
-        f_s, jac = jax.jvp(fn, (shifted,), (ones,))
-        b_s = f_s - jac * shifted
-        q = jnp.ones_like(states)
-        r = jnp.full_like(states, r_obs)
-        m0 = x0
-        P0 = jnp.zeros_like(x0) + 1e-6
-        ms, _ = kalman_smoother_parallel(jac, b_s, q, states, r, m0, P0)
-        return ms
-
+def _elk_unrolled(step_fn, feats, params, x0, init_guess, cfg: ElkConfig
+                  ) -> Tuple[jax.Array, jax.Array]:
     if cfg.mode == "fixed":
         states = jax.lax.fori_loop(
-            0, cfg.max_iters, lambda _, st: iteration(st), init_guess)
+            0, cfg.max_iters,
+            lambda _, st: _elk_iteration(step_fn, feats, params, x0, st, cfg),
+            init_guess)
         return states, jnp.asarray(cfg.max_iters, jnp.int32)
 
     def cond(carry):
@@ -175,10 +170,57 @@ def elk_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
 
     def body(carry):
         st, _, it = carry
-        new = iteration(st)
+        new = _elk_iteration(step_fn, feats, params, x0, st, cfg)
         return new, jnp.max(jnp.abs(new - st)), it + 1
 
     states, _, iters = jax.lax.while_loop(
         cond, body,
         (init_guess, jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32)))
     return states, iters
+
+
+# At convergence the smoother's observations y = x^prev are self-consistent
+# and the residuals vanish, so states solve the SAME fixed-point equation
+# x = F(shift(x)) as DEER — the implicit adjoint is shared (core/deer.py).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5))
+def _elk_fixed_point(step_fn, feats, params, x0, init_guess, cfg: ElkConfig):
+    states, _ = _elk_unrolled(step_fn, feats, params, x0,
+                              jax.lax.stop_gradient(init_guess), cfg)
+    return states
+
+
+def _efp_fwd(step_fn, feats, params, x0, init_guess, cfg):
+    states = _elk_fixed_point(step_fn, feats, params, x0, init_guess, cfg)
+    return states, (feats, params, x0, states)
+
+
+def _efp_bwd(step_fn, cfg, res, gbar):
+    feats, params, x0, states = res
+    d_feats, d_params, d_x0 = implicit_adjoint(step_fn, feats, params, x0,
+                                               states, gbar)
+    return d_feats, d_params, d_x0, jnp.zeros_like(states)
+
+
+_elk_fixed_point.defvjp(_efp_fwd, _efp_bwd)
+
+
+def elk_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
+              cfg: ElkConfig = ElkConfig(),
+              init_guess: Optional[jax.Array] = None,
+              params=None) -> Tuple[jax.Array, jax.Array]:
+    """Trust-region (LM/Kalman) variant of deer_solve. Same contract:
+    returns (states (T, ...), n_iters ()), differentiable per ``cfg.grad``
+    w.r.t. feats, x0 and params (pass cell parameters via ``params``, not a
+    closure, when using grad="implicit")."""
+    if params is None:
+        orig = step_fn
+        step_fn = lambda x, f, _p: orig(x, f)
+        params = ()
+    if init_guess is None:
+        init_guess = jnp.zeros((T,) + x0.shape, x0.dtype)
+
+    if cfg.grad == "implicit":
+        states = _elk_fixed_point(step_fn, feats, params, x0, init_guess, cfg)
+        return states, jnp.asarray(cfg.max_iters, jnp.int32)
+    return _elk_unrolled(step_fn, feats, params, x0, init_guess, cfg)

@@ -1,0 +1,341 @@
+"""Sequence-parallel ELK solver: the trust-region (LM/Kalman) Newton
+iteration on time shards.
+
+``core/elk.py`` runs each ELK iteration as one parallel Kalman smoother pass
+over the FULL (T, D) trajectory, replicated on every device. This module
+composes the same iteration with the cross-chip shard decomposition of
+``core/deer_sharded.py``: the trajectory lives sharded over one or more mesh
+axes for the entire solve, so per-device memory is O(T/P * D) and the
+collective volume per iteration is O(P * D) — independent of T.
+
+Per ELK iteration, on each time shard (all inside one shard_map):
+
+  1. boundary exchange — the shard's left-edge predecessor state arrives
+     from the left neighbour with one ppermute of a (D,) state (shard 0
+     substitutes x0); identical to the DEER solver's exchange.
+  2. local linearisation — one jvp over the local (T/P, D) slice gives the
+     exact diagonal Jacobian J and affine term b.
+  3. distributed smoother — BOTH smoother passes are sharded associative
+     scans: each shard scans its local 5-tuple filtering elements
+     (Sarkka & Garcia-Fernandez), all-gathers the P per-shard summary
+     elements, applies the exclusive cross-shard prefix locally; the reverse
+     (RTS) pass mirrors this with 3-tuple smoothing elements and an
+     exclusive cross-shard SUFFIX. The smoothing elements need F/c/q at
+     global t+1, which crosses shard boundaries: one more ppermute of three
+     (D,) rows from the right neighbour.
+  4. convergence (``tol`` mode) — pmax of the per-shard residuals, so every
+     shard runs the identical while_loop trip count.
+
+Differentiation mirrors core/deer_sharded.py — the ELK iteration converges
+to the same fixed point x = F(shift(x)) as DEER (the smoother's
+observations become self-consistent at the solution), so grad="implicit"
+reuses ``sharded_implicit_adjoint`` verbatim: reversed suffix-summary scan,
+one local vjp, parameter cotangents psum'd over the sequence axes AND any
+batch shards, x0's cotangent from shard 0.
+
+``seq_axis`` may be a tuple of mesh axes (e.g. ("data", "model")): the time
+axis is sharded over the row-major-flattened product axis, engaging the
+whole mesh for batch=1 long-sequence cells.
+
+Fallback: when T is not divisible by the shard count (or any axis is absent
+from the mesh) the replicated ``elk_solve`` is used — same contract.
+
+All collectives resolve through distributed/compat.py (version-portable
+shard_map: jax 0.4.x through current).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deer_sharded import (_left_boundary, _replicated_axes,
+                                     _specs, n_seq_shards,
+                                     sharded_implicit_adjoint)
+from repro.core.elk import (ElkConfig, _filter_combine, _smooth_combine,
+                            elk_solve)
+from repro.core.deer import StepFn
+from repro.distributed import compat
+
+
+# ---------------------------------------------------------------------------
+# sharded associative scan with an arbitrary combine
+# ---------------------------------------------------------------------------
+
+def _sharded_cumulative(combine, elems, identities, seq_axis,
+                        reverse: bool = False):
+    """GLOBAL inclusive cumulative of ``combine`` over time shards, from the
+    per-shard local slices. MUST run inside a shard_map sharded over
+    ``seq_axis``.
+
+    ``elems``: tuple of (T_local, ...) arrays forming one scan element per
+    step. ``identities``: matching tuple of scalars — the combine's identity
+    element, substituted for the exclusive prefix on the edge shard.
+
+    Forward: local prefix scan, all-gather of each shard's LAST cumulative
+    element (the whole-shard summary), redundant exclusive prefix over the P
+    summaries, folded in as the EARLIER argument of ``combine``. Reverse
+    (suffix) mirrors it: summaries are each shard's FIRST reverse-cumulative
+    element, the exclusive suffix folds in as the LATER argument — both
+    combines here take the accumulator side first, so the same call works.
+
+    The per-element summaries are stacked so each pass issues ONE
+    all-gather (launch latency, not volume, dominates P-sized collectives);
+    total volume len(elems) * P * D per call — independent of T.
+    """
+    cum = jax.lax.associative_scan(combine, elems, axis=0, reverse=reverse)
+    idx = compat.axis_index(seq_axis)
+    edge = 0 if reverse else -1
+    gathered = compat.all_gather(                      # (P, len(elems), ...)
+        jnp.stack([c[edge] for c in cum], axis=0), seq_axis)
+    summ = tuple(gathered[:, i] for i in range(len(cum)))
+    n = summ[0].shape[0]
+    acc = jax.lax.associative_scan(combine, summ, axis=0, reverse=reverse)
+    if reverse:
+        at_edge = idx == n - 1
+        sel = jnp.minimum(idx + 1, n - 1)
+    else:
+        at_edge = idx == 0
+        sel = jnp.maximum(idx - 1, 0)
+    excl = tuple(jnp.where(at_edge, jnp.full_like(a[0], ident), a[sel])
+                 for ident, a in zip(identities, acc))
+    return combine(excl, cum)
+
+
+_FILTER_IDENTITY = (1.0, 0.0, 0.0, 0.0, 0.0)   # (A, b, C, eta, J)
+_SMOOTH_IDENTITY = (1.0, 0.0, 0.0)             # (E, g, L)
+
+
+# ---------------------------------------------------------------------------
+# per-shard parallel Kalman smoother
+# ---------------------------------------------------------------------------
+
+def _right_first_rows(rows, seq_axis, n_shards: int, fillers):
+    """First time-step of each array in ``rows`` on the RIGHT neighbour
+    (``fillers`` past the end) — the boundary elements the shifted-left
+    smoothing pass needs. One ppermute of len(rows) (D,) rows."""
+    if n_shards == 1:
+        return tuple(jnp.full_like(r[0], f) for r, f in zip(rows, fillers))
+    idx = compat.axis_index(seq_axis)
+    stacked = jnp.stack([r[0] for r in rows], axis=0)
+    nxt = compat.ppermute(stacked, seq_axis,
+                          [(i + 1, i) for i in range(n_shards - 1)])
+    last = idx == n_shards - 1
+    return tuple(jnp.where(last, jnp.full_like(nxt[i], f), nxt[i])
+                 for i, f in enumerate(fillers))
+
+
+def kalman_smoother_parallel_local(F: jax.Array, c: jax.Array, q: jax.Array,
+                                   y: jax.Array, r: jax.Array,
+                                   m0: jax.Array, P0: jax.Array,
+                                   seq_axis, n_shards: int
+                                   ) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard body of ``core.elk.kalman_smoother_parallel`` — identical
+    contract, but F/c/q/y/r are the LOCAL (T/P, ...) time slices and the
+    two associative scans run distributed (local scan + P-sized summary
+    exchange + exclusive prefix/suffix fixup). MUST run inside a shard_map
+    sharded over ``seq_axis``; m0/P0 are replicated across time shards.
+    """
+    q = jnp.broadcast_to(jnp.asarray(q, y.dtype), y.shape)
+    r = jnp.broadcast_to(jnp.asarray(r, y.dtype), y.shape)
+    idx = compat.axis_index(seq_axis)
+    first_shard = idx == 0
+
+    # ---- filtering elements (standard form everywhere) ----------------------
+    S = q + r
+    K = q / S
+    A = (1.0 - K) * F
+    b = c + K * (y - c)
+    C = (1.0 - K) * q
+    eta = F * (y - c) / S
+    J = F * F / S
+
+    # Global element 0 (shard 0 only) conditions on the prior (m0, P0).
+    P1p = F[0] * F[0] * P0 + q[0]
+    m1p = F[0] * m0 + c[0]
+    S1 = P1p + r[0]
+    K1 = P1p / S1
+    z0 = jnp.zeros_like(A[0])
+    A0 = jnp.where(first_shard, z0, A[0])
+    b0 = jnp.where(first_shard, m1p + K1 * (y[0] - m1p), b[0])
+    C0 = jnp.where(first_shard, (1.0 - K1) * P1p, C[0])
+    eta0 = jnp.where(first_shard, z0, eta[0])
+    J0 = jnp.where(first_shard, z0, J[0])
+
+    A = jnp.concatenate([A0[None], A[1:]], 0)
+    b = jnp.concatenate([b0[None], b[1:]], 0)
+    C = jnp.concatenate([C0[None], C[1:]], 0)
+    eta = jnp.concatenate([eta0[None], eta[1:]], 0)
+    J = jnp.concatenate([J0[None], J[1:]], 0)
+
+    fA, fb, fC, _, _ = _sharded_cumulative(
+        _filter_combine, (A, b, C, eta, J), _FILTER_IDENTITY, seq_axis)
+    m_f, P_f = fb, fC                           # filtered means/vars
+
+    # ---- smoothing elements (reverse suffix scan) ---------------------------
+    # F/c/q at global t+1: shift left, boundary from the right neighbour
+    # (fillers (1, 0, 1) past the global end — overwritten below anyway).
+    F_b, c_b, q_b = _right_first_rows((F, c, q), seq_axis, n_shards,
+                                      (1.0, 0.0, 1.0))
+    F_next = jnp.concatenate([F[1:], F_b[None]], 0)
+    c_next = jnp.concatenate([c[1:], c_b[None]], 0)
+    q_next = jnp.concatenate([q[1:], q_b[None]], 0)
+    Pp_next = F_next * F_next * P_f + q_next    # P_{t+1|t}
+    E = P_f * F_next / Pp_next
+    g = m_f - E * (F_next * m_f + c_next)
+    L = P_f - E * E * Pp_next
+    # global last element (last shard only): conditional == filtered marginal
+    last_shard = idx == n_shards - 1
+    E_l = jnp.where(last_shard, jnp.zeros_like(E[-1]), E[-1])
+    g_l = jnp.where(last_shard, m_f[-1], g[-1])
+    L_l = jnp.where(last_shard, P_f[-1], L[-1])
+    E = jnp.concatenate([E[:-1], E_l[None]], 0)
+    g = jnp.concatenate([g[:-1], g_l[None]], 0)
+    L = jnp.concatenate([L[:-1], L_l[None]], 0)
+
+    _, ms, Ls = _sharded_cumulative(_smooth_combine, (E, g, L),
+                                    _SMOOTH_IDENTITY, seq_axis, reverse=True)
+    return ms, Ls
+
+
+# ---------------------------------------------------------------------------
+# one ELK iteration on a time shard
+# ---------------------------------------------------------------------------
+
+def _local_elk_iteration(step_fn, feats_s, params, x0, states_s,
+                         cfg: ElkConfig, seq_axis, n_shards: int):
+    left = _left_boundary(states_s, x0, seq_axis, n_shards)
+    shifted = jnp.concatenate([left[None], states_s[:-1]], axis=0)
+    fn = lambda xs: step_fn(xs, feats_s, params)
+    ones = jnp.ones_like(shifted)
+    f_s, jac = jax.jvp(fn, (shifted,), (ones,))
+    b_s = f_s - jac * shifted
+    q = jnp.ones_like(states_s)
+    r = jnp.full_like(states_s, 1.0 / max(cfg.trust_mu, 1e-12))
+    P0 = jnp.zeros_like(x0) + 1e-6
+    ms, _ = kalman_smoother_parallel_local(jac, b_s, q, states_s, r, x0, P0,
+                                           seq_axis, n_shards)
+    return ms
+
+
+# ---------------------------------------------------------------------------
+# sharded ELK loop (forward)
+# ---------------------------------------------------------------------------
+
+def _elk_shmapped(step_fn, feats, params, x0, init_guess, cfg: ElkConfig,
+                  mesh, seq_axis, batch_axes):
+    n_shards = n_seq_shards(mesh, seq_axis)
+    t_spec, x0_spec, feats_specs, params_specs = _specs(
+        feats, params, seq_axis, batch_axes)
+
+    def local(feats_s, params_r, x0_r, init_s):
+        if cfg.mode == "fixed":
+            def body(_, st):
+                return _local_elk_iteration(step_fn, feats_s, params_r, x0_r,
+                                            st, cfg, seq_axis, n_shards)
+            states = jax.lax.fori_loop(0, cfg.max_iters, body, init_s)
+            return states, jnp.asarray(cfg.max_iters, jnp.int32)
+
+        def cond(carry):
+            _, diff, it = carry
+            return jnp.logical_and(diff > cfg.tol, it < cfg.max_iters)
+
+        def body(carry):
+            st, _, it = carry
+            new = _local_elk_iteration(step_fn, feats_s, params_r, x0_r, st,
+                                       cfg, seq_axis, n_shards)
+            # global max-norm residual (pmax over the time axes AND any batch
+            # axes) so the while_loop trip count is identical on every device
+            diff = compat.pmax(
+                jnp.max(jnp.abs(new - st)).astype(jnp.float32),
+                _replicated_axes(seq_axis, batch_axes))
+            return new, diff, it + 1
+
+        states, _, iters = jax.lax.while_loop(
+            cond, body, (init_s, jnp.asarray(jnp.inf, jnp.float32),
+                         jnp.asarray(0, jnp.int32)))
+        return states, iters
+
+    return compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(feats_specs, params_specs, x0_spec, t_spec),
+        out_specs=(t_spec, jax.sharding.PartitionSpec()),
+        check_vma=False,
+    )(feats, params, x0, init_guess)
+
+
+# ---------------------------------------------------------------------------
+# implicit differentiation at the fixed point (shared sharded adjoint)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5, 6, 7, 8))
+def _sharded_elk_fixed_point(step_fn, feats, params, x0, init_guess,
+                             cfg: ElkConfig, mesh, seq_axis, batch_axes):
+    states, _ = _elk_shmapped(step_fn, feats, params, x0,
+                              jax.lax.stop_gradient(init_guess), cfg,
+                              mesh, seq_axis, batch_axes)
+    return states
+
+
+def _sefp_fwd(step_fn, feats, params, x0, init_guess, cfg, mesh, seq_axis,
+              batch_axes):
+    states = _sharded_elk_fixed_point(step_fn, feats, params, x0, init_guess,
+                                      cfg, mesh, seq_axis, batch_axes)
+    return states, (feats, params, x0, states)
+
+
+def _sefp_bwd(step_fn, cfg, mesh, seq_axis, batch_axes, res, gbar):
+    feats, params, x0, states = res
+    d_feats, d_params, d_x0 = sharded_implicit_adjoint(
+        step_fn, feats, params, x0, states, gbar, mesh=mesh,
+        seq_axis=seq_axis, batch_axes=batch_axes)
+    return d_feats, d_params, d_x0, jnp.zeros_like(states)
+
+
+_sharded_elk_fixed_point.defvjp(_sefp_fwd, _sefp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+def sharded_elk_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
+                      cfg: ElkConfig = ElkConfig(), *, mesh,
+                      seq_axis="data",
+                      init_guess: Optional[jax.Array] = None,
+                      params=None,
+                      batch_axes=None) -> Tuple[jax.Array, jax.Array]:
+    """Solve x_t = step_fn(x_{t-1}, feats_t[, params]) with the ELK
+    (trust-region Kalman) iteration, the trajectory SHARDED over mesh axis
+    (or axes tuple) ``seq_axis`` for the whole solve.
+
+    Same contract as ``core.elk.elk_solve`` — returns (states (T, ...),
+    n_iters ()), differentiable per ``cfg.grad`` w.r.t. feats, x0 and params
+    — plus mesh / seq_axis / batch_axes exactly as
+    ``core.deer_sharded.sharded_deer_solve``.
+
+    Falls back to the replicated ``elk_solve`` when T is not divisible by
+    the shard count or any ``seq_axis`` name is missing from the mesh.
+    """
+    if params is None:
+        orig = step_fn
+        step_fn = lambda x, f, _p: orig(x, f)
+        params = ()
+
+    n_shards = n_seq_shards(mesh, seq_axis)
+    if n_shards == 0 or T % max(n_shards, 1) != 0:
+        return elk_solve(step_fn, feats, x0, T, cfg,
+                         init_guess=init_guess, params=params)
+
+    if init_guess is None:
+        init_guess = jnp.zeros((T,) + x0.shape, x0.dtype)
+
+    if cfg.grad == "implicit":
+        states = _sharded_elk_fixed_point(step_fn, feats, params, x0,
+                                          init_guess, cfg, mesh, seq_axis,
+                                          batch_axes)
+        return states, jnp.asarray(cfg.max_iters, jnp.int32)
+    return _elk_shmapped(step_fn, feats, params, x0, init_guess, cfg,
+                         mesh, seq_axis, batch_axes)

@@ -131,10 +131,12 @@ def chunked_diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array | None = None,
 
 
 def sharded_scan_local(lam_s: jax.Array, b_s: jax.Array,
-                       x0: jax.Array | None, seq_axis: str, *,
+                       x0: jax.Array | None, seq_axis, *,
                        reverse: bool = False) -> jax.Array:
     """Per-shard body of the sequence-parallel scan. MUST run inside a
-    shard_map whose time axis is sharded over ``seq_axis``.
+    shard_map whose time axis is sharded over ``seq_axis`` (a mesh axis name
+    or a tuple of them — the time dimension is then sharded over the
+    row-major-flattened product axis, matching ``P(seq_axis)``).
 
     Forward (reverse=False): solves x_t = lam_t * x_{t-1} + b_t globally,
     with x_0 := ``x0`` (replicated; None = zero). Each shard computes its
@@ -152,6 +154,22 @@ def sharded_scan_local(lam_s: jax.Array, b_s: jax.Array,
     """
     A_cum, B_cum = jax.lax.associative_scan(_combine, (lam_s, b_s), axis=0,
                                             reverse=reverse)
+    return sharded_scan_fixup(A_cum, B_cum, x0, seq_axis, reverse=reverse)
+
+
+def sharded_scan_fixup(A_cum: jax.Array, B_cum: jax.Array,
+                       x0: jax.Array | None, seq_axis, *,
+                       reverse: bool = False) -> jax.Array:
+    """Cross-shard summary exchange + prefix fixup, given the LOCAL cumulative
+    affine maps (A_cum, B_cum) along axis 0 (inclusive; from the shard's left
+    edge forward, or from its right edge when ``reverse``).
+
+    Factored out of ``sharded_scan_local`` so producers that compute the
+    local cumulative maps elsewhere — the fused Pallas DEER kernel
+    (kernels/lrc_deer) runs its on-chip chunk scan with a zero carry and
+    emits exactly (A_cum, B_cum) — compose with the identical summary/fixup
+    algebra. MUST run inside a shard_map sharded over ``seq_axis``.
+    """
     idx = compat.axis_index(seq_axis)
     if reverse:
         # Per-shard summary = cumulative map across the whole shard, seen
@@ -185,11 +203,13 @@ def sharded_scan_local(lam_s: jax.Array, b_s: jax.Array,
 
 
 def sharded_diag_scan(lam: jax.Array, b: jax.Array, x0: jax.Array,
-                      *, mesh, seq_axis: str) -> jax.Array:
+                      *, mesh, seq_axis) -> jax.Array:
     """Sequence-parallel diagonal scan: shard_map over ``sharded_scan_local``.
 
-    The time axis is sharded over mesh axis ``seq_axis`` (P shards);
-    collective volume is 2 * P * D elements per call — independent of T.
+    The time axis is sharded over mesh axis ``seq_axis`` — a name or a tuple
+    of names (e.g. ``("data", "model")`` engages the whole mesh for a
+    batch=1 long-sequence cell); P = product of the axis sizes. Collective
+    volume is 2 * P * D elements per call — independent of T.
     """
     pspec = P(seq_axis)
     return compat.shard_map(

@@ -84,3 +84,29 @@ def axis_size(mesh, axis) -> int:
     for a in axes:
         n *= mesh.shape[a]
     return n
+
+
+# ---------------------------------------------------------------------------
+# compiled-executable introspection
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalised across jax versions.
+
+    The 0.4.x line returns a LIST with one properties-dict per program
+    (which made every roofline launch/dryrun cell report status:"error"
+    after compiling fine, when the caller assumed a dict); jax >= 0.5
+    returns the dict directly (and may return None when XLA provides no
+    analysis). Callers always get a plain dict — empty when the analysis is
+    unavailable — so key lookups like ``cost.get("flops")`` work on every
+    supported version.
+    """
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if len(cost) else {}
+    return dict(cost)

@@ -39,8 +39,12 @@ def _sigmoid(x):
     return jax.nn.sigmoid(x)
 
 
-def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, out_ref,
-                     carry_ref, *, chunk: int, dt: float):
+def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, *refs,
+                     chunk: int, dt: float, with_cumulative: bool = False):
+    if with_cumulative:
+        out_ref, aout_ref, carry_ref, acarry_ref = refs
+    else:
+        (out_ref, carry_ref), aout_ref, acarry_ref = refs, None, None
     t = pl.program_id(1)
 
     xs = xs_ref[...].astype(jnp.float32)     # (C, Dt) shifted guess
@@ -80,6 +84,8 @@ def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, out_ref,
     @pl.when(t == 0)
     def _():
         carry_ref[...] = x0_ref[...].astype(jnp.float32)
+        if with_cumulative:
+            acarry_ref[...] = jnp.ones_like(acarry_ref)
 
     # ---- Hillis-Steele chunk scan -------------------------------------------
     A, B = J, b_lin
@@ -97,33 +103,58 @@ def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, out_ref,
     states = A * carry + B
     out_ref[...] = states.astype(out_ref.dtype)
     carry_ref[...] = states[-1:]
+    if with_cumulative:
+        # Running cumulative Jacobian product from the SLICE start — with a
+        # zero x0 the (states, A_glob) pair is exactly the (B_cum, A_cum)
+        # local affine map that core.scan.sharded_scan_fixup composes across
+        # time shards.
+        a_glob = A * acarry_ref[...]
+        aout_ref[...] = a_glob.astype(aout_ref.dtype)
+        acarry_ref[...] = a_glob[-1:]
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("chunk", "d_tile", "dt", "interpret"))
+                   static_argnames=("chunk", "d_tile", "dt", "interpret",
+                                    "with_cumulative"))
 def lrc_deer_iteration_pallas(x_shift: jax.Array, s_u: jax.Array,
                               eps_u: jax.Array, packed_params: jax.Array,
                               x0: jax.Array, *, chunk: int = 256,
                               d_tile: int = 512, dt: float = 1.0,
-                              interpret: bool = True) -> jax.Array:
+                              interpret: bool = True,
+                              with_cumulative: bool = False):
     """One fused Newton iteration. x_shift/s_u/eps_u: (T, D);
     packed_params: (10, D) rows [a_x,b_x,g_max_x,k_max_x,g_max_u,k_max_u,
-    w_x,v_x,g_leak,e_leak]; x0: (D,). Returns new states (T, D)."""
+    w_x,v_x,g_leak,e_leak]; x0: (D,). Returns new states (T, D).
+
+    With ``with_cumulative`` the kernel ALSO emits the running cumulative
+    Jacobian product A_cum from the slice start, returning (states, A_cum):
+    the local affine map (A_cum, states|_{x0=0}) that the shard-composable
+    entry point (``ops.sharded_lrc_deer_solve``) stitches across time shards
+    with ``core.scan.sharded_scan_fixup``.
+    """
     T, D = x_shift.shape
     assert T % chunk == 0 and D % d_tile == 0
     grid = (D // d_tile, T // chunk)
+    t_spec = pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d))
+    out_specs = [t_spec, t_spec] if with_cumulative else t_spec
+    out_shape = jax.ShapeDtypeStruct((T, D), x_shift.dtype)
+    scratch = [pltpu.VMEM((1, d_tile), jnp.float32)]
+    if with_cumulative:
+        out_shape = [out_shape, jax.ShapeDtypeStruct((T, D), x_shift.dtype)]
+        scratch = scratch + [pltpu.VMEM((1, d_tile), jnp.float32)]
     return pl.pallas_call(
-        functools.partial(_lrc_deer_kernel, chunk=chunk, dt=dt),
+        functools.partial(_lrc_deer_kernel, chunk=chunk, dt=dt,
+                          with_cumulative=with_cumulative),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
-            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
-            pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
+            t_spec,
+            t_spec,
+            t_spec,
             pl.BlockSpec((10, d_tile), lambda d, t: (0, d)),
             pl.BlockSpec((1, d_tile), lambda d, t: (0, d)),
         ],
-        out_specs=pl.BlockSpec((chunk, d_tile), lambda d, t: (t, d)),
-        out_shape=jax.ShapeDtypeStruct((T, D), x_shift.dtype),
-        scratch_shapes=[pltpu.VMEM((1, d_tile), jnp.float32)],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(x_shift, s_u, eps_u, packed_params, x0.reshape(1, D))

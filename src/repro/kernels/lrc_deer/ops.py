@@ -1,8 +1,25 @@
-"""Public wrapper: full DEER solve driven by the fused Pallas iteration.
+"""Public wrappers: full DEER solve driven by the fused Pallas iteration.
 
 ``pack_lrc_params`` adapts a core.lrc parameter dict to the kernel's packed
 (10, D) layout, so the kernel is a drop-in backend for LrcCellConfig models
 (same math as core.deer with grad="unroll", mode="fixed").
+
+Two solve entry points:
+
+  * ``lrc_deer_solve``          — replicated: full (T, D) trajectory per
+                                  device, the kernel's sequential chunk
+                                  carry spans the whole sequence.
+  * ``sharded_lrc_deer_solve``  — shard-composable: the on-chip Pallas
+                                  schedule runs on a LOCAL T/P time slice
+                                  (zero carry, emitting the slice's
+                                  cumulative affine map) and the cross-chip
+                                  decomposition is the same P-sized
+                                  summary exchange + prefix fixup the lax
+                                  solvers use (core.scan.sharded_scan_fixup)
+                                  — composing the paper's two parallelism
+                                  levels. Forward-only (the Pallas kernel
+                                  has no vjp); per Newton iteration one
+                                  (D,) ppermute + 2*P*D all-gather.
 """
 from __future__ import annotations
 
@@ -11,7 +28,11 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.core.deer_sharded import _left_boundary, n_seq_shards
+from repro.core.scan import sharded_scan_fixup
+from repro.distributed import compat
 from repro.kernels.lrc_deer.kernel import lrc_deer_iteration_pallas
 
 PACK_ORDER = ("a_x", "b_x", "g_max_x", "k_max_x", "g_max_u", "k_max_u",
@@ -31,6 +52,12 @@ def _pad_axis(x, axis, mult):
     return jnp.pad(x, widths)
 
 
+def _adapt_chunk(T: int, chunk: int) -> int:
+    """Shrink the chunk to a power of two >= 8 when the (local) time extent
+    is smaller than the requested chunk — one rule for both solve entries."""
+    return chunk if T >= chunk else max(8, 1 << max(T - 1, 1).bit_length())
+
+
 @functools.partial(jax.jit, static_argnames=("n_iters", "chunk", "d_tile",
                                              "dt", "interpret"))
 def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
@@ -40,7 +67,7 @@ def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
     """DEER fixed-point solve of the LrcSSM recurrence using the fused
     Pallas iteration. s_u, eps_u: (T, D); returns states (T, D)."""
     T, D = s_u.shape
-    c = chunk if T >= chunk else max(8, 1 << max(T - 1, 1).bit_length())
+    c = _adapt_chunk(T, chunk)
     dtile = d_tile if D >= d_tile else 128
     su = _pad_axis(_pad_axis(s_u, 0, c), 1, dtile)
     eu = _pad_axis(_pad_axis(eps_u, 0, c), 1, dtile)
@@ -57,3 +84,83 @@ def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
     states = jax.lax.fori_loop(
         0, n_iters, body, jnp.zeros((Tp, Dp), s_u.dtype), unroll=False)
     return states[:T, :D]
+
+
+def sharded_fused_viable(T: int, mesh, seq_axis, chunk: int = 256) -> bool:
+    """True when ``sharded_lrc_deer_solve`` would actually run SHARDED for
+    this (T, mesh, seq_axis): axes present, T divisible by the shard count,
+    local slice a multiple of the adapted chunk. Routing layers
+    (core/block.py) check this so a non-viable fused tier falls to the
+    sharded-lax tier — NOT to the replicated fused solve this entry point
+    itself degrades to for direct callers."""
+    n = n_seq_shards(mesh, seq_axis)
+    if n <= 1 or T % n != 0:
+        return False
+    T_loc = T // n
+    return T_loc % _adapt_chunk(T_loc, chunk) == 0
+
+
+def sharded_lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
+                           packed_params: jax.Array, x0: jax.Array, *,
+                           mesh, seq_axis="data", n_iters: int = 10,
+                           chunk: int = 256, d_tile: int = 512,
+                           dt: float = 1.0,
+                           interpret: bool = True) -> jax.Array:
+    """DEER fixed-point solve with the fused Pallas iteration running on a
+    T/P time shard per device, the trajectory sharded over mesh axis (or
+    axes tuple) ``seq_axis`` for the whole solve.
+
+    Per Newton iteration, inside one shard_map: ppermute of the left
+    neighbour's last state (the shifted-guess boundary), one fused kernel
+    invocation over the local (T/P, D) slice with a ZERO carry — emitting
+    the slice states and the cumulative Jacobian product, i.e. the local
+    affine map — then the cross-shard prefix fixup
+    (``core.scan.sharded_scan_fixup``: all-gather of P summaries, exclusive
+    prefix, one elementwise apply).
+
+    Same result as ``lrc_deer_solve`` (values only; forward-only like it).
+    Falls back to the replicated ``lrc_deer_solve`` when any ``seq_axis``
+    name is missing from the mesh or T/P is not a positive multiple of the
+    (adapted) chunk.
+    """
+    T, D = s_u.shape
+    n_shards = n_seq_shards(mesh, seq_axis)
+    repl = functools.partial(lrc_deer_solve, n_iters=n_iters, chunk=chunk,
+                             d_tile=d_tile, dt=dt, interpret=interpret)
+    if n_shards <= 1 or T % n_shards != 0:
+        return repl(s_u, eps_u, packed_params, x0)
+    T_loc = T // n_shards
+    c = _adapt_chunk(T_loc, chunk)
+    if T_loc % c != 0:
+        return repl(s_u, eps_u, packed_params, x0)
+
+    dtile = d_tile if D >= d_tile else 128
+    su = _pad_axis(s_u, 1, dtile)
+    eu = _pad_axis(eps_u, 1, dtile)
+    pp = _pad_axis(packed_params, 1, dtile)
+    x0p = _pad_axis(x0, 0, dtile)
+    Dp = su.shape[1]
+
+    def local(su_s, eu_s, pp_r, x0_r):
+        zeros0 = jnp.zeros_like(x0_r)
+
+        def body(_, states_s):
+            left = _left_boundary(states_s, x0_r, seq_axis, n_shards)
+            x_shift = jnp.concatenate([left[None], states_s[:-1]], axis=0)
+            b_cum, a_cum = lrc_deer_iteration_pallas(
+                x_shift, su_s, eu_s, pp_r, zeros0, chunk=c, d_tile=dtile,
+                dt=dt, interpret=interpret, with_cumulative=True)
+            return sharded_scan_fixup(a_cum, b_cum, x0_r, seq_axis)
+
+        return jax.lax.fori_loop(0, n_iters, body,
+                                 jnp.zeros((T_loc, Dp), su_s.dtype),
+                                 unroll=False)
+
+    t_spec = P(seq_axis)
+    states = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(t_spec, t_spec, P(), P()),
+        out_specs=t_spec,
+        check_vma=False,
+    )(su, eu, pp, x0p)
+    return states[:, :D]

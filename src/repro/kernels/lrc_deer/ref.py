@@ -38,6 +38,30 @@ def lrc_deer_iteration_ref(x_shift, s_u, eps_u, packed_params, x0,
     return states.astype(x_shift.dtype)
 
 
+def lrc_deer_iteration_affine_ref(x_shift, s_u, eps_u, packed_params,
+                                  dt: float = 1.0):
+    """Oracle for the kernel's ``with_cumulative`` contract: the local
+    affine map (A_cum, B_cum) of the linearised recurrence from the slice
+    start — states(x0) = A_cum * x0 + B_cum. This is what the
+    shard-composable entry stitches across time shards."""
+    pp = packed_params.astype(jnp.float32)
+    xs = x_shift.astype(jnp.float32)
+    fn = lambda x: _step(pp, x, s_u.astype(jnp.float32),
+                         eps_u.astype(jnp.float32), dt)
+    f_s, J = jax.jvp(fn, (xs,), (jnp.ones_like(xs),))
+    b_lin = f_s - J * xs
+
+    def scan_step(carry, jb):
+        a, x = carry
+        j, b = jb
+        out = (j * a, j * x + b)
+        return out, out
+
+    init = (jnp.ones_like(xs[0]), jnp.zeros_like(xs[0]))
+    _, (A_cum, B_cum) = jax.lax.scan(scan_step, init, (J, b_lin))
+    return A_cum.astype(x_shift.dtype), B_cum.astype(x_shift.dtype)
+
+
 def lrc_deer_solve_ref(s_u, eps_u, packed_params, x0, n_iters: int = 10,
                        dt: float = 1.0):
     """Full DEER solve with the unfused reference iteration."""

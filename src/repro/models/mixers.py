@@ -310,26 +310,39 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
     With ``arch.ssm.seq_shard`` and an active mesh carrying a "model" axis
     (the ring-attention convention for the time dimension), the Newton solve
     runs sequence-parallel (core/deer_sharded.py): time over "model", batch
-    over the DP axes, per-device trajectory (T/P, B_local, di). Otherwise:
-    replicated solve vmapped over the batch.
+    over the DP axes, per-device trajectory (T/P, B_local, di). When the
+    batch CANNOT shard over the DP axes (batch=1 long-sequence cells, the
+    long_500k shape), the time axis takes those axes too —
+    seq_axis=("data", "model"), mirroring sharded_decode_attention's
+    fallback — so the whole mesh still participates. Otherwise: replicated
+    solve vmapped over the batch.
     """
     B, T = s_u.shape[0], s_u.shape[1]
     if arch.ssm.seq_shard:
-        from repro.core.deer_sharded import sharded_deer_solve
+        from repro.core.deer_sharded import (n_seq_shards,
+                                             sharded_deer_solve)
         from repro.distributed import compat
         from repro.distributed.sharding import batch_axes, current_mesh
         mesh = current_mesh()
-        if (mesh is not None and "model" in mesh.axis_names
-                and T % mesh.shape["model"] == 0):
+        if mesh is not None and "model" in mesh.axis_names:
             ba = batch_axes(mesh)
             if ba is not None and B % compat.axis_size(mesh, ba) != 0:
                 ba = None
-            x0 = jnp.zeros((B, d_inner), jnp.float32)
-            states, _ = sharded_deer_solve(
-                step, (jnp.swapaxes(s_u, 0, 1), jnp.swapaxes(eps_u, 0, 1)),
-                x0, T, dc, mesh=mesh, seq_axis="model", params=cell_p,
-                batch_axes=ba)
-            return jnp.swapaxes(states, 0, 1)
+            seq_axes = "model"
+            if ba is None:
+                # batch can't use the DP axes: fold them into time sharding
+                wide = tuple(a for a in ("data", "model")
+                             if a in mesh.axis_names)
+                if len(wide) > 1 and T % n_seq_shards(mesh, wide) == 0:
+                    seq_axes = wide
+            if T % n_seq_shards(mesh, seq_axes) == 0:
+                x0 = jnp.zeros((B, d_inner), jnp.float32)
+                states, _ = sharded_deer_solve(
+                    step, (jnp.swapaxes(s_u, 0, 1),
+                           jnp.swapaxes(eps_u, 0, 1)),
+                    x0, T, dc, mesh=mesh, seq_axis=seq_axes, params=cell_p,
+                    batch_axes=ba)
+                return jnp.swapaxes(states, 0, 1)
     x0 = jnp.zeros((d_inner,), jnp.float32)
     solve = lambda su, eu: deer_solve(step, (su, eu), x0, T, dc,
                                       params=cell_p)[0]

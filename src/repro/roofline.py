@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 from repro.config import HW, ArchConfig, ShapeConfig
+from repro.distributed import compat
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -247,7 +248,7 @@ def analyze_compiled(arch: ArchConfig, shape: ShapeConfig, mesh,
     for v in mesh.shape.values():
         chips *= v
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)   # dict on EVERY supported jax
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
 

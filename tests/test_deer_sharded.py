@@ -125,6 +125,40 @@ def test_lm_mixer_seq_shard_matches_replicated(run_sub):
     assert out["grad_err"] < 1e-3, out
 
 
+def test_lm_mixer_seq_shard_batch1_multi_axis(run_sub):
+    """batch=1 (the long_500k construction): the batch cannot occupy the
+    "data" axis, so the mixer folds the DP axes into TIME sharding —
+    seq_axis=("data", "model"), all 8 devices on the sequence — and the
+    loss must still match the replicated mixer."""
+    out = run_sub("""
+    import dataclasses
+    from repro.config import SSMConfig
+    from repro.configs.falcon_mamba_7b import REDUCED
+    from repro.models import build_model
+    from repro.distributed import sharding as shd
+    from repro.core.deer_sharded import n_seq_shards
+    arch = dataclasses.replace(
+        REDUCED, dtype=jnp.float32,
+        ssm=SSMConfig(kind="lrc", expand=2, chunk=16, deer_iters=8))
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 64),
+                                          0, arch.vocab)}
+    want = float(model.loss(params, batch))
+    arch_s = dataclasses.replace(
+        arch, ssm=dataclasses.replace(arch.ssm, seq_shard=True))
+    model_s = build_model(arch_s)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    # preconditions of the wide fallback: B=1 can't shard over "data",
+    # T=64 divides the full 8-way product axis
+    assert n_seq_shards(mesh, ("data", "model")) == 8
+    with shd.use_mesh(mesh):
+        got = float(jax.jit(model_s.loss)(params, batch))
+    print(json.dumps({"loss_diff": abs(got - want)}))
+    """, timeout=900)
+    assert out["loss_diff"] < 1e-5, out
+
+
 def test_block_level_seq_sharded_matches_replicated(run_sub):
     """LrcSSMConfig.seq_axis wiring: logits AND parameter gradients through
     the sequence-parallel block stack match the replicated path."""

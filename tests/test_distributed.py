@@ -142,3 +142,33 @@ def test_multipod_mesh_shape(run_sub):
     assert out["single"] == {"data": 16, "model": 16}
     assert out["multi"] == {"pod": 2, "data": 16, "model": 16}
     assert out["chips"] == 512
+
+
+def test_compat_cost_analysis_both_shapes():
+    """compat.cost_analysis normalises the jax version drift: the 0.4.x line
+    returns a LIST of per-program dicts, jax >= 0.5 a dict (or None) — the
+    roofline must get a plain dict either way, plus on the REAL installed
+    jax (whichever branch that is)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed import compat
+
+    class Fake:
+        def __init__(self, ret):
+            self._ret = ret
+        def cost_analysis(self):
+            if isinstance(self._ret, Exception):
+                raise self._ret
+            return self._ret
+
+    d = {"flops": 12.0, "bytes accessed": 34.0}
+    assert compat.cost_analysis(Fake(d)) == d            # new-jax dict
+    assert compat.cost_analysis(Fake([d])) == d          # 0.4.x list
+    assert compat.cost_analysis(Fake([])) == {}
+    assert compat.cost_analysis(Fake(None)) == {}
+    assert compat.cost_analysis(Fake(RuntimeError("no analysis"))) == {}
+
+    compiled = jax.jit(lambda x: x @ x).lower(jnp.ones((8, 8))).compile()
+    cost = compat.cost_analysis(compiled)
+    assert isinstance(cost, dict)
+    assert float(cost.get("flops", 0.0)) > 0.0

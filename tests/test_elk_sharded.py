@@ -1,0 +1,174 @@
+"""Sequence-parallel ELK solver == replicated solver (subprocess, 8 forced
+host devices). The trust-region Kalman-smoother iteration runs entirely on
+time shards (core/elk_sharded.py); these tests pin its contract:
+
+  * fixed / tol convergence modes match the single-device ``elk_solve``
+    oracle (and the sequential rollout) within fp32 tolerance;
+  * implicit-mode gradients (feats, params, x0) agree with the replicated
+    implicit adjoint;
+  * missing mesh axis / non-divisible T falls back to the replicated
+    solver transparently;
+  * a seq_axis TUPLE (("data", "model")) shards the time axis over the
+    flattened product axis — the whole mesh for batch=1 long-sequence
+    cells;
+  * the block-level wiring (LrcSSMConfig solver="elk" + seq_axis) is
+    end-to-end exact.
+"""
+
+_SETUP = """
+    from repro.core.elk import ElkConfig, elk_solve
+    from repro.core.elk_sharded import sharded_elk_solve
+    from repro.core.lrc import (LrcCellConfig, init_lrc_params,
+                                input_features, lrc_step, lrc_sequential)
+    mesh = jax.make_mesh((8,), ("data",))
+    T, n, D = 64, 6, 12
+    cfg = LrcCellConfig(d_input=n, d_state=D)
+    p = init_lrc_params(cfg, jax.random.PRNGKey(0))
+    u = jax.random.normal(jax.random.PRNGKey(1), (T, n))
+    s_u, eps_u = input_features(p, u)
+    step = lambda x, fs, cp: lrc_step(cp, cfg, x, *fs)
+    x0 = jnp.zeros((D,))
+"""
+
+
+def test_sharded_elk_matches_oracle_fixed_and_tol(run_sub):
+    out = run_sub(_SETUP + """
+    want = lrc_sequential(p, cfg, u)
+    res = {}
+    for mode in ("fixed", "tol"):
+        ec = ElkConfig(max_iters=30, tol=1e-7, mode=mode)
+        with mesh:
+            got, iters = jax.jit(lambda su, eu, pp: sharded_elk_solve(
+                step, (su, eu), x0, T, ec, mesh=mesh, seq_axis="data",
+                params=pp))(s_u, eps_u, p)
+        ref, _ = elk_solve(step, (s_u, eps_u), x0, T, ec, params=p)
+        res[f"err_{mode}"] = float(jnp.max(jnp.abs(got - want)))
+        res[f"err_vs_elk_{mode}"] = float(jnp.max(jnp.abs(got - ref)))
+        res[f"iters_{mode}"] = int(iters)
+    print(json.dumps(res))
+    """)
+    assert out["err_fixed"] < 1e-4, out
+    assert out["err_tol"] < 1e-4, out
+    assert out["err_vs_elk_fixed"] < 1e-5, out
+    assert out["err_vs_elk_tol"] < 1e-5, out
+
+
+def test_sharded_elk_smoother_matches_replicated(run_sub):
+    """The distributed Kalman smoother itself (both associative-scan passes
+    sharded) == the replicated kalman_smoother_parallel, means AND vars."""
+    out = run_sub("""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.elk import kalman_smoother_parallel
+    from repro.core.elk_sharded import kalman_smoother_parallel_local
+    from repro.distributed import compat
+    mesh = jax.make_mesh((8,), ("data",))
+    T, D = 64, 12
+    k = jax.random.split(jax.random.PRNGKey(0), 6)
+    F = jax.random.uniform(k[0], (T, D)) * 0.9
+    c = jax.random.normal(k[1], (T, D))
+    q = jnp.ones((T, D))
+    y = jax.random.normal(k[2], (T, D))
+    r = jnp.full((T, D), 10.0)
+    m0 = jax.random.normal(k[3], (D,))
+    P0 = jnp.zeros((D,)) + 1e-6
+    want_ms, want_Ls = kalman_smoother_parallel(F, c, q, y, r, m0, P0)
+    got_ms, got_Ls = compat.shard_map(
+        lambda F_, c_, q_, y_, r_: kalman_smoother_parallel_local(
+            F_, c_, q_, y_, r_, m0, P0, "data", 8),
+        mesh=mesh, in_specs=(P("data"),) * 5,
+        out_specs=(P("data"), P("data")), check_vma=False)(F, c, q, y, r)
+    print(json.dumps({
+        "ms_err": float(jnp.max(jnp.abs(got_ms - want_ms))),
+        "Ls_err": float(jnp.max(jnp.abs(got_Ls - want_Ls)))}))
+    """)
+    assert out["ms_err"] < 1e-5, out
+    assert out["Ls_err"] < 1e-5, out
+
+
+def test_sharded_elk_implicit_gradients_match(run_sub):
+    out = run_sub(_SETUP + """
+    ec = ElkConfig(max_iters=25, mode="fixed", grad="implicit")
+    x0r = jax.random.normal(jax.random.PRNGKey(3), (D,))
+
+    def loss(solver, su, eu, pp, x0_):
+        st, _ = solver(step, (su, eu), x0_, T, ec, params=pp)
+        return jnp.sum(st ** 2)
+
+    import functools
+    sharded = functools.partial(sharded_elk_solve, mesh=mesh,
+                                seq_axis="data")
+    with mesh:
+        g_sh = jax.jit(jax.grad(
+            lambda su, eu, pp, x0_: loss(sharded, su, eu, pp, x0_),
+            argnums=(0, 1, 2, 3)))(s_u, eps_u, p, x0r)
+    g_ref = jax.grad(lambda su, eu, pp, x0_: loss(elk_solve, su, eu, pp,
+                                                  x0_),
+                     argnums=(0, 1, 2, 3))(s_u, eps_u, p, x0r)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(g_sh), jax.tree_util.tree_leaves(g_ref)))
+    print(json.dumps({"grad_err": err}))
+    """)
+    assert out["grad_err"] < 1e-4, out
+
+
+def test_sharded_elk_fallback(run_sub):
+    """T=63 (non-divisible) and a mesh without the named axis both fall back
+    to the replicated solver transparently, identical contract."""
+    out = run_sub(_SETUP + """
+    u63 = u[:63]
+    s63, e63 = input_features(p, u63)
+    ec = ElkConfig(max_iters=30, mode="fixed")
+    with mesh:
+        got, _ = jax.jit(lambda su, eu, pp: sharded_elk_solve(
+            step, (su, eu), x0, 63, ec, mesh=mesh, seq_axis="data",
+            params=pp))(s63, e63, p)
+        got_axis, _ = jax.jit(lambda su, eu, pp: sharded_elk_solve(
+            step, (su, eu), x0, T, ec, mesh=mesh, seq_axis="nope",
+            params=pp))(s_u, eps_u, p)
+    want63 = lrc_sequential(p, cfg, u63)
+    want = lrc_sequential(p, cfg, u)
+    print(json.dumps({
+        "err": float(jnp.max(jnp.abs(got - want63))),
+        "err_axis": float(jnp.max(jnp.abs(got_axis - want)))}))
+    """)
+    assert out["err"] < 1e-4, out
+    assert out["err_axis"] < 1e-4, out
+
+
+def test_sharded_elk_seq_axis_tuple(run_sub):
+    """seq_axis=("data", "model") on a (2, 4) mesh: the time axis shards
+    over all 8 devices (the long_500k batch=1 construction)."""
+    out = run_sub(_SETUP + """
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+    ec = ElkConfig(max_iters=30, mode="fixed")
+    with mesh2:
+        got, _ = jax.jit(lambda su, eu, pp: sharded_elk_solve(
+            step, (su, eu), x0, T, ec, mesh=mesh2,
+            seq_axis=("data", "model"), params=pp))(s_u, eps_u, p)
+    want = lrc_sequential(p, cfg, u)
+    print(json.dumps({"err": float(jnp.max(jnp.abs(got - want)))}))
+    """)
+    assert out["err"] < 1e-4, out
+
+
+def test_block_level_elk_seq_sharded_matches_replicated(run_sub):
+    """LrcSSMConfig solver="elk" + seq_axis wiring: logits through the
+    sequence-parallel ELK block stack match the replicated ELK path."""
+    out = run_sub("""
+    import dataclasses
+    from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+    from repro.core.elk import ElkConfig
+    from repro.distributed import sharding as shd
+    base = LrcSSMConfig(d_input=6, n_classes=2, d_hidden=16, d_state=16,
+                        n_blocks=2, solver="elk",
+                        elk=ElkConfig(max_iters=20, mode="fixed"))
+    p = init_lrcssm(base, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 6))
+    want = apply_lrcssm(base, p, x)
+    mesh = jax.make_mesh((8,), ("data",))
+    shard = dataclasses.replace(base, seq_axis="data")
+    with shd.use_mesh(mesh):
+        got = jax.jit(lambda pp, xx: apply_lrcssm(shard, pp, xx))(p, x)
+    print(json.dumps({"err": float(jnp.max(jnp.abs(got - want)))}))
+    """)
+    assert out["err"] < 1e-4, out

@@ -122,6 +122,103 @@ def test_lrc_deer_solve_converges_to_sequential():
     np.testing.assert_allclose(got, truth, rtol=1e-3, atol=1e-4)
 
 
+def test_lrc_deer_iteration_with_cumulative():
+    """with_cumulative: (B_cum given zero x0, A_cum) IS the local affine map
+    of the linearised slice — it matches the sequential oracle directly,
+    and applying it to any x0 reproduces the plain-kernel states."""
+    from repro.kernels.lrc_deer.ref import lrc_deer_iteration_affine_ref
+    T, D = 64, 16
+    pp = _rand_packed(D, seed=7)
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    su = jax.nn.sigmoid(jax.random.normal(ks[0], (T, D)))
+    eu = jax.random.normal(ks[1], (T, D))
+    guess = jax.random.normal(ks[2], (T, D)) * 0.3
+    x0 = jax.random.normal(ks[3], (D,)) * 0.5
+    x_shift = jnp.concatenate([x0[None], guess[:-1]], axis=0)
+    pad_d = (-D) % 128
+    xs_p, su_p, eu_p = (jnp.pad(x, ((0, 0), (0, pad_d)))
+                        for x in (x_shift, su, eu))
+    pp_p = jnp.pad(pp, ((0, 0), (0, pad_d)))
+    x0_p = jnp.pad(x0, (0, pad_d))
+    want = lrc_deer_iteration_pallas(xs_p, su_p, eu_p, pp_p, x0_p,
+                                     chunk=16, d_tile=128)[:, :D]
+    b_cum, a_cum = lrc_deer_iteration_pallas(
+        xs_p, su_p, eu_p, pp_p, jnp.zeros_like(x0_p), chunk=16, d_tile=128,
+        with_cumulative=True)
+    a_ref, b_ref = lrc_deer_iteration_affine_ref(x_shift, su, eu, pp)
+    np.testing.assert_allclose(a_cum[:, :D], a_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(b_cum[:, :D], b_ref, rtol=2e-5, atol=2e-5)
+    got = (a_cum * x0_p[None] + b_cum)[:, :D]
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_sharded_lrc_deer_solve_matches_replicated(run_sub):
+    """Shard-composable fused solve (Pallas grid on a T/P slice + cross-
+    shard prefix fixup between kernel invocations) == the replicated fused
+    solve == the unfused reference, on an 8-device CPU mesh (interpret
+    mode), for both a single axis and a ("data", "model") tuple."""
+    out = run_sub("""
+    from repro.kernels.lrc_deer.ops import (lrc_deer_solve, PACK_ORDER,
+                                            sharded_lrc_deer_solve)
+    from repro.kernels.lrc_deer.ref import lrc_deer_solve_ref
+    T, D = 256, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), len(PACK_ORDER) + 2)
+    rows = []
+    for i, name in enumerate(PACK_ORDER):
+        if name == "g_leak": rows.append(jnp.full((D,), 0.1))
+        elif name == "e_leak": rows.append(jnp.ones((D,)))
+        elif name.startswith(("b_", "v_")): rows.append(jnp.zeros((D,)))
+        else: rows.append(jax.random.normal(ks[i], (D,)) * 0.5)
+    pp = jnp.stack(rows)
+    su = jax.nn.sigmoid(jax.random.normal(ks[-2], (T, D)))
+    eu = jax.random.normal(ks[-1], (T, D))
+    x0 = jnp.zeros((D,))
+    want = lrc_deer_solve_ref(su, eu, pp, x0, n_iters=12)
+    repl = lrc_deer_solve(su, eu, pp, x0, n_iters=12, chunk=32)
+    mesh = jax.make_mesh((8,), ("data",))
+    with mesh:
+        got = jax.jit(lambda a, b, c, d: sharded_lrc_deer_solve(
+            a, b, c, d, mesh=mesh, seq_axis="data", n_iters=12,
+            chunk=16))(su, eu, pp, x0)
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+    with mesh2:
+        got2 = jax.jit(lambda a, b, c, d: sharded_lrc_deer_solve(
+            a, b, c, d, mesh=mesh2, seq_axis=("data", "model"), n_iters=12,
+            chunk=16))(su, eu, pp, x0)
+    print(json.dumps({
+        "err_ref": float(jnp.max(jnp.abs(got - want))),
+        "err_repl": float(jnp.max(jnp.abs(got - repl))),
+        "err_tuple": float(jnp.max(jnp.abs(got2 - want)))}))
+    """)
+    assert out["err_ref"] < 1e-4, out
+    assert out["err_repl"] < 1e-5, out
+    assert out["err_tuple"] < 1e-4, out
+
+
+def test_block_fused_tier_matches_lax(run_sub):
+    """LrcSSMConfig(fused=True, seq_axis=...): the sharded-fused block tier
+    == the replicated lax block forward."""
+    out = run_sub("""
+    import dataclasses
+    from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+    from repro.core.deer import DeerConfig
+    from repro.distributed import sharding as shd
+    base = LrcSSMConfig(d_input=6, n_classes=2, d_hidden=16, d_state=16,
+                        n_blocks=2,
+                        deer=DeerConfig(max_iters=15, mode="fixed",
+                                        grad="unroll"))
+    p = init_lrcssm(base, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 6))
+    want = apply_lrcssm(base, p, x)
+    mesh = jax.make_mesh((8,), ("data",))
+    fused = dataclasses.replace(base, seq_axis="data", fused=True)
+    with shd.use_mesh(mesh):
+        got = jax.jit(lambda pp, xx: apply_lrcssm(fused, pp, xx))(p, x)
+    print(json.dumps({"err": float(jnp.max(jnp.abs(got - want)))}))
+    """)
+    assert out["err"] < 1e-4, out
+
+
 def test_pack_lrc_params_roundtrip():
     from repro.core.lrc import LrcCellConfig, init_lrc_params
     cfg = LrcCellConfig(d_input=4, d_state=12)

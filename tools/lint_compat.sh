@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# ROADMAP distributed-layer contract lint (enforced by CI, runnable locally):
+#
+#   ALL shard_map and collective call sites must resolve through
+#   src/repro/distributed/compat.py — never either jax spelling directly
+#   (jax.shard_map moved modules and renamed its kwarg across the supported
+#   0.4.30 -> current range), and never the raw jax.lax.* collectives the
+#   shard_map bodies compose with (one distribution API surface to patch).
+#
+# Usage: bash tools/lint_compat.sh   (exits non-zero on any violation)
+set -u
+cd "$(dirname "$0")/.."
+
+pattern='jax\.shard_map|jax\.experimental\.shard_map|from jax\.experimental import shard_map|jax\.lax\.(psum|pmax|pmin|pmean|all_gather|ppermute|psum_scatter|axis_index)\b'
+hits=$(grep -rn --include='*.py' -E "$pattern" src tests benchmarks examples 2>/dev/null \
+         | grep -v 'src/repro/distributed/compat\.py' || true)
+
+if [ -n "$hits" ]; then
+  echo "compat-contract violation: shard_map / raw collectives referenced" >&2
+  echo "outside src/repro/distributed/compat.py (route through compat.*):" >&2
+  echo "$hits" >&2
+  exit 1
+fi
+echo "compat lint OK: all shard_map/collective call sites route through distributed/compat.py"
