@@ -15,7 +15,8 @@ def main() -> None:
                     help="run benchmarks whose name contains this substring")
     args = ap.parse_args()
 
-    from benchmarks import ablations, paper_tables, seq_parallel
+    from benchmarks import (ablations, grad_compression, paper_tables,
+                            seq_parallel)
     benches = [
         paper_tables.table1_accuracy,
         paper_tables.table2_variants,
@@ -28,6 +29,7 @@ def main() -> None:
         ablations.table11_complex_params,
         ablations.kernels_micro,
         seq_parallel.bench_seq_parallel,
+        grad_compression.bench_grad_compression,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -41,6 +41,11 @@ def _flatten(tree) -> Dict[str, Any]:
         if isinstance(node, dict):
             for k, v in node.items():
                 rec(f"{prefix}/{k}" if prefix else str(k), v)
+            if not node:
+                # leafless containers must still round-trip: TrainState
+                # carries residual={} when error feedback is disabled, and
+                # the tuple rebuild on restore indexes EVERY field.
+                flat.setdefault("__lists__", {})[prefix] = ("dict", 0)
         elif isinstance(node, (list, tuple)):
             for i, v in enumerate(node):
                 rec(f"{prefix}/{i}", v)
@@ -76,6 +81,8 @@ def _unflatten(flat: Dict[str, Any]):
                    for k, v in node.items()}
             if prefix in lists:
                 kind, n = lists[prefix]
+                if kind == "dict":          # leafless container marker
+                    return out
                 seq = [out[str(i)] for i in range(n)]
                 return tuple(seq) if kind == "tuple" else seq
             return out

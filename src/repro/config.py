@@ -141,6 +141,26 @@ class TrainConfig:
     checkpoint_dir: str = "/tmp/repro_ckpt"
     async_checkpoint: bool = True
     grad_compression: str = "none"   # none | int8  (cross-pod all-reduce)
+    # who owns the cross-pod gradient collective (train/step.py):
+    #   gspmd    — value_and_grad over the globally sharded batch; XLA
+    #              inserts the (fp32) DP all-reduce. int8 compression on
+    #              this path is a wire-format harness only: it re-reduces
+    #              already-reduced gradients.
+    #   explicit — shard_map the whole grad+update over the DP axes:
+    #              grads are computed pod-locally, psum'd over "data" only,
+    #              then ONE explicit cross-pod reduction (fp32 psum, or
+    #              compressed_psum with the error-feedback residual threaded
+    #              through TrainState). No implicit fp32 pod all-reduce
+    #              appears in the lowered HLO. Contract: pure-DP params
+    #              (replicated w.r.t. the mesh) — TP/FSDP composition via
+    #              partially-manual shard_map is a ROADMAP item.
+    grad_reduce: str = "gspmd"       # gspmd | explicit
+    # error-feedback residual (int8 path): accumulated quantisation error,
+    # carried across steps in TrainState. "float32" | "bfloat16".
+    residual_dtype: str = "float32"
+    # ablation knob: disable error feedback (per-step round-to-nearest).
+    # Exists so tests/benchmarks can show WHY the residual matters.
+    error_feedback: bool = True
     zero_opt_state: bool = True      # shard opt state over data axis (ZeRO-1)
     # constrain grads to the param sharding immediately after value_and_grad
     # so GSPMD lowers the DP reduction as reduce-scatter (half the wire of

@@ -7,15 +7,22 @@ int8 quantisation with stochastic-free symmetric scaling and ERROR FEEDBACK
 (the quantisation residual is added back into the next step's gradient), the
 standard trick that keeps SGD/Adam convergence unaffected.
 
-Usage inside a shard_map'd train step (distributed/train_step when
-multi_pod and cfg.grad_compression == "int8"):
+The residual is a FIRST-CLASS pytree: ``compressed_psum`` takes the incoming
+residual (one leaf per gradient leaf) and returns the updated one; the train
+engine threads it through ``train/state.TrainState`` so quantisation error
+is accumulated-and-corrected across steps (and checkpointed/restored like
+optimizer moments). Pass ``error_feedback=False`` to zero it every step —
+the round-to-nearest ablation the convergence tests contrast against.
 
-    g_local  = grads averaged over ("data",) via psum
-    g_global = compressed_psum(g_local, "pod", error_state)
+Usage inside the shard_map'd explicit train step (train/step.py when
+cfg.grad_reduce == "explicit" and cfg.grad_compression == "int8"):
+
+    g_pod    = grads pmean'd over ("data",)          # intra-pod, fp32 ICI
+    g_global, new_residual = compressed_psum(g_pod, "pod", residual)
 
 Exactness note: compression is OPT-IN and OFF for the paper-faithful
-baseline; EXPERIMENTS.md §Perf records the collective-bytes delta (4x on
-the pod axis) and the quantisation error statistics.
+baseline; the bytes-on-wire accounting below (``reduction_wire_bytes``) is
+what benchmarks/grad_compression.py reports.
 """
 from __future__ import annotations
 
@@ -27,6 +34,9 @@ import jax.numpy as jnp
 from repro.distributed import compat
 
 BLOCK = 256
+
+# wire-format overhead: one fp32 scale per BLOCK int8 payload bytes
+_SCALE_OVERHEAD = 4.0 / BLOCK
 
 
 def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -51,21 +61,39 @@ def quantize_roundtrip(x: jax.Array) -> jax.Array:
     return _dequantize_int8(q, s, x.shape, x.size)
 
 
-def compressed_psum(tree, axis_name: str, error_state=None):
+def zeros_residual(tree, dtype=jnp.float32):
+    """Fresh (all-zero) error-feedback residual matching ``tree``."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, dtype), tree)
+
+
+def compressed_psum(tree, axis_name: str, error_state=None,
+                    error_feedback: bool = True):
     """int8-compressed all-reduce(mean) over ``axis_name`` with error
-    feedback. Returns (reduced tree, new error_state)."""
+    feedback. Returns (reduced tree, new error_state).
+
+    ``error_state`` leaves may be any float dtype (fp32 default, bf16 to
+    halve residual HBM); accumulation happens in fp32 and the new residual
+    is cast back to the incoming dtype. With ``error_feedback=False`` the
+    incoming residual is ignored and the returned one is all zeros —
+    per-step round-to-nearest, the ablation baseline.
+    """
     if error_state is None:
-        error_state = jax.tree_util.tree_map(
-            lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+        error_state = zeros_residual(tree)
 
     def one(g, err):
-        g32 = g.astype(jnp.float32) + err
+        g32 = g.astype(jnp.float32)
+        if error_feedback:
+            g32 = g32 + err.astype(jnp.float32)
         q, s = _quantize_int8(g32)
         deq = _dequantize_int8(q, s, g32.shape, g32.size)
-        new_err = g32 - deq                      # error feedback residual
+        # error feedback residual (zeroed in the round-to-nearest ablation)
+        new_err = (g32 - deq if error_feedback
+                   else jnp.zeros_like(g32)).astype(err.dtype)
         # WIRE FORMAT: int8 payload + per-block fp32 scales (1/256 overhead).
-        # all_gather keeps the transferred bytes at 1/4 of an fp32 psum;
-        # each pod dequantises and reduces locally.
+        # all_gather keeps the transferred bytes at ~1/4 of an fp32 psum at
+        # the production pod count (see reduction_wire_bytes); each pod
+        # dequantises and reduces locally.
         q_all = compat.all_gather(q, axis_name)           # (P, blocks, BLOCK) int8
         s_all = compat.all_gather(s, axis_name)           # (P, blocks, 1) f32
         P = q_all.shape[0]
@@ -78,6 +106,41 @@ def compressed_psum(tree, axis_name: str, error_state=None):
     out = [one(g, e) for g, e in zip(flat, flat_err)]
     return (treedef.unflatten([o[0] for o in out]),
             treedef.unflatten([o[1] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# bytes-on-wire accounting
+# ---------------------------------------------------------------------------
+
+def tree_elems(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def reduction_wire_bytes(tree, axis_size: int, mode: str) -> int:
+    """Per-device bytes RECEIVED over the reduced axis for ONE gradient
+    reduction of ``tree`` across ``axis_size`` participants.
+
+    Modes (matching what the two train-step paths actually lower to):
+      * ``"fp32_allreduce"``  — GSPMD's ring all-reduce: each device
+        receives 2·(P-1)/P · 4 bytes per element (reduce-scatter +
+        all-gather halves).
+      * ``"int8_allgather"``  — the compressed path: each device receives
+        the (P-1) other pods' full int8 payload + fp32 per-block scales,
+        i.e. (P-1) · (1 + 4/BLOCK) bytes per element.
+
+    The all-gather format wins below P ≈ 8 (at the production pod count
+    P=2 it is ~3.9x fewer bytes); beyond that a quantised
+    reduce-scatter+all-gather is needed — ROADMAP item.
+    """
+    n = tree_elems(tree)
+    P = int(axis_size)
+    if P <= 1:
+        return 0
+    if mode == "fp32_allreduce":
+        return int(round(2 * (P - 1) / P * 4 * n))
+    if mode == "int8_allgather":
+        return int(round((P - 1) * (1.0 + _SCALE_OVERHEAD) * n))
+    raise ValueError(f"unknown wire mode: {mode!r}")
 
 
 def compression_error(x: jax.Array) -> jax.Array:

@@ -35,6 +35,28 @@ _MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
     "repro_mesh", default=None)
 _STRATEGY: contextvars.ContextVar[str] = contextvars.ContextVar(
     "repro_strategy", default="megatron")
+_MANUAL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_manual_body", default=False)
+
+
+@contextlib.contextmanager
+def manual_body():
+    """Mark that model code is being traced INSIDE a fully-manual shard_map
+    body (the explicit gradient path, train/step.py). GSPMD activation
+    constraints are meaningless there — every mesh axis is manual, and a
+    staged with_sharding_constraint naming one fails at lowering — so
+    ``shard_activation``/``constrain_batch_only`` become no-ops while this
+    context is active (tracing is synchronous, so the contextvar scopes the
+    staged ops exactly)."""
+    token = _MANUAL.set(True)
+    try:
+        yield
+    finally:
+        _MANUAL.reset(token)
+
+
+def in_manual_body() -> bool:
+    return _MANUAL.get()
 
 
 @contextlib.contextmanager
@@ -72,6 +94,63 @@ def batch_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in _axes(mesh)) or None
 
 
+def pod_axis(mesh: Mesh) -> Optional[str]:
+    return "pod" if "pod" in _axes(mesh) else None
+
+
+# ---------------------------------------------------------------------------
+# pod-local specs (the explicit gradient path, train/step.py)
+# ---------------------------------------------------------------------------
+# In grad_reduce="explicit" mode the whole grad+update runs inside ONE
+# shard_map over the DP axes: params/moments are replicated (pure DP), the
+# batch is sharded over ("pod", "data") on its leading dim, and the
+# error-feedback residual is sharded over "pod" on its LEADING pod dim
+# (quantisation error is a per-pod quantity). These helpers are the spec
+# side of that contract.
+
+def replicated_specs(tree) -> Any:
+    """P() for every leaf — explicit-mode params/moments (pure DP)."""
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+def pod_local_batch_specs(batch, mesh: Mesh) -> Any:
+    """Leading batch dim over the DP axes — STRICT: explicit mode shards
+    manually, so non-divisible batches are a config error, not a silent
+    replication fallback."""
+    ba = batch_axes(mesh)
+    n_dp = 1
+    for a in (ba or ()):
+        n_dp *= mesh.shape[a]
+
+    def leaf_spec(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", ())
+        if nd == 0 or ba is None:
+            return P()
+        if shape[0] % n_dp != 0:
+            raise ValueError(
+                f"grad_reduce='explicit' requires the batch dim to divide "
+                f"the DP axes: leaf {_path_str(path)!r} has leading dim "
+                f"{shape[0]}, mesh DP size {n_dp} ({ba})")
+        return P(*([ba] + [None] * (nd - 1)))
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch)
+
+
+def residual_specs(residual, mesh: Mesh, param_specs=None) -> Any:
+    """Specs for the error-feedback residual tree: leading pod dim (see
+    train/state.py), trailing dims replicated (explicit mode) or inheriting
+    the parameter sharding rules when ``param_specs`` is given (the gspmd
+    compressed path, where gradients stay param-sharded). The ONE place the
+    residual layout rule lives — train/step.py calls this for both the
+    state sharding and the shard_map in/out specs."""
+    if param_specs is None:
+        return jax.tree_util.tree_map(
+            lambda r: P(*(["pod"] + [None] * (r.ndim - 1))), residual)
+    return jax.tree_util.tree_map(
+        lambda s, r: fit_spec(P(*(("pod",) + tuple(s))), r.shape, mesh),
+        param_specs, residual)
+
+
 # ---------------------------------------------------------------------------
 # activation constraints (no-op outside a mesh context)
 # ---------------------------------------------------------------------------
@@ -102,7 +181,7 @@ def constrain_batch_only(x: jax.Array) -> jax.Array:
     q/k/v): prevents the fused-qkv model-axis sharding from leaking into
     the cache layout."""
     mesh = current_mesh()
-    if mesh is None:
+    if mesh is None or _MANUAL.get():
         return x
     ba = batch_axes(mesh)
     if ba is None:
@@ -116,7 +195,7 @@ def constrain_batch_only(x: jax.Array) -> jax.Array:
 
 def shard_activation(x: jax.Array, kind: str = "act") -> jax.Array:
     mesh = current_mesh()
-    if mesh is None:
+    if mesh is None or _MANUAL.get():
         return x
     spec = _act_spec(mesh, current_strategy(), getattr(x, "shape", ()))
     if spec == P(None) or spec == P():
@@ -186,8 +265,10 @@ _PARAM_RULES = [
 def fit_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
     """Drop sharding on any dimension whose size is not divisible by the
     product of its assigned mesh axes (vocab remainders, batch=1 long-context
-    cells, odd expert counts). Keeps the rest of the spec intact — the
-    shape-aware fallback every production sharding layer needs."""
+    cells, odd expert counts), and drop axes the mesh does not have at all
+    (the generic param rules name "data"/"model"; a pod-only DP mesh has
+    neither). Keeps the rest of the spec intact — the shape-aware fallback
+    every production sharding layer needs."""
     if mesh is None or spec is None:
         return spec
     sizes = dict(mesh.shape)
@@ -197,10 +278,17 @@ def fit_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
             out.append(entry)
             continue
         axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in sizes)
+        if not axes:
+            out.append(None)
+            continue
         prod = 1
         for a in axes:
-            prod *= sizes.get(a, 1)
-        out.append(entry if shape[i] % prod == 0 else None)
+            prod *= sizes[a]
+        if shape[i] % prod != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
     return P(*out)
 
 

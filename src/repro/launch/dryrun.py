@@ -30,8 +30,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import SHAPES, TrainConfig
 from repro.configs import get_config, list_archs
@@ -39,23 +37,13 @@ from repro.distributed import sharding as shd
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import make_production_mesh, mesh_chip_count
 from repro.models import build_model
-from repro.optim.adamw import AdamWState
 from repro.roofline import analyze_compiled   # collective parse + 3 terms
-from repro.train.step import make_serve_step, make_train_step
+from repro.train.state import abstract_train_state
+from repro.train.step import jit_step
 
 
 def _abstract_params(model):
     return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-
-
-def _abstract_opt(params_shapes):
-    f32 = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32)
-    return AdamWState(
-        step=jax.ShapeDtypeStruct((), jnp.int32),
-        m=jax.tree_util.tree_map(f32, params_shapes),
-        v=jax.tree_util.tree_map(f32, params_shapes),
-        master=jax.tree_util.tree_map(f32, params_shapes),
-    )
 
 
 def apply_overrides(arch, ov: Dict[str, Any]):
@@ -104,48 +92,21 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
 
     with shd.use_mesh(mesh), shd.use_strategy(arch.sharding_strategy):
         params_s = _abstract_params(model)
-        pspecs = shd.param_specs(params_s, mesh)
-        pshard = jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), pspecs)
 
         if shape.kind in ("train", "prefill"):
             batch_s = specs_lib.train_input_specs(arch, shape)
-            opt_s = _abstract_opt(params_s)
-            opt_shard = AdamWState(NamedSharding(mesh, P()),
-                                   pshard, pshard, pshard)
-            bshard = jax.tree_util.tree_map(
-                lambda s: NamedSharding(mesh, s),
-                shd.batch_specs(batch_s, mesh))
-            mshard = NamedSharding(mesh, P())
-            step = make_train_step(model, tcfg)
-            jitted = jax.jit(
-                step,
-                in_shardings=(pshard, opt_shard, bshard),
-                out_shardings=(pshard, opt_shard,
-                               {"loss": mshard, "grad_norm": mshard,
-                                "lr": mshard}),
-                donate_argnums=(0, 1))
-            lowered = jitted.lower(params_s, opt_s, batch_s)
+            state_s = abstract_train_state(params_s, tcfg, mesh)
+            jitted = jit_step(model, "train", mesh, tcfg=tcfg,
+                              state_like=state_s, batch_like=batch_s)
+            lowered = jitted.lower(state_s, batch_s)
         else:  # decode
             cache_s = jax.eval_shape(
                 lambda p: model.init_cache(p, shape.global_batch,
                                            shape.seq_len), params_s)
-            cshard = jax.tree_util.tree_map(
-                lambda s: NamedSharding(mesh, s), shd.cache_specs(cache_s, mesh))
+            jitted = jit_step(model, "serve", mesh, params_like=params_s,
+                              cache_like=cache_s,
+                              batch_size=shape.global_batch)
             tok_s = specs_lib.decode_token_specs(arch, shape)
-            B = shape.global_batch
-            tok_shard = NamedSharding(mesh, shd.fit_spec(
-                P(shd.batch_axes(mesh)), (B, 1), mesh))
-            from repro.models.lm import padded_vocab
-            logit_shard = NamedSharding(mesh, shd.fit_spec(
-                P(shd.batch_axes(mesh), None, "model"),
-                (B, 1, padded_vocab(arch)), mesh))
-            step = make_serve_step(model)
-            jitted = jax.jit(
-                step,
-                in_shardings=(pshard, tok_shard, cshard),
-                out_shardings=(tok_shard, logit_shard, cshard),
-                donate_argnums=(2,))
             lowered = jitted.lower(params_s, tok_s, cache_s)
 
         t_lower = time.time() - t0

@@ -31,7 +31,9 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 16x16")
+    ap.add_argument("--mesh", default="1x1",
+                    help="DATAxMODEL (e.g. 16x16) or PODxDATAxMODEL "
+                         "(e.g. 2x16x16 — engages the pod axis)")
     ap.add_argument("--strategy", default="megatron",
                     choices=["megatron", "fsdp", "serve", "ring", "moe_rep"])
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -39,6 +41,16 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-reduce", default="gspmd",
+                    choices=["gspmd", "explicit"],
+                    help="who owns the cross-pod gradient collective: XLA "
+                         "(gspmd) or the shard_map'd pod-local engine")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"],
+                    help="int8-compress the cross-pod gradient reduction "
+                         "(error-feedback residual carried in TrainState)")
+    ap.add_argument("--residual-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
     args = ap.parse_args()
 
     name = args.arch.replace("-", "_")
@@ -46,12 +58,19 @@ def main():
     arch = dataclasses.replace(arch, sharding_strategy=args.strategy)
     model = build_model(arch)
 
-    d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = jax.make_mesh((d, m), ("data", "model"))
+    mesh_dims = tuple(int(x) for x in args.mesh.split("x"))
+    # PODxDATAxMODEL engages the pod-local gradient engine; DATAxMODEL is
+    # the single-pod layout.
+    axes = ("pod", "data", "model") if len(mesh_dims) == 3 \
+        else ("data", "model")
+    mesh = jax.make_mesh(mesh_dims, axes)
     tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=20,
                        total_steps=args.steps, microbatch=args.microbatch,
                        checkpoint_every=args.ckpt_every,
-                       checkpoint_dir=args.ckpt_dir)
+                       checkpoint_dir=args.ckpt_dir,
+                       grad_reduce=args.grad_reduce,
+                       grad_compression=args.grad_compression,
+                       residual_dtype=args.residual_dtype)
 
     with shd.use_strategy(args.strategy):
         trainer = Trainer(model, tcfg, mesh)
@@ -65,7 +84,7 @@ def main():
         hist = trainer.fit(iter(data), n_steps=args.steps)
         trainer.checkpoint(sync=True)
     print(f"[launch] done: step {trainer.step} "
-          f"loss {hist[0].loss:.3f} -> {hist[-1].loss:.3f}; "
+          f"loss {hist[0].loss_value:.3f} -> {hist[-1].loss_value:.3f}; "
           f"stragglers={sum(h.straggler for h in hist)}")
 
 

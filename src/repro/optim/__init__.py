@@ -1,2 +1,3 @@
-from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
-                               cosine_schedule, global_norm, clip_by_global_norm)
+from repro.optim.adamw import (AdamWState, adamw_apply, adamw_init,
+                               adamw_update, cosine_schedule, global_norm,
+                               clip_by_global_norm)

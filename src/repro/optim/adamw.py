@@ -60,11 +60,18 @@ def clip_by_global_norm(grads, max_norm: float):
         lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
 
 
-def adamw_update(cfg: TrainConfig, grads, state: AdamWState, params
-                 ) -> Tuple[Any, AdamWState, dict]:
-    """Returns (new params in original dtype, new state, metrics)."""
+def adamw_apply(cfg: TrainConfig, grads, step, m, v, master, params
+                ) -> Tuple[Any, Any, Any, Any, dict]:
+    """Core AdamW on PRE-REDUCED gradients.
+
+    ``grads`` must already be the global (cross-replica) mean — this
+    function never inserts a collective, so it composes with both gradient
+    reduction modes (GSPMD-implicit and the explicit shard_map'd pod
+    reduction in train/step.py). ``step`` is the POST-increment step count
+    (TrainState owns the counter). Returns
+    ``(new_params, new_m, new_v, new_master, metrics)``.
+    """
     grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
-    step = state.step + 1
     lr = cosine_schedule(cfg)(step)
     b1, b2 = cfg.b1, cfg.b2
     bc1 = 1.0 - b1 ** step.astype(jnp.float32)
@@ -81,10 +88,10 @@ def adamw_update(cfg: TrainConfig, grads, state: AdamWState, params
         return m_new, v_new, master_new
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
-    flat_m = treedef.flatten_up_to(state.m)
-    flat_v = treedef.flatten_up_to(state.v)
-    flat_ma = treedef.flatten_up_to(state.master)
-    out = [upd(g, m, v, ma) for g, m, v, ma in
+    flat_m = treedef.flatten_up_to(m)
+    flat_v = treedef.flatten_up_to(v)
+    flat_ma = treedef.flatten_up_to(master)
+    out = [upd(g, m_, v_, ma) for g, m_, v_, ma in
            zip(flat_g, flat_m, flat_v, flat_ma)]
     new_m = treedef.unflatten([o[0] for o in out])
     new_v = treedef.unflatten([o[1] for o in out])
@@ -95,4 +102,16 @@ def adamw_update(cfg: TrainConfig, grads, state: AdamWState, params
         [ma.astype(p.dtype) for ma, p in
          zip([o[2] for o in out], flat_p)])
     metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_m, new_v, new_master, metrics
+
+
+def adamw_update(cfg: TrainConfig, grads, state: AdamWState, params
+                 ) -> Tuple[Any, AdamWState, dict]:
+    """Standalone-AdamWState convenience wrapper over ``adamw_apply`` (the
+    simple single-device trainers: examples, classifier benchmarks). The
+    production train step absorbs this state into train/state.TrainState
+    and calls ``adamw_apply`` directly."""
+    step = state.step + 1
+    new_params, new_m, new_v, new_master, metrics = adamw_apply(
+        cfg, grads, step, state.m, state.v, state.master, params)
     return new_params, AdamWState(step, new_m, new_v, new_master), metrics

@@ -70,6 +70,33 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def collective_ops_from_hlo(hlo_text: str):
+    """Per-OP collective inventory from optimized HLO text: one record per
+    (component of a) collective result, ``{kind, dtype, elems, bytes,
+    group}``. This is what the pod-local gradient tests assert on — e.g.
+    "the compressed explicit path lowers NO fp32 all-reduce/all-gather
+    larger than N elements" (tests/test_train_engine.py) — and what
+    benchmarks/grad_compression.py reports next to the analytic
+    ``reduction_wire_bytes`` accounting."""
+    ops = []
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
+        kind = kind.replace("-start", "")
+        g = max(_group_size(rest), 1)
+        for sm in _SHAPE_RE.finditer(shape_str):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            ops.append({"kind": kind, "dtype": dt, "elems": n,
+                        "bytes": n * _DTYPE_BYTES[dt], "group": g})
+    return ops
+
+
 def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
     """Per-chip WIRE bytes per collective kind from the optimized HLO.
 

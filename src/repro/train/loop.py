@@ -1,49 +1,57 @@
 """Fault-tolerant training loop.
 
 Production behaviours implemented and unit-tested on this container:
-  * checkpoint/restart: periodic async checkpoints (params + optimizer +
-    data cursor); on startup the trainer auto-resumes from the latest-good
+  * checkpoint/restart: periodic async checkpoints of the FULL TrainState
+    (params + AdamW moments + step + error-feedback residual) plus the data
+    cursor; on startup the trainer auto-resumes from the latest-good
     checkpoint, including MID-EPOCH data position (the pipeline is a pure
     function of step).
   * elastic restart: restore re-resolves sharding specs against the current
     mesh, so the same checkpoint restarts on a different device count /
-    mesh shape (tests/test_distributed.py exercises 8 -> 4 devices).
+    mesh shape (tests/test_distributed.py exercises 8 -> 4 devices;
+    tests/test_train_engine.py does the same including the per-pod
+    residual tree).
   * straggler watchdog: per-step wall-times feed an EWMA; steps slower than
     ``straggler_factor`` x EWMA are logged with the step payload so an
     external orchestrator can evict the slow host. (On real multi-host TPU
     the same hook reads per-host step barriers.)
   * preemption safety: SIGTERM triggers a final synchronous checkpoint
     before exit (simulated in tests by calling .preempt()).
+  * NO per-step host sync: metrics stay device-side (``StepStats.loss``
+    holds the jax scalar) and are only materialised on ``log_every`` /
+    checkpoint steps — the step loop dispatches ahead of the device
+    instead of blocking on ``float(loss)`` every iteration.
 """
 from __future__ import annotations
 
 import dataclasses
-import signal
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import TrainConfig
 from repro.distributed import sharding as shd
-from repro.optim.adamw import adamw_init
+from repro.train.state import TrainState, train_state_init
 
 
 @dataclasses.dataclass
 class StepStats:
     step: int
-    loss: float
+    loss: Any        # device-side jax scalar until materialised (lazy)
     wall: float
     straggler: bool
+
+    @property
+    def loss_value(self) -> float:
+        return float(self.loss)
 
 
 class Trainer:
     def __init__(self, model, tcfg: TrainConfig, mesh, params=None,
                  straggler_factor: float = 3.0, log_every: int = 10,
                  log_fn: Callable[[str], None] = print):
-        from repro.train.step import jit_train_step
         self.model = model
         self.tcfg = tcfg
         self.mesh = mesh
@@ -52,8 +60,7 @@ class Trainer:
         self.log_every = log_every
         if params is None:
             params = model.init(jax.random.PRNGKey(tcfg.seed))
-        self.params = params
-        self.opt_state = adamw_init(params)
+        self.state = train_state_init(params, tcfg, mesh)
         self.step = 0
         self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
                                       async_save=tcfg.async_checkpoint)
@@ -62,25 +69,24 @@ class Trainer:
         self.history: List[StepStats] = []
         self._preempted = False
 
+    # TrainState views (the state pytree is authoritative)
+
+    @property
+    def params(self):
+        return self.state.params
+
     # -- fault tolerance ------------------------------------------------------
 
     def maybe_resume(self) -> bool:
         latest = self.ckpt.latest_step()
         if latest is None:
             return False
-        tree = {"params": self.params, "opt": self.opt_state}
-        specs = {"params": shd.param_specs(self.params, self.mesh),
-                 "opt": jax.tree_util.tree_map(
-                     lambda _: None, self.opt_state)}
-        # optimizer state inherits parameter specs
-        pspec = shd.param_specs(self.params, self.mesh)
-        from repro.optim.adamw import AdamWState
-        from jax.sharding import PartitionSpec as P
-        specs["opt"] = AdamWState(P(), pspec, pspec, pspec)
+        from repro.train.step import train_state_specs
+        specs = train_state_specs(self.state, self.mesh, self.tcfg)
         step, restored, extra = self.ckpt.restore(
-            latest, mesh=self.mesh, specs=specs, target=tree)
-        self.params = restored["params"]
-        self.opt_state = restored["opt"]
+            latest, mesh=self.mesh, specs={"state": specs},
+            target={"state": self.state})
+        self.state = restored["state"]
         self.step = step
         self.log_fn(f"[trainer] resumed from step {step} "
                     f"(mesh={tuple(self.mesh.shape.values())})")
@@ -90,8 +96,7 @@ class Trainer:
         was_async = self.ckpt.async_save
         if sync:
             self.ckpt.async_save = False
-        self.ckpt.save(self.step, {"params": self.params,
-                                   "opt": self.opt_state},
+        self.ckpt.save(self.step, {"state": self.state},
                        extra={"step": self.step})
         self.ckpt.async_save = was_async
 
@@ -109,17 +114,29 @@ class Trainer:
             first_batch = next(it)
             if self._jit_step is None:
                 self._jit_step = jit_train_step(
-                    self.model, self.tcfg, self.mesh, self.params,
+                    self.model, self.tcfg, self.mesh, self.state,
                     first_batch)
             batch = first_batch
             target = self.step + n_steps
             while self.step < target and not self._preempted:
                 t0 = time.perf_counter()
-                self.params, self.opt_state, metrics = self._jit_step(
-                    self.params, self.opt_state, batch)
-                loss = float(metrics["loss"])
-                wall = time.perf_counter() - t0
+                self.state, metrics = self._jit_step(self.state, batch)
                 self.step += 1
+                loss = metrics["loss"]      # device-side; NOT materialised
+                # wall measures dispatch (plus any queue backpressure) on
+                # EVERY step, never the log-step sync below — otherwise each
+                # log_every-th step would absorb the queued backlog and trip
+                # the watchdog while real stragglers hide in dispatch-time
+                # steps. Persistent device slowness still surfaces here:
+                # once the dispatch queue fills, dispatch blocks on it.
+                wall = time.perf_counter() - t0
+                log_step = self.step % self.log_every == 0
+                ckpt_step = bool(self.tcfg.checkpoint_every) and \
+                    self.step % self.tcfg.checkpoint_every == 0
+                if log_step or ckpt_step:
+                    # the only host syncs in the loop
+                    loss = float(jax.block_until_ready(loss))
+                    self._materialise_history()
                 straggler = False
                 if self._ewma is None:
                     self._ewma = wall
@@ -132,13 +149,23 @@ class Trainer:
                     self._ewma = 0.9 * self._ewma + 0.1 * wall
                 self.history.append(StepStats(self.step, loss, wall,
                                               straggler))
-                if self.step % self.log_every == 0:
+                if log_step:
                     self.log_fn(f"[trainer] step {self.step} "
                                 f"loss {loss:.4f} {wall*1e3:.1f} ms")
-                if self.tcfg.checkpoint_every and \
-                        self.step % self.tcfg.checkpoint_every == 0:
+                if ckpt_step:
                     self.checkpoint()
                 if self.step < target:
                     batch = next(it)
             self.ckpt.wait()
+            self._materialise_history()
         return self.history
+
+    def _materialise_history(self):
+        """Backfill device-side StepStats losses into plain floats. Called
+        right after a host sync (device work is done — conversions are
+        cheap host copies), so ``history`` never pins more than
+        ``log_every`` device buffers."""
+        for st in reversed(self.history):
+            if isinstance(st.loss, float):
+                break
+            st.loss = float(st.loss)

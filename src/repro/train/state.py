@@ -1,0 +1,94 @@
+"""TrainState: the single pytree the training engine owns.
+
+One NamedTuple carries everything a train step reads and writes — params,
+the AdamW moments + fp32 master copy (previously a separate ``AdamWState``),
+the step counter, and the error-feedback RESIDUAL tree for the int8
+compressed gradient path. Folding the residual into the state is what turns
+per-step round-to-nearest quantisation into accumulated-and-corrected error
+feedback: the residual survives across steps, checkpoints, and elastic
+restarts exactly like the optimizer moments do.
+
+Residual layout: one leaf per parameter leaf with a LEADING POD dimension —
+shape ``(n_pod, *param.shape)`` sharded ``P("pod", ...)`` — because the
+quantisation error is a per-pod quantity (each pod quantises its own local
+gradient). On meshes without a "pod" axis, or when compression is off, the
+residual is an empty dict (zero leaves; checkpoint/manager.py round-trips
+empty containers).
+
+Sharding rules and jit wiring for this state live in train/step.py
+(``train_state_specs`` / ``jit_step``) — exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class TrainState(NamedTuple):
+    step: jax.Array      # int32 scalar, post-increment count of applied steps
+    params: Any          # compute-dtype params (what the model applies)
+    m: Any               # fp32 first moment
+    v: Any               # fp32 second moment
+    master: Any          # fp32 master copy (authoritative)
+    residual: Any        # error-feedback residual, {} when disabled
+
+
+def residual_dtype(tcfg: TrainConfig):
+    return jnp.bfloat16 if tcfg.residual_dtype == "bfloat16" else jnp.float32
+
+
+def _wants_residual(tcfg: TrainConfig, mesh) -> bool:
+    return (tcfg.grad_compression == "int8" and mesh is not None
+            and "pod" in mesh.axis_names)
+
+
+def init_residual(params, tcfg: TrainConfig, mesh) -> Any:
+    """Zero residual tree: (n_pod, *leaf.shape) per param leaf, or {}."""
+    if not _wants_residual(tcfg, mesh):
+        return {}
+    n_pod = mesh.shape["pod"]
+    dt = residual_dtype(tcfg)
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((n_pod,) + p.shape, dt), params)
+
+
+def train_state_init(params, tcfg: TrainConfig, mesh=None) -> TrainState:
+    """Fresh TrainState. ``mesh`` (optional) decides the residual layout."""
+    # copy=True: master must never alias params (both are donated by the
+    # train step; aliased buffers trip "donate the same buffer twice")
+    f32 = lambda x: jnp.array(x, dtype=jnp.float32, copy=True)
+    zeros = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        master=jax.tree_util.tree_map(f32, params),
+        residual=init_residual(params, tcfg, mesh),
+    )
+
+
+def abstract_train_state(params_shapes, tcfg: TrainConfig, mesh=None
+                         ) -> TrainState:
+    """ShapeDtypeStruct TrainState for lowering (launch/dryrun.py)."""
+    f32 = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    if _wants_residual(tcfg, mesh):
+        n_pod = mesh.shape["pod"]
+        dt = residual_dtype(tcfg)
+        residual = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct((n_pod,) + p.shape, dt),
+            params_shapes)
+    else:
+        residual = {}
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=params_shapes,
+        m=jax.tree_util.tree_map(f32, params_shapes),
+        v=jax.tree_util.tree_map(f32, params_shapes),
+        master=jax.tree_util.tree_map(f32, params_shapes),
+        residual=residual,
+    )

@@ -20,7 +20,7 @@ def test_sharded_train_step_matches_single_device(run_sub):
         from repro.launch.specs import make_batch
         from repro.config import ShapeConfig, TrainConfig
         from repro.train.step import jit_train_step, make_train_step
-        from repro.optim.adamw import adamw_init
+        from repro.train.state import train_state_init
         from repro.distributed import sharding as shd
         import dataclasses
 
@@ -34,19 +34,19 @@ def test_sharded_train_step_matches_single_device(run_sub):
 
         # single device reference
         step = make_train_step(model, tcfg)
-        opt = adamw_init(params)
-        p1, o1, m1 = jax.jit(step)(params, opt, batch)
+        s1, m1 = jax.jit(step)(train_state_init(params, tcfg), batch)
 
         # 8-device (4 data x 2 model) sharded
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         with shd.use_mesh(mesh):
-            jstep = jit_train_step(model, tcfg, mesh, params, batch,
+            state = train_state_init(params, tcfg, mesh)
+            jstep = jit_train_step(model, tcfg, mesh, state, batch,
                                    donate=False)
-            p2, o2, m2 = jstep(params, adamw_init(params), batch)
+            s2, m2 = jstep(state, batch)
         d = jax.tree_util.tree_map(
             lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
                                                - b.astype(jnp.float32)))),
-            p1, p2)
+            s1.params, s2.params)
         maxd = max(jax.tree_util.tree_leaves(d))
         print(json.dumps({"loss1": float(m1["loss"]),
                           "loss2": float(m2["loss"]), "max_param_diff": maxd}))

@@ -15,10 +15,20 @@ pattern='jax\.shard_map|jax\.experimental\.shard_map|from jax\.experimental impo
 hits=$(grep -rn --include='*.py' -E "$pattern" src tests benchmarks examples 2>/dev/null \
          | grep -v 'src/repro/distributed/compat\.py' || true)
 
-if [ -n "$hits" ]; then
+# ALSO reject the aliased spellings of the psum-family collectives that the
+# jax.lax.* pattern above misses: `from jax import lax; lax.psum(...)` and
+# `from jax.lax import psum`. The pod-local gradient engine (train/step.py)
+# made the explicit-collective surface much larger, so the grep has to be
+# spelling-complete — any of these bypasses the single-patch-point contract.
+alias_pattern='(^|[^.[:alnum:]_])lax\.(psum|pmax|pmin|pmean|all_gather|ppermute|psum_scatter|axis_index)[[:space:]]*\(|from jax\.lax import[^#]*(psum|pmax|pmin|pmean|all_gather|ppermute|psum_scatter|axis_index)'
+alias_hits=$(grep -rn --include='*.py' -E "$alias_pattern" src tests benchmarks examples 2>/dev/null \
+         | grep -v 'src/repro/distributed/compat\.py' || true)
+
+if [ -n "$hits" ] || [ -n "$alias_hits" ]; then
   echo "compat-contract violation: shard_map / raw collectives referenced" >&2
   echo "outside src/repro/distributed/compat.py (route through compat.*):" >&2
-  echo "$hits" >&2
+  [ -n "$hits" ] && echo "$hits" >&2
+  [ -n "$alias_hits" ] && echo "$alias_hits" >&2
   exit 1
 fi
 echo "compat lint OK: all shard_map/collective call sites route through distributed/compat.py"
