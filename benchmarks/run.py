@@ -16,7 +16,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablations, grad_compression, paper_tables,
-                            seq_parallel)
+                            seq_parallel, serve)
     benches = [
         paper_tables.table1_accuracy,
         paper_tables.table2_variants,
@@ -30,6 +30,7 @@ def main() -> None:
         ablations.kernels_micro,
         seq_parallel.bench_seq_parallel,
         grad_compression.bench_grad_compression,
+        serve.bench_serve,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,148 @@
+"""Serving-engine benchmark: continuous batching vs one-request-at-a-time.
+
+Two engine configurations over the SAME request trace (reduced ssm LM —
+the O(D)-state family the serving story is about):
+
+  * ``serve_one_at_a_time`` — 1 slot: every request prefilled, decoded to
+    completion, then the next (the baseline a naive server implements);
+  * ``serve_continuous``    — 8 slots: admission interleaves with batched
+    decode ticks, finished slots recycle immediately.
+
+Per row: tokens/s over generated tokens, p50/p99 per-token decode latency,
+p50 admission (prefill) latency. The ``speedup`` row records the
+continuous/one-at-a-time tokens/s ratio and the ``meets_2x`` flag (the PR-4
+acceptance bar). A further ``prefill_parallel`` row asserts — at the jaxpr
+level, via ``roofline.sequential_loop_lengths`` — that chunk prefill
+contains NO length-T sequential scan (the parallel-solver-lowering
+acceptance check) and records the loop lengths it does contain.
+
+Environment knobs:
+  SERVE_TOY=1          — smaller trace for the CI bench-smoke job;
+  BENCH_JSON_OUT=path  — also write rows as JSON (uploaded as the
+                         BENCH_serve.json artifact per commit).
+
+Standalone:  PYTHONPATH=src python benchmarks/serve.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+# decode-heavy trace: serving is decode-dominated (prompts amortize through
+# one parallel prefill; every generated token is a tick), so max_new >
+# prompt_len is the regime the slot-batching claim is about
+N_REQUESTS, PROMPT_LEN, MAX_NEW, SLOTS, CHUNK = 16, 32, 64, 8, 16
+TOY = (8, 8, 32, 8, 8)
+
+
+def _run_engine(model, params, slots, max_seq, chunk, reqs_spec):
+    """Serve one request trace; returns (tokens/s, latency percentiles)."""
+    import numpy as np
+
+    from repro.serve.engine import Request, ServeEngine
+
+    engine = ServeEngine(model, params, batch_slots=slots, max_seq=max_seq,
+                         prefill_chunk=chunk)
+    # warmup: compile prefill + decode once outside the measured window
+    warm = [Request(uid=-1 - i, prompt=p.copy(), max_new_tokens=n)
+            for i, (p, n) in enumerate(reqs_spec[:2])]
+    for r in warm:
+        engine.submit(r)
+    engine.run_until_drained()
+    engine.token_lat = {"prefill": [], "decode": []}
+    engine.finished = []
+
+    reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=n)
+            for i, (p, n) in enumerate(reqs_spec)]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.run_until_drained()
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    toks = sum(len(r.out_tokens) for r in reqs)
+    return toks / wall, engine.latency_percentiles(), toks, wall
+
+
+def main() -> None:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.roofline import sequential_loop_lengths
+
+    toy = os.environ.get("SERVE_TOY") == "1"
+    n_req, p_len, max_new, slots, chunk = TOY if toy else (
+        N_REQUESTS, PROMPT_LEN, MAX_NEW, SLOTS, CHUNK)
+    max_seq = p_len + max_new + chunk
+
+    arch = get_reduced("falcon_mamba_7b")
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs_spec = [(rng.integers(0, arch.vocab, size=p_len).astype(np.int32),
+                  max_new) for _ in range(n_req)]
+
+    rows = []
+
+    def record(name, tok_s, lat, toks, wall):
+        rows.append({"name": name, "tokens_per_s": tok_s,
+                     "decode_p50_ms": lat.get("decode_p50_s", 0) * 1e3,
+                     "decode_p99_ms": lat.get("decode_p99_s", 0) * 1e3,
+                     "prefill_p50_ms": lat.get("prefill_p50_s", 0) * 1e3,
+                     "n_requests": n_req, "prompt_len": p_len,
+                     "max_new": max_new, "tokens": toks, "wall_s": wall})
+        print(f"{name},{wall*1e6:.1f},tokens_per_s={tok_s:.1f};"
+              f"p50_ms={rows[-1]['decode_p50_ms']:.2f};"
+              f"p99_ms={rows[-1]['decode_p99_ms']:.2f}", flush=True)
+
+    tok_s_1, lat_1, toks, wall = _run_engine(
+        model, params, 1, max_seq, chunk, reqs_spec)
+    record("serve_one_at_a_time", tok_s_1, lat_1, toks, wall)
+    tok_s_c, lat_c, toks, wall = _run_engine(
+        model, params, slots, max_seq, chunk, reqs_spec)
+    record(f"serve_continuous_slots{slots}", tok_s_c, lat_c, toks, wall)
+
+    speedup = tok_s_c / tok_s_1
+    rows.append({"name": "speedup", "continuous_over_serial": speedup,
+                 "meets_2x": bool(speedup >= 2.0), "slots": slots})
+    print(f"speedup,0,continuous_over_serial={speedup:.2f};"
+          f"meets_2x={speedup >= 2.0}", flush=True)
+
+    # parallel-prefill lowering check: no sequential scan of length T
+    T = chunk
+    arch32 = dataclasses.replace(arch, dtype=jnp.float32)
+    m32 = build_model(arch32)
+    cache = m32.init_cache(params, 1, max_seq)
+    lens = sequential_loop_lengths(
+        lambda p, t, c: m32.prefill(p, t, c, T), params,
+        jnp.zeros((1, T), jnp.int32), cache)
+    parallel = T not in lens and -1 not in lens
+    rows.append({"name": "prefill_parallel", "chunk_T": T,
+                 "seq_loop_lengths": sorted(lens),
+                 "no_length_T_scan": bool(parallel)})
+    print(f"prefill_parallel,0,no_length_T_scan={parallel};"
+          f"loop_lengths={sorted(lens)}", flush=True)
+    assert parallel, (
+        f"prefill lowered a sequential loop of prompt length: {sorted(lens)}")
+
+    out = os.environ.get("BENCH_JSON_OUT")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {out}", file=sys.stderr, flush=True)
+
+
+def bench_serve() -> None:
+    """benchmarks/run.py entry."""
+    main()
+
+
+if __name__ == "__main__":
+    main()

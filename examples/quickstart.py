@@ -1,5 +1,7 @@
 """Quickstart: train the paper's LrcSSM sequence classifier (Figure 1) with
-the exact-DEER parallel solver on a long-horizon synthetic task.
+the exact-DEER parallel solver on a long-horizon synthetic task, then serve
+a tiny LM through the continuous-batching engine (parallel prefill + O(D)
+state-cache decode — the same API examples/serve_lm.py drives at scale).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,6 +9,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import TrainConfig
 from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
@@ -51,5 +54,33 @@ def main():
     print(f"test accuracy: {correct / tot:.3f} (chance 0.5)")
 
 
+def serve_snippet():
+    """Serve a reduced SSM LM with the continuous-batching engine: chunked
+    parallel prefill on admission, one batched decode tick per token,
+    streamed greedy tokens (matches examples/serve_lm.py)."""
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    arch = get_reduced("falcon_mamba_7b")
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=2, max_seq=64,
+                         prefill_chunk=8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, arch.vocab, size=6)
+                    .astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    print("serving demo (continuous batching, parallel prefill):")
+    for r in reqs:
+        print(f"  req {r.uid}: {r.prompt.tolist()} -> {r.out_tokens}")
+
+
 if __name__ == "__main__":
     main()
+    serve_snippet()

@@ -1,4 +1,9 @@
-"""Batched serving example: continuous-batching decode over a shared cache.
+"""Continuous-batching serving example, end-to-end on CPU.
+
+Drives the real engine (`repro.serve.engine.ServeEngine`): chunked PARALLEL
+prefill on admission (the DEER/associative-scan paths — no token-by-token
+prompt loop), one batched decode tick per generated token across all slots,
+streaming callbacks, and slot recycling (continuous batching).
 
     PYTHONPATH=src python examples/serve_lm.py --arch falcon_mamba_7b
 """
@@ -15,36 +20,49 @@ from repro.serve.engine import Request, ServeEngine
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite_3_8b")
+    ap.add_argument("--arch", default="falcon_mamba_7b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args()
 
     arch = get_reduced(args.arch)
     model = build_model(arch)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, batch_slots=args.slots, max_seq=64)
+    engine = ServeEngine(model, params, batch_slots=args.slots, max_seq=64,
+                         prefill_chunk=args.prefill_chunk)
 
+    streamed = []
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
-                    prompt=rng.integers(0, arch.vocab, size=4).astype(np.int32),
-                    max_new_tokens=8) for i in range(args.requests)]
+                    prompt=rng.integers(0, arch.vocab,
+                                        size=args.prompt_len)
+                    .astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    on_token=lambda uid, tok, done:
+                        streamed.append((uid, tok, done)))
+            for i in range(args.requests)]
     for r in reqs:
         engine.submit(r)
 
     t0 = time.perf_counter()
-    ticks = 0
-    while (engine.queue or any(engine.active)) and ticks < 200:
-        engine.step()
-        ticks += 1
+    engine.run_until_drained()
     wall = time.perf_counter() - t0
+
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out_tokens) for r in reqs)
+    lat = engine.latency_percentiles()
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {wall:.2f}s "
           f"({toks / wall:.1f} tok/s, {args.slots} slots, "
-          f"continuous batching)")
+          f"continuous batching, {len(streamed)} streamed callbacks)")
+    print(f"per-token decode latency: "
+          f"p50={lat.get('decode_p50_s', 0)*1e3:.2f}ms "
+          f"p99={lat.get('decode_p99_s', 0)*1e3:.2f}ms")
     for r in reqs[:3]:
-        print(f"  req {r.uid}: prompt={r.prompt.tolist()} -> {r.out_tokens}")
+        print(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()}... "
+              f"-> {r.out_tokens}")
 
 
 if __name__ == "__main__":

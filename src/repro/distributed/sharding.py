@@ -56,11 +56,15 @@ def manual_body():
 
 
 def in_manual_body() -> bool:
+    """True while tracing inside a fully-manual shard_map body."""
     return _MANUAL.get()
 
 
 @contextlib.contextmanager
 def use_strategy(name: str):
+    """Select the parameter/activation distribution strategy for code in
+    this context: "megatron" | "fsdp" | "serve" | "ring" | "moe_rep" (see
+    ``_apply_strategy`` and ArchConfig.sharding_strategy)."""
     token = _STRATEGY.set(name)
     try:
         yield name
@@ -69,11 +73,14 @@ def use_strategy(name: str):
 
 
 def current_strategy() -> str:
+    """The active distribution strategy name (default "megatron")."""
     return _STRATEGY.get()
 
 
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh):
+    """Install ``mesh`` as the ambient mesh (contextvar + jax Mesh
+    context) — every sharding helper below reads it via current_mesh()."""
     token = _MESH.set(mesh)
     try:
         with mesh:              # jax.sharding.Mesh context manager
@@ -83,18 +90,23 @@ def use_mesh(mesh: Mesh):
 
 
 def current_mesh() -> Optional[Mesh]:
+    """The ambient mesh installed by ``use_mesh`` (None outside)."""
     return _MESH.get()
 
 
 def _axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The mesh's axis names as a tuple."""
     return tuple(mesh.axis_names)
 
 
 def batch_axes(mesh: Mesh):
+    """The data-parallel axes present in ``mesh`` (("pod", "data") order),
+    or None when it has neither — the axes batches shard over."""
     return tuple(a for a in ("pod", "data") if a in _axes(mesh)) or None
 
 
 def pod_axis(mesh: Mesh) -> Optional[str]:
+    """The cross-pod (DCN) axis name if the mesh has one."""
     return "pod" if "pod" in _axes(mesh) else None
 
 
@@ -156,6 +168,9 @@ def residual_specs(residual, mesh: Mesh, param_specs=None) -> Any:
 # ---------------------------------------------------------------------------
 
 def _act_spec(mesh: Mesh, strategy: str, shape) -> P:
+    """Activation PartitionSpec for ``shape`` under ``strategy`` (batch
+    over the DP axes; fsdp spreads over the whole grid; ring also shards
+    the time axis)."""
     ba = batch_axes(mesh) or ()
     if strategy == "moe_rep":
         strategy = "fsdp"
@@ -194,6 +209,8 @@ def constrain_batch_only(x: jax.Array) -> jax.Array:
 
 
 def shard_activation(x: jax.Array, kind: str = "act") -> jax.Array:
+    """Constrain an activation to the strategy's layout (no-op without a
+    mesh, inside manual shard_map bodies, and on non-divisible shapes)."""
     mesh = current_mesh()
     if mesh is None or _MANUAL.get():
         return x
@@ -293,6 +310,7 @@ def fit_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
 
 
 def _path_str(path) -> str:
+    """Flatten a tree_util key path to the '/'-joined rule-lookup key."""
     parts = []
     for k in path:
         if isinstance(k, jax.tree_util.DictKey):
@@ -368,6 +386,7 @@ def param_specs(params, mesh: Optional[Mesh] = None) -> Any:
 
 
 def param_shardings(mesh: Mesh, params) -> Any:
+    """``param_specs`` materialised as NamedShardings on ``mesh``."""
     specs = param_specs(params, mesh)
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
 

@@ -1,7 +1,12 @@
-"""Production serving launcher: continuous-batching engine over a mesh.
+"""Production serving launcher: the continuous-batching engine over a mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
-        --reduced --requests 8 --slots 4
+        --reduced --requests 16 --slots 8 --prefill-chunk 32 --mesh 1x1
+
+``--mesh DxM`` (data x model, the serve-strategy spelling: weights TP over
+"model", slots/caches over "data") or ``--mesh PxDxM`` to include a pod
+axis. Prints tokens/s plus p50/p99 per-token decode latency — the same
+numbers ``benchmarks/serve.py`` records as ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -19,45 +24,64 @@ from repro.serve.engine import Request, ServeEngine
 
 
 def main():
+    """Parse CLI flags, stand up the engine, serve synthetic requests."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM or PxDxM mesh spelling (e.g. 1x4, 2x8x2)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as the engine streams them")
     args = ap.parse_args()
 
     name = args.arch.replace("-", "_")
     arch = get_reduced(name) if args.reduced else get_config(name)
     arch = dataclasses.replace(arch, sharding_strategy="serve")
     model = build_model(arch)
-    d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = jax.make_mesh((d, m), ("data", "model"))
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    mesh = jax.make_mesh(dims, axes)
+
+    stream = None
+    if args.stream:
+        stream = lambda uid, tok, done: print(
+            f"  [stream] req {uid} -> {tok}{' <done>' if done else ''}")
 
     with shd.use_mesh(mesh), shd.use_strategy("serve"):
         params = model.init(jax.random.PRNGKey(0))
         engine = ServeEngine(model, params, batch_slots=args.slots,
-                             max_seq=args.max_seq)
+                             max_seq=args.max_seq,
+                             prefill_chunk=args.prefill_chunk, mesh=mesh)
         rng = np.random.default_rng(0)
         reqs = [Request(uid=i,
-                        prompt=rng.integers(0, arch.vocab, size=4)
+                        prompt=rng.integers(0, arch.vocab,
+                                            size=args.prompt_len)
                         .astype(np.int32),
-                        max_new_tokens=args.max_new)
+                        max_new_tokens=args.max_new, on_token=stream)
                 for i in range(args.requests)]
         for r in reqs:
             engine.submit(r)
         t0 = time.perf_counter()
-        ticks = 0
-        while (engine.queue or any(engine.active)) and ticks < 10_000:
-            engine.step()
-            ticks += 1
+        engine.run_until_drained()
         wall = time.perf_counter() - t0
+
     toks = sum(len(r.out_tokens) for r in reqs)
+    lat = engine.latency_percentiles()
     print(f"[serve] {arch.name}: {sum(r.done for r in reqs)}/{len(reqs)} "
           f"requests, {toks} tokens, {toks/max(wall,1e-9):.1f} tok/s, "
-          f"{args.slots} slots, mesh={dict(mesh.shape)}")
+          f"{args.slots} slots, chunk={args.prefill_chunk}, "
+          f"mesh={dict(mesh.shape)}")
+    if lat:
+        print(f"[serve] per-token latency: "
+              f"p50={lat.get('decode_p50_s', 0)*1e3:.2f}ms "
+              f"p99={lat.get('decode_p99_s', 0)*1e3:.2f}ms "
+              f"(prefill p50={lat.get('prefill_p50_s', 0)*1e3:.2f}ms)")
 
 
 if __name__ == "__main__":

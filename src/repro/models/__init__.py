@@ -5,7 +5,14 @@ regardless of family.
     params = m.init(key)
     loss   = m.loss(params, batch)            # train objective
     logits, cache = m.decode_step(params, tokens, cache)
+    logits, cache = m.prefill(params, tokens, cache[, length])  # parallel
     cache  = m.init_cache(params, batch_size, max_seq[, batch])
+
+``prefill`` runs a whole token chunk through the full-sequence parallel
+paths (DEER/ELK solver cascade, associative scans, flash attention) and
+lands the resulting recurrent states / KV entries in the cache — the
+serving engine's admission path. It is None for families without a chunked
+prefill implementation (audio enc-dec).
 """
 from __future__ import annotations
 
@@ -21,15 +28,20 @@ from repro.models import encdec, lm
 
 @dataclasses.dataclass(frozen=True)
 class Model:
+    """Uniform functional model surface (see module docstring)."""
     arch: ArchConfig
     init: Callable
     loss: Callable
     apply: Callable
     decode_step: Callable
     init_cache: Callable
+    prefill: Optional[Callable] = None
 
 
 def build_model(arch: ArchConfig, moe_path: str = "dense") -> Model:
+    """Construct the uniform Model surface for ``arch`` (LM zoo or the
+    enc-dec audio family). ``moe_path`` selects the MoE dispatch
+    implementation for the LM losses."""
     if arch.family == "audio":
         return Model(
             arch=arch,
@@ -54,4 +66,6 @@ def build_model(arch: ArchConfig, moe_path: str = "dense") -> Model:
         decode_step=lambda p, t, c: lm.decode_step(arch, p, t, c),
         init_cache=lambda p, bsz, max_seq, batch=None:
             lm.init_cache(arch, bsz, max_seq),
+        prefill=lambda p, t, c, length=None: lm.prefill(arch, p, t, c,
+                                                        length),
     )

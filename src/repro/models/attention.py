@@ -313,3 +313,102 @@ def update_kv_cache(k_cache: jax.Array, v_cache: jax.Array,
     v_cache = jax.lax.dynamic_update_slice_in_dim(
         v_cache, v_new.astype(v_cache.dtype), idx, axis=1)
     return k_cache, v_cache
+
+
+def update_kv_cache_rows(k_cache: jax.Array, v_cache: jax.Array,
+                         k_new: jax.Array, v_new: jax.Array,
+                         slots: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row cache insert for continuous batching: each batch row writes
+    its (1, K, hd) entry at its OWN position ``slots[b]`` — decode slots in a
+    serving batch sit at different sequence positions, so a single
+    batch-wide dynamic_update_slice cannot express the write."""
+    upd = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+        c, n.astype(c.dtype), s, axis=0))
+    return upd(k_cache, k_new, slots), upd(v_cache, v_new, slots)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill against caches (the serving engine's admission path)
+# ---------------------------------------------------------------------------
+
+def prefill_full_attention(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, k_new: jax.Array,
+                           v_new: jax.Array, pos, *,
+                           kv_chunk: int = 1024
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill a T-token chunk at absolute positions ``pos..pos+T-1``
+    against a full-context KV cache: write the chunk's k/v at ``pos``, then
+    attend causally over the whole cache (earlier chunks included; unwritten
+    tail positions are masked out by causality). Returns
+    (out (B,T,H,hd), k_cache, v_cache)."""
+    pos = jnp.asarray(pos)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    out = attention(q, k_cache, v_cache, causal=True, q_offset=pos,
+                    kv_chunk=kv_chunk)
+    return out, k_cache, v_cache
+
+
+def prefill_ring_attention(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, k_new: jax.Array,
+                           v_new: jax.Array, pos, length=None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill a T-token chunk through a sliding-window RING cache of S
+    slots (absolute position p lives at slot p % S, effective window = S —
+    the same semantics the decode path uses).
+
+    Attention runs against [the S-1 ring entries preceding the chunk] ++
+    [the chunk's own k/v], with explicit validity masking (absolute
+    position >= 0, causal, within-window) — the ring is only written
+    AFTERWARDS, because the chunk's writes overwrite exactly the history
+    slots its own early queries still need. ``length`` (default T) is the
+    valid token count of a right-padded chunk: unlike the full-context
+    cache, padding garbage written into the ring would WRAP onto live
+    window slots, so only the last min(S, length) valid positions are
+    committed. Returns (out (B,T,H,hd), k_cache, v_cache)."""
+    B, T, H, hd = q.shape
+    S = k_cache.shape[1]
+    K = k_cache.shape[2]
+    groups = H // K
+    pos = jnp.asarray(pos)
+
+    hist_abs = pos - (S - 1) + jnp.arange(S - 1)          # (S-1,) absolute
+    ring_idx = jnp.mod(hist_abs, S)
+    k_hist = jnp.take(k_cache, ring_idx, axis=1)
+    v_hist = jnp.take(v_cache, ring_idx, axis=1)
+    k_ctx = jnp.concatenate([k_hist.astype(k_new.dtype), k_new], axis=1)
+    v_ctx = jnp.concatenate([v_hist.astype(v_new.dtype), v_new], axis=1)
+    abs_kv = jnp.concatenate([hist_abs, pos + jnp.arange(T)])  # (S-1+T,)
+    q_abs = pos + jnp.arange(T)                                # (T,)
+
+    kh = _repeat_kv(k_ctx, groups).astype(jnp.float32)
+    vh = _repeat_kv(v_ctx, groups).astype(jnp.float32)
+    q32 = q.astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bthd,bshd->bhts", q32, kh)
+    mask = ((abs_kv[None, :] >= 0)
+            & (abs_kv[None, :] <= q_abs[:, None])
+            & (abs_kv[None, :] > q_abs[:, None] - S))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, vh).astype(q.dtype)
+
+    # ring write: the last min(S, length) VALID chunk positions (earlier
+    # ones share residues — writing them would make the scatter
+    # order-dependent; padded ones would wrap onto live window slots)
+    L = T if length is None else jnp.asarray(length)
+    n_keep = min(T, S)
+    start = jnp.clip(L - n_keep, 0, T - n_keep)
+    idx = start + jnp.arange(n_keep)                      # chunk-local
+    wslots = jnp.mod(pos + idx, S)                        # unique: contiguous
+    valid = (idx < L)[None, :, None, None]
+    k_sel = jax.lax.dynamic_slice_in_dim(k_new, start, n_keep, axis=1)
+    v_sel = jax.lax.dynamic_slice_in_dim(v_new, start, n_keep, axis=1)
+    k_cache = k_cache.at[:, wslots].set(
+        jnp.where(valid, k_sel.astype(k_cache.dtype),
+                  jnp.take(k_cache, wslots, axis=1)))
+    v_cache = v_cache.at[:, wslots].set(
+        jnp.where(valid, v_sel.astype(v_cache.dtype),
+                  jnp.take(v_cache, wslots, axis=1)))
+    return out, k_cache, v_cache

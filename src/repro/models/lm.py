@@ -143,10 +143,11 @@ def mixer_block_init(arch: ArchConfig, key) -> Params:
 
 
 def mixer_block_apply(arch: ArchConfig, p: Params, h: jax.Array,
-                      state: Optional[Dict] = None):
+                      state: Optional[Dict] = None, prefill_len=None):
     kind = arch.ssm.kind
     hn = _norm(arch, p["norm"], h)
-    out, new_state = mixers.MIXERS[kind][1](p["mixer"], arch, hn, state)
+    out, new_state = mixers.MIXERS[kind][1](p["mixer"], arch, hn, state,
+                                            prefill_len=prefill_len)
     return h + shard_activation(out, "act"), new_state
 
 
@@ -370,15 +371,22 @@ def init_cache(arch: ArchConfig, batch: int, max_seq: int) -> Dict:
 
 def _attn_decode(arch: ArchConfig, lp: Params, h: jax.Array, cache_l: Dict,
                  pos: jax.Array, window: Optional[int]):
+    """One-token decode through an attention layer.
+
+    ``pos`` may be a scalar (whole batch at one position — the training-eval
+    / dry-run shape) or a (B,) vector (continuous-batching serve: every slot
+    at its own position; per-row cache writes, no sequence-sharded path).
+    """
     B = h.shape[0]
     H, K, hd = arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
+    per_slot = jnp.ndim(pos) > 0
     hn = _norm(arch, lp["norm1"], h)
     qkv = hn @ lp["wqkv"].astype(h.dtype)
     q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
     q = q.reshape(B, 1, H, hd)
     k = k.reshape(B, 1, K, hd)
     v = v.reshape(B, 1, K, hd)
-    positions = jnp.full((B, 1), pos)
+    positions = pos[:, None] if per_slot else jnp.full((B, 1), pos)
     if arch.rope_theta > 0:
         q = attn_lib.apply_rope(q, positions, arch.rope_theta)
         k = attn_lib.apply_rope(k, positions, arch.rope_theta)
@@ -390,16 +398,21 @@ def _attn_decode(arch: ArchConfig, lp: Params, h: jax.Array, cache_l: Dict,
     slot = (pos % S) if window else pos
     # ring semantics for windowed layers: all S slots valid once pos >= S
     eff_len = jnp.minimum(pos + 1, S) if window else pos + 1
-    from repro.distributed.sharding import current_mesh
-    mesh = current_mesh()
     seq_axes = None
-    if mesh is not None and "model" in mesh.axis_names:
-        if B % mesh.shape.get("data", 1) == 0 and \
-                S % mesh.shape["model"] == 0:
-            seq_axes = "model"
-        elif S % (mesh.shape.get("data", 1) * mesh.shape["model"]) == 0:
-            seq_axes = ("data", "model")   # batch=1 long-context cells
-    if seq_axes is not None:
+    if not per_slot:
+        from repro.distributed.sharding import current_mesh
+        mesh = current_mesh()
+        if mesh is not None and "model" in mesh.axis_names:
+            if B % mesh.shape.get("data", 1) == 0 and \
+                    S % mesh.shape["model"] == 0:
+                seq_axes = "model"
+            elif S % (mesh.shape.get("data", 1) * mesh.shape["model"]) == 0:
+                seq_axes = ("data", "model")   # batch=1 long-context cells
+    if per_slot:
+        kc, vc = attn_lib.update_kv_cache_rows(cache_l["k"], cache_l["v"],
+                                               k, v, slot)
+        o = attn_lib.decode_attention(q, kc, vc, eff_len, window=None)
+    elif seq_axes is not None:
         # sequence-sharded cache: manual shard_map decode (tiny collectives)
         o, kc, vc = attn_lib.sharded_decode_attention(
             q, cache_l["k"], cache_l["v"], k, v, slot, eff_len, mesh=mesh,
@@ -415,31 +428,54 @@ def _attn_decode(arch: ArchConfig, lp: Params, h: jax.Array, cache_l: Dict,
     return h, {**cache_l, "k": kc, "v": vc}
 
 
-def decode_step(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
-                ) -> Tuple[jax.Array, Dict]:
-    """One-token decode: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+def _attn_prefill(arch: ArchConfig, lp: Params, h: jax.Array, cache_l: Dict,
+                  pos: jax.Array, window: Optional[int], length=None):
+    """T-token chunk prefill through an attention layer: the chunk occupies
+    absolute positions ``pos..pos+T-1``; k/v land in the cache; attention is
+    causal over cache + chunk (full layers) or the ring window (local
+    layers). Right-padded garbage beyond the valid length is masked by
+    causality for every valid query and overwritten by later writes."""
+    B, T, _ = h.shape
+    H, K, hd = arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
+    hn = _norm(arch, lp["norm1"], h)
+    qkv = hn @ lp["wqkv"].astype(h.dtype)
+    q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, K, hd)
+    v = v.reshape(B, T, K, hd)
+    positions = jnp.broadcast_to(pos + jnp.arange(T)[None], (B, T))
+    if arch.rope_theta > 0:
+        q = attn_lib.apply_rope(q, positions, arch.rope_theta)
+        k = attn_lib.apply_rope(k, positions, arch.rope_theta)
+    if window:
+        o, kc, vc = attn_lib.prefill_ring_attention(
+            q, cache_l["k"], cache_l["v"], k, v, pos, length)
+    else:
+        o, kc, vc = attn_lib.prefill_full_attention(
+            q, cache_l["k"], cache_l["v"], k, v, pos,
+            kv_chunk=cache_l["k"].shape[1] if arch.exact_hlo else 1024)
+    o = o.reshape(B, T, H * hd) @ lp["wo"].astype(h.dtype)
+    h = h + o
+    hn = _norm(arch, lp["norm2"], h)
+    h = h + _ffn(arch, lp, hn)
+    return h, {**cache_l, "k": kc, "v": vc}
+
+
+def _walk_cached_layers(arch: ArchConfig, p: Params, cache: Dict,
+                        h: jax.Array, apply_layer) -> Tuple[jax.Array, Dict]:
+    """Thread ``h`` and the per-layer decode cache through the layer plan —
+    scan-over-groups or unrolled — mirroring apply_lm's group structure.
+
+    ``apply_layer(kind, lp, h, cache_l, shared_cache) -> (h, new_cache_l,
+    new_shared_cache)`` is the per-layer body; decode_step (one token) and
+    prefill (a parallel chunk) both plug into this single walker, so the
+    cache-threading topology exists exactly once. Returns ``(h, new_cache)``
+    carrying every cache key except "pos" — position bookkeeping belongs to
+    the caller."""
     plan = layer_plan(arch)
-    p = nn.cast_tree(p, arch.dtype)
-    pos = cache["pos"]
-    h = jnp.take(p["embed"], tokens, axis=0).astype(arch.dtype)
-    shared_p = p.get("shared_attn")
-    shared_caches = cache.get("shared", [])
     shared_idx = 0
 
-    def apply_decode_layer(kind, lp, h, cl, shared_cache):
-        if kind in ("ssm", "ssm_sh"):
-            h, new_state = mixer_block_apply(
-                arch, lp, h[:, None] if h.ndim == 2 else h, cl)
-            new_cl = new_state
-            if kind == "ssm_sh" and shared_p is not None:
-                h, shared_cache = _attn_decode(arch, shared_p, h,
-                                               shared_cache, pos, None)
-            return h, new_cl, shared_cache
-        h, new_cl = _attn_decode(arch, lp, h, cl, pos,
-                                 _window_for(arch, kind))
-        return h, new_cl, shared_cache
-
-    new_cache: Dict[str, Any] = {"pos": pos + 1}
+    new_cache: Dict[str, Any] = {}
     if plan.n_groups > 0 and not arch.scan_layers:
         # unrolled path (exact-HLO measurement mode)
         tm = jax.tree_util.tree_map
@@ -451,7 +487,7 @@ def decode_step(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
             sc = cache["shared"][gi] if plan.shared_attn else None
             new_gc = []
             for i, kind in enumerate(plan.group):
-                h, ncl, sc = apply_decode_layer(kind, gp[i], h, gc[i], sc)
+                h, ncl, sc = apply_layer(kind, gp[i], h, gc[i], sc)
                 new_gc.append(ncl)
             if plan.shared_attn:
                 new_shared_list[gi] = sc
@@ -469,7 +505,7 @@ def decode_step(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
                 (gp, gc), sc = xs, None
             new_gc = []
             for i, kind in enumerate(plan.group):
-                h, ncl, sc = apply_decode_layer(kind, gp[i], h, gc[i], sc)
+                h, ncl, sc = apply_layer(kind, gp[i], h, gc[i], sc)
                 new_gc.append(ncl)
             return h, (new_gc, sc) if plan.shared_attn else new_gc
 
@@ -494,7 +530,7 @@ def decode_step(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
     for kind, lp, cl in zip(plan.tail, p["tail"], cache["tail"]):
         sc = (cache["shared"][shared_idx]
               if (kind == "ssm_sh" and plan.shared_attn) else None)
-        h, ncl, sc = apply_decode_layer(kind, lp, h, cl, sc)
+        h, ncl, sc = apply_layer(kind, lp, h, cl, sc)
         if kind == "ssm_sh" and plan.shared_attn:
             new_cache.setdefault("shared", list(cache["shared"]))[shared_idx] = sc
             shared_idx += 1
@@ -502,6 +538,79 @@ def decode_step(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
     new_cache["tail"] = new_tail
     if plan.shared_attn and "shared" not in new_cache:
         new_cache["shared"] = cache["shared"]
+    return h, new_cache
 
+
+def decode_step(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
+                ) -> Tuple[jax.Array, Dict]:
+    """One-token decode: tokens (B, 1) -> (logits (B, 1, V), new cache).
+
+    ``cache["pos"]`` may be a scalar (the whole batch at one position — the
+    training-eval / dry-run shape) or a (B,) vector (continuous-batching
+    serve: every slot at its own position)."""
+    p = nn.cast_tree(p, arch.dtype)
+    pos = cache["pos"]
+    h = jnp.take(p["embed"], tokens, axis=0).astype(arch.dtype)
+    shared_p = p.get("shared_attn")
+
+    def apply_decode_layer(kind, lp, h, cl, shared_cache):
+        if kind in ("ssm", "ssm_sh"):
+            h, new_cl = mixer_block_apply(
+                arch, lp, h[:, None] if h.ndim == 2 else h, cl)
+            if kind == "ssm_sh" and shared_p is not None:
+                h, shared_cache = _attn_decode(arch, shared_p, h,
+                                               shared_cache, pos, None)
+            return h, new_cl, shared_cache
+        h, new_cl = _attn_decode(arch, lp, h, cl, pos,
+                                 _window_for(arch, kind))
+        return h, new_cl, shared_cache
+
+    h, new_cache = _walk_cached_layers(arch, p, cache, h, apply_decode_layer)
+    new_cache["pos"] = pos + 1
+    h = _norm(arch, p["final_norm"], h)
+    return logits_fn(arch, p, h), new_cache
+
+
+def prefill(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
+            length=None) -> Tuple[jax.Array, Dict]:
+    """PARALLEL chunk prefill: tokens (B, T) at absolute positions
+    ``cache["pos"]..pos+T-1`` -> (logits (B, T, V), new cache at pos+length).
+
+    The whole chunk lowers through the full-sequence parallel paths — the
+    DEER/ELK solver cascade for lrc mixers (sequence-sharded when
+    ``arch.ssm.seq_shard`` and a mesh is active), associative selective
+    scans for mamba mixers, causal flash attention against the cache for
+    attention layers — never a length-T sequential scan. This is the
+    scan-for-prefill half of the serving engine; decode_step is the
+    O(D)-state recurrence half.
+
+    ``length`` (scalar, <= T, default T) is the VALID prompt length inside a
+    right-padded chunk: recurrent states are taken at ``length - 1``, and
+    ``new_cache["pos"] = pos + length``, so padding never leaks into the
+    carried state (attention garbage beyond ``length`` is masked by
+    causality and overwritten by later writes at the same positions).
+    Requires a scalar ``cache["pos"]`` (prefill runs per admitted request —
+    fragments are scattered into the batched serve cache afterwards)."""
+    p = nn.cast_tree(p, arch.dtype)
+    pos = cache["pos"]
+    T = tokens.shape[1]
+    L = T if length is None else length
+    h = jnp.take(p["embed"], tokens, axis=0).astype(arch.dtype)
+    shared_p = p.get("shared_attn")
+
+    def apply_prefill_layer(kind, lp, h, cl, shared_cache):
+        if kind in ("ssm", "ssm_sh"):
+            h, new_cl = mixer_block_apply(arch, lp, h, cl, prefill_len=L)
+            if kind == "ssm_sh" and shared_p is not None:
+                h, shared_cache = _attn_prefill(arch, shared_p, h,
+                                                shared_cache, pos, None,
+                                                length=L)
+            return h, new_cl, shared_cache
+        h, new_cl = _attn_prefill(arch, lp, h, cl, pos,
+                                  _window_for(arch, kind), length=L)
+        return h, new_cl, shared_cache
+
+    h, new_cache = _walk_cached_layers(arch, p, cache, h, apply_prefill_layer)
+    new_cache["pos"] = pos + L
     h = _norm(arch, p["final_norm"], h)
     return logits_fn(arch, p, h), new_cache

@@ -13,6 +13,21 @@ All recurrences run through chunked_diag_scan: O(chunk * D) workspace
 
 Decode: every mixer carries O(D) recurrent state — no KV cache — which is
 why ssm/hybrid cells are the only ones allowed at long_500k.
+
+Three execution modes per mixer, dispatched on (state, T):
+
+  * ``state is None``            — full-sequence training forward (parallel
+                                   scan / DEER solve, no state returned);
+  * ``state`` given, ``T == 1``  — one-token decode (serve tick): O(D)
+                                   state update, no scan at all;
+  * ``state`` given, ``T > 1``   — PARALLEL PREFILL (serve admission): the
+                                   same parallel solve as training but
+                                   seeded with the carried state, returning
+                                   the state at position ``prefill_len - 1``
+                                   (the valid-prompt boundary inside a
+                                   padded chunk). This is the scan-for-
+                                   prefill / recurrence-for-decode split the
+                                   serving engine (repro.serve) is built on.
 """
 from __future__ import annotations
 
@@ -53,6 +68,31 @@ def conv_step(w: jax.Array, b: jax.Array, buf: jax.Array, x_t: jax.Array
     return window[:, 1:], y
 
 
+def causal_conv1d_prefill(w: jax.Array, b: jax.Array, buf: jax.Array,
+                          x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv with carried history (chunked prefill).
+
+    ``buf``: (B, W-1, C) raw inputs preceding this chunk; ``x``: (B, T, C).
+    Returns ``(out, xp)`` where ``out`` is the (B, T, C) conv output and
+    ``xp`` the (B, T+W-1, C) history-prepended input stream — the caller
+    slices the next chunk's buffer out of it at the valid-length boundary
+    (``xp[:, L : L+W-1]`` after ``L`` valid tokens).
+    """
+    W = w.shape[0]
+    xp = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + b, xp
+
+
+def _state_at(traj: jax.Array, length) -> jax.Array:
+    """State at position ``length - 1`` of a (B, T, ...) state trajectory
+    (the last VALID position of a right-padded prefill chunk)."""
+    return jax.lax.dynamic_index_in_dim(traj, length - 1, axis=1,
+                                        keepdims=False)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-1 mixer
 # ---------------------------------------------------------------------------
@@ -84,12 +124,17 @@ def mamba1_init(arch: ArchConfig, key) -> Params:
 
 
 def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
-                 state: Optional[Dict] = None):
+                 state: Optional[Dict] = None, prefill_len=None):
     """h: (B, T, d). Returns (out, new_state). state holds (ssm (B,di,N),
-    conv buffer (B,W-1,di)) for decode; None => full-sequence mode."""
+    conv buffer (B,W-1,di)) for decode/prefill; None => full-sequence mode.
+    With state and T > 1 the call is a PREFILL: the selective scan runs in
+    parallel from the carried state and ``new_state`` is taken at position
+    ``prefill_len - 1`` (default T)."""
     B, T, _ = h.shape
     d_inner, dt_rank, N, W = mamba1_dims(arch)
     cdt = arch.dtype
+    prefill = state is not None and T > 1
+    L = T if prefill_len is None else prefill_len
 
     xz = nn.dense(p["in_proj"], h)
     x, z = jnp.split(xz, 2, axis=-1)
@@ -97,9 +142,14 @@ def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
     if state is None:
         x = causal_conv1d(p["conv_w"], p["conv_b"], x)
         conv_buf_new = None
+    elif prefill:
+        x, xp = causal_conv1d_prefill(p["conv_w"], p["conv_b"],
+                                      state["conv"], x)
+        conv_buf_new = jax.lax.dynamic_slice_in_dim(
+            xp, L, W - 1, axis=1).astype(state["conv"].dtype)
     else:
-        conv_buf, ssm_prev = state["conv"], state["ssm"]
-        conv_buf_new, xs = conv_step(p["conv_w"], p["conv_b"], conv_buf, x[:, 0])
+        conv_buf_new, xs = conv_step(p["conv_w"], p["conv_b"], state["conv"],
+                                     x[:, 0])
         x = xs[:, None]
     x = jax.nn.silu(x)
 
@@ -111,12 +161,17 @@ def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
     lam = jnp.exp(delta[..., None].astype(jnp.float32) * A)    # (B,T,di,N)
     beta = (delta[..., None] * Bc[..., None, :] * x[..., None]).astype(jnp.float32)
 
-    if state is None:
-        # (B,T,di,N) scan over T, vmapped over batch
+    if state is None or prefill:
+        # (B,T,di,N) scan over T, vmapped over batch; prefill seeds the scan
+        # with the carried state (x0) instead of zero
         chunk = 0 if arch.exact_hlo else arch.ssm.chunk
-        scan = lambda l, b: chunked_diag_scan(l, b, None, chunk=chunk)
-        hs = jax.vmap(scan)(lam, beta)                          # (B,T,di,N)
-        ssm_new = None
+        scan = lambda l, b, x0: chunked_diag_scan(l, b, x0, chunk=chunk)
+        if state is None:
+            hs = jax.vmap(lambda l, b: scan(l, b, None))(lam, beta)
+            ssm_new = None
+        else:
+            hs = jax.vmap(scan)(lam, beta, state["ssm"])        # (B,T,di,N)
+            ssm_new = _state_at(hs, L)
     else:
         hs = lam[:, 0] * state["ssm"] + beta[:, 0]              # (B,di,N)
         ssm_new = hs
@@ -168,10 +223,15 @@ def mamba2_init(arch: ArchConfig, key) -> Params:
 
 
 def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
-                 state: Optional[Dict] = None):
+                 state: Optional[Dict] = None, prefill_len=None):
+    """SSD-style mixer. Same three-mode dispatch as ``mamba1_apply``:
+    full-sequence (state None), one-token decode (T == 1), or parallel
+    prefill from the carried state (T > 1)."""
     B, T, _ = h.shape
     d_inner, H, P, N, W = mamba2_dims(arch)
     cdt = arch.dtype
+    prefill = state is not None and T > 1
+    L = T if prefill_len is None else prefill_len
 
     proj = nn.dense(p["in_proj"], h)
     x, z, Bc, Cc, dt = jnp.split(
@@ -181,6 +241,11 @@ def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
     if state is None:
         xbc = causal_conv1d(p["conv_w"], p["conv_b"], xbc)
         conv_new = None
+    elif prefill:
+        xbc, xp = causal_conv1d_prefill(p["conv_w"], p["conv_b"],
+                                        state["conv"], xbc)
+        conv_new = jax.lax.dynamic_slice_in_dim(
+            xp, L, W - 1, axis=1).astype(state["conv"].dtype)
     else:
         conv_new, xs = conv_step(p["conv_w"], p["conv_b"], state["conv"],
                                  xbc[:, 0])
@@ -198,11 +263,16 @@ def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
             * xh.astype(jnp.float32)[..., None])                    # (B,T,H,P,N)
     lam_full = lam[..., None, None]
 
-    if state is None:
+    if state is None or prefill:
         chunk = 0 if arch.exact_hlo else arch.ssm.chunk
-        scan = lambda l, b: chunked_diag_scan(l, b, None, chunk=chunk)
-        hs = jax.vmap(scan)(jnp.broadcast_to(lam_full, beta.shape), beta)
-        ssm_new = None
+        scan = lambda l, b, x0: chunked_diag_scan(l, b, x0, chunk=chunk)
+        lam_b = jnp.broadcast_to(lam_full, beta.shape)
+        if state is None:
+            hs = jax.vmap(lambda l, b: scan(l, b, None))(lam_b, beta)
+            ssm_new = None
+        else:
+            hs = jax.vmap(scan)(lam_b, beta, state["ssm"])
+            ssm_new = _state_at(hs, L)
     else:
         hs = lam_full[:, 0] * state["ssm"] + beta[:, 0]
         ssm_new = hs
@@ -269,10 +339,15 @@ def _lrc_mixer_step(p: Params, x, s_u, eps_u):
 
 
 def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
-                    state: Optional[Dict] = None):
+                    state: Optional[Dict] = None, prefill_len=None):
+    """The paper's nonlinear mixer. Full-sequence and prefill modes run the
+    DEER Newton solve (sequence-parallel when ``arch.ssm.seq_shard``);
+    decode (T == 1) is ONE exact step of the recurrence — the O(D)
+    state-cache property the serving engine banks on."""
     B, T, _ = h.shape
     d_inner = arch.ssm.expand * arch.d_model
     cdt = arch.dtype
+    prefill = state is not None and T > 1
 
     xz = nn.dense(p["in_proj"], h)
     u, z = jnp.split(xz, 2, axis=-1)
@@ -281,7 +356,7 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
     s_u = jax.nn.sigmoid(u @ p["a_u"] + p["b_u"]).astype(jnp.float32)
     eps_u = (u @ p["w_u"] + p["v_u"]).astype(jnp.float32)
 
-    if state is None:
+    if state is None or prefill:
         cell_keys = ("a_x", "b_x", "g_max_x", "k_max_x", "g_max_u",
                      "k_max_u", "w_x", "v_x", "g_leak", "e_leak")
         cell_p = {k: p[k].astype(jnp.float32) for k in cell_keys}
@@ -290,9 +365,12 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
                         grad="implicit",
                         scan_chunk=0 if arch.exact_hlo else arch.ssm.chunk,
                         unroll=arch.exact_hlo)
+        x0 = None if state is None else state["ssm"]
         states = _lrc_solve_trajectory(arch, step, cell_p, s_u, eps_u,
-                                       d_inner, dc)          # (B,T,di)
-        ssm_new = None
+                                       d_inner, dc, x0=x0)   # (B,T,di)
+        ssm_new = (None if state is None
+                   else _state_at(states, T if prefill_len is None
+                                  else prefill_len))
     else:
         states = _lrc_mixer_step(p, state["ssm"], s_u[:, 0], eps_u[:, 0])
         ssm_new = states
@@ -304,8 +382,10 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
 
 
 def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
-                          d_inner: int, dc: DeerConfig) -> jax.Array:
+                          d_inner: int, dc: DeerConfig,
+                          x0: Optional[jax.Array] = None) -> jax.Array:
     """DEER solve of the lrc-mixer trajectory. s_u/eps_u: (B, T, di).
+    ``x0``: (B, di) initial state (chunked-prefill carry) or None for zero.
 
     With ``arch.ssm.seq_shard`` and an active mesh carrying a "model" axis
     (the ring-attention convention for the time dimension), the Newton solve
@@ -336,17 +416,19 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
                 if len(wide) > 1 and T % n_seq_shards(mesh, wide) == 0:
                     seq_axes = wide
             if T % n_seq_shards(mesh, seq_axes) == 0:
-                x0 = jnp.zeros((B, d_inner), jnp.float32)
+                xb = (jnp.zeros((B, d_inner), jnp.float32) if x0 is None
+                      else x0.astype(jnp.float32))
                 states, _ = sharded_deer_solve(
                     step, (jnp.swapaxes(s_u, 0, 1),
                            jnp.swapaxes(eps_u, 0, 1)),
-                    x0, T, dc, mesh=mesh, seq_axis=seq_axes, params=cell_p,
+                    xb, T, dc, mesh=mesh, seq_axis=seq_axes, params=cell_p,
                     batch_axes=ba)
                 return jnp.swapaxes(states, 0, 1)
-    x0 = jnp.zeros((d_inner,), jnp.float32)
-    solve = lambda su, eu: deer_solve(step, (su, eu), x0, T, dc,
-                                      params=cell_p)[0]
-    return jax.vmap(solve)(s_u, eps_u)
+    xb = (jnp.zeros((B, d_inner), jnp.float32) if x0 is None
+          else x0.astype(jnp.float32))
+    solve = lambda su, eu, xi: deer_solve(step, (su, eu), xi, T, dc,
+                                          params=cell_p)[0]
+    return jax.vmap(solve)(s_u, eps_u, xb)
 
 
 def lrc_mixer_init_state(arch: ArchConfig, batch: int) -> Dict:

@@ -29,6 +29,50 @@ _DTYPE_BYTES = {
     "c128": 16,
 }
 
+
+# ---------------------------------------------------------------------------
+# jaxpr-level sequential-depth introspection
+# ---------------------------------------------------------------------------
+
+def sequential_loop_lengths(fn, *args) -> set:
+    """Trip counts of every ``lax.scan`` in ``fn``'s jaxpr, recursively
+    (scan bodies, pjit calls, cond branches, custom-vjp wrappers, ...).
+    Unbounded ``lax.while_loop``s are recorded as ``-1``.
+
+    This is the parallel-prefill acceptance check, asserted at the jaxpr
+    level where loop trip counts are structural: a token-by-token prefill
+    would show up as a scan of length T, while the parallel solver paths
+    lower to associative scans (log-depth slices, no scan primitive) plus
+    short carries — Newton iterations, scan-chunk carries, layer groups —
+    whose lengths are all independent of T.
+    """
+    import jax
+
+    out: set = set()
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                out.add(int(eqn.params["length"]))
+            elif eqn.primitive.name == "while":
+                out.add(-1)
+            for v in eqn.params.values():
+                for sub in _jaxprs_in(v):
+                    walk(sub)
+
+    def _jaxprs_in(v):
+        core = jax.core
+        if isinstance(v, core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, core.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from _jaxprs_in(item)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return out
+
 _COLLECTIVE_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
     r"(\((?:[^)]*)\)|[\w\[\],{}]+)\s*"

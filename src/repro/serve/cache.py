@@ -1,0 +1,109 @@
+"""Paged per-sequence state cache for continuous-batching serving.
+
+The resident cache is ONE device-resident batched model cache (the pytree
+``model.init_cache`` builds) whose batch dimension is the SLOT axis, plus a
+per-slot position vector ``cache["pos"]: (n_slots,) int32`` — the shape
+``models/lm.decode_step`` understands as "every slot at its own sequence
+position". For SSM-family layers a slot is O(D) floats of recurrent state
+(the paper's no-KV-cache property); attention layers keep their (max_seq,
+K, hd) rings per slot.
+
+Slot lifecycle (host-side bookkeeping, device-side data):
+
+    alloc() -> slot      admission: claim a free slot
+    write_slot(slot, f)  scatter a freshly-prefilled batch=1 cache fragment
+                         into the slot row (jit-compiled, donated — the
+                         resident cache never round-trips to host)
+    read_slot(slot)      gather a slot back out as a batch=1 fragment
+    free(slot)           retirement/eviction: recycle (no data movement —
+                         the next write_slot overwrites every row)
+
+Fragments come from ``models/lm.prefill`` (scalar-pos, batch=1); the
+scatter maps their scalar ``pos`` into the slot's entry of the position
+vector. Batch-axis location is derived from the tree path: leaves under
+``groups`` stack layer-groups ahead of the batch axis (axis 1), everything
+else is batch-leading (axis 0).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import _path_str
+from repro.models import Model
+
+
+def batch_axis_for(path_str: str) -> int:
+    """Slot (batch) axis of a cache leaf: 1 under the stacked layer-group
+    prefix, 0 everywhere else (tail / shared / mixer states)."""
+    return 1 if path_str.startswith("groups") else 0
+
+
+def _scatter(resident: Dict, fragment: Dict, slot: jax.Array) -> Dict:
+    """Write a batch=1 fragment into row ``slot`` of the resident cache."""
+    def leaf(path, res, frag):
+        ps = _path_str(path)
+        if ps.endswith("pos"):
+            return res.at[slot].set(frag.astype(res.dtype))
+        ax = batch_axis_for(ps)
+        return jax.lax.dynamic_update_slice_in_dim(
+            res, frag.astype(res.dtype), slot, axis=ax)
+    return jax.tree_util.tree_map_with_path(leaf, resident, fragment)
+
+
+def _gather(resident: Dict, slot: jax.Array) -> Dict:
+    """Read row ``slot`` back out as a batch=1 fragment (scalar pos)."""
+    def leaf(path, res):
+        ps = _path_str(path)
+        if ps.endswith("pos"):
+            return res[slot]
+        ax = batch_axis_for(ps)
+        return jax.lax.dynamic_slice_in_dim(res, slot, 1, axis=ax)
+    return jax.tree_util.tree_map_with_path(leaf, resident)
+
+
+class StateCache:
+    """Device-resident slot cache + host-side free-list admission state.
+
+    ``n_free``/``alloc``/``free`` are the host admission queue's view;
+    ``write_slot``/``read_slot`` move slot rows on device (one jit-compiled
+    scatter/gather each, slot index traced so every slot shares a compile).
+    """
+
+    def __init__(self, model: Model, params, n_slots: int, max_seq: int):
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        cache = model.init_cache(params, n_slots, max_seq)
+        cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.cache: Dict[str, Any] = cache
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._scatter = jax.jit(_scatter, donate_argnums=(0,))
+        self._gather = jax.jit(_gather)
+
+    @property
+    def n_free(self) -> int:
+        """Number of unclaimed slots."""
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a free slot (None when the slot budget is exhausted)."""
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        """Recycle a slot. Pure bookkeeping: slot data is left in place and
+        fully overwritten by the next ``write_slot`` — O(D) states make
+        eviction a free-list operation, not a cache transfer."""
+        assert slot not in self._free, f"double free of slot {slot}"
+        self._free.append(slot)
+
+    def write_slot(self, slot: int, fragment: Dict) -> None:
+        """Scatter a batch=1 prefill fragment into ``slot`` (device-side)."""
+        self.cache = self._scatter(self.cache, fragment,
+                                   jnp.asarray(slot, jnp.int32))
+
+    def read_slot(self, slot: int) -> Dict:
+        """Gather ``slot`` as a batch=1 fragment (scalar pos) — the inverse
+        of ``write_slot``; used by tests and state migration."""
+        return self._gather(self.cache, jnp.asarray(slot, jnp.int32))

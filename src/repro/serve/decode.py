@@ -1,0 +1,39 @@
+"""The serving engine's batched single-step decode.
+
+ONE jit-compiled greedy decode tick for all slots, built through the
+train-engine step factory (``train/step.make_step(model, "serve")``) so the
+serve step is the same object the trainer's eval/serve wiring uses. With a
+mesh, the jit wiring (parameter / cache / token shardings, cache donation)
+comes from ``train/step.jit_step`` — sharding rules for the engine live in
+``train/step.py`` + ``distributed/sharding.py`` and nowhere else. Without a
+mesh it is a plain ``jax.jit`` with the cache donated, which keeps the
+resident state cache device-side across ticks.
+
+The decode step consumes the continuous-batching cache layout from
+``serve/cache.py`` (per-slot ``pos`` vector — ``models/lm.decode_step``
+dispatches to per-row cache writes on it).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.models import Model
+from repro.train.step import jit_step, make_step
+
+
+def make_decode_step(model: Model, params, cache_like, *,
+                     mesh=None, batch_size: int = 0) -> Callable:
+    """Build the jitted decode tick: ``(params, tokens (B,1), cache) ->
+    (next_tok (B,1), logits (B,1,V), new_cache)``.
+
+    ``cache_like`` fixes the cache pytree structure (and, under a mesh, its
+    shardings via ``train/step.train_state_specs``-style rules in
+    ``jit_step``). The cache argument is donated in both paths: the engine
+    threads one device-resident cache through every tick.
+    """
+    if mesh is not None:
+        return jit_step(model, "serve", mesh, params_like=params,
+                        cache_like=cache_like, batch_size=batch_size)
+    return jax.jit(make_step(model, "serve"), donate_argnums=(2,))

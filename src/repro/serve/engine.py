@@ -1,115 +1,234 @@
-"""Batched serving engine: continuous-batching decode loop over a shared
-KV/state cache.
+"""Continuous-batching stateful serving engine.
 
-Production shape: requests arrive with prompts; the engine packs them into
-a fixed batch of decode slots, prefills each prompt into its slot, then
-steps all slots together (one serve_step per token). Finished slots (EOS or
-max_tokens) are immediately recycled for queued requests — continuous
-batching. SSM-family models hold O(D) state per slot, so slot recycling is a
-cache reset, not an eviction decision.
+Requests arrive with prompts on a host admission queue; the engine owns a
+fixed budget of decode SLOTS (``serve/cache.py``) and interleaves two
+compute shapes:
 
-This runs for real at reduced scale on CPU (tests/test_serve.py) and lowers
-at production scale via the dry-run decode cells.
+  * **parallel prefill** (admission): the prompt runs through
+    ``model.prefill`` in fixed-size chunks — each chunk is ONE parallel
+    solve (DEER/ELK cascade for lrc mixers, associative selective scans for
+    mamba, flash attention for attention layers; sequence-sharded when the
+    model config asks for it), never a token-by-token loop — and the
+    resulting O(D)-per-layer state fragment is scattered into a free slot.
+  * **batched decode** (``step()``): one jit-compiled tick
+    (``serve/decode.py``) advances EVERY active slot by one token,
+    regardless of how far apart their sequence positions are (per-slot
+    ``pos`` vector).
+
+Finished slots (EOS / token budget) are recycled immediately — continuous
+batching. Eviction (``evict``) is the state-cache counterpart of KV-cache
+preemption: because a slot is O(D) re-derivable state, evicting costs ZERO
+cache bytes — the request just re-queues with its generated tokens folded
+into the prompt and is re-prefilled (in parallel) on re-admission.
+
+Tokens stream to the caller through per-request ``on_token`` callbacks,
+invoked in generation order within a request and in slot order within a
+tick.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serve.cache import StateCache
+from repro.serve.decode import make_decode_step
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: prompt in, streamed greedy tokens out.
+
+    ``on_token(uid, token, done)`` fires once per generated token, in
+    order; ``done`` is True exactly once (the final token). ``out_tokens``
+    accumulates the same tokens for callers that prefer polling."""
     uid: int
     prompt: np.ndarray               # (T,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    on_token: Optional[Callable[[int, int, bool], None]] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class ServeEngine:
+    """Continuous-batching scheduler over a fixed slot budget.
+
+    ``batch_slots`` bounds concurrent decode streams; ``prefill_chunk`` is
+    the admission chunk length (prompts are right-padded to a multiple, so
+    every chunk shares one compiled prefill); ``mesh`` routes the decode
+    tick through ``train/step.jit_step``'s sharded serve wiring."""
+
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_seq: int = 256):
+                 max_seq: int = 256, prefill_chunk: int = 32, mesh=None):
+        if model.prefill is None:
+            raise ValueError(f"model family {model.arch.family!r} has no "
+                             "chunked-prefill implementation — the serve "
+                             "engine requires Model.prefill")
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * batch_slots
-        self.cache = model.init_cache(params, batch_slots, max_seq)
-        self._decode = jax.jit(model.decode_step)
-        self._slot_pos = np.zeros(batch_slots, np.int32)
+        self.finished: deque = deque(maxlen=65536)
+        self.cache = StateCache(model, params, batch_slots, max_seq)
+        self._decode = make_decode_step(model, params, self.cache.cache,
+                                        mesh=mesh, batch_size=batch_slots)
+        self._prefill = jax.jit(
+            lambda p, t, c, l: model.prefill(p, t, c, l))
+        self._last_tok = np.zeros((batch_slots, 1), np.int32)
+        # per-token wall-clock samples: "prefill" covers each request's
+        # first token (admission cost), "decode" one batched tick. Bounded
+        # (and `finished` too) so a long-running server does not grow
+        # host memory linearly with tokens served.
+        self.token_lat: Dict[str, deque] = {
+            "prefill": deque(maxlen=4096), "decode": deque(maxlen=4096)}
 
-    def submit(self, req: Request):
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Queue a request (FIFO). Validates it fits the slot geometry,
+        INCLUDING prefill-chunk padding: the worst-case prefill feed is the
+        prompt plus all-but-one generated token (an eviction just before
+        completion), rounded up to a chunk multiple — a padded chunk
+        writing past ``max_seq`` would clamp its dynamic-slice start and
+        corrupt valid cache entries, so it is rejected here instead."""
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.uid}: empty prompt (prefill "
+                             "needs at least one token to condition on)")
+        need = len(req.prompt) + req.max_new_tokens
+        C = self.prefill_chunk
+        worst_feed = len(req.prompt) + max(req.max_new_tokens - 1, 0)
+        worst_padded = -(-worst_feed // C) * C
+        if need > self.max_seq or worst_padded > self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) needs "
+                f"{max(need, worst_padded)} cache positions (incl. "
+                f"prefill_chunk={C} padding) but max_seq={self.max_seq}; "
+                f"raise max_seq or lower prefill_chunk")
         self.queue.append(req)
 
-    def _prefill_slot(self, slot: int, req: Request):
-        """Prefill by stepping the prompt token-by-token into slot state.
+    def _prefill_request(self, req: Request):
+        """Run the request's feed (prompt + any already-generated tokens —
+        the eviction/re-admission path) through chunked parallel prefill.
+        Returns (batch=1 cache fragment, first generated token)."""
+        feed = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.out_tokens, np.int32)])
+        L = len(feed)
+        C = self.prefill_chunk
+        n_chunks = max(1, -(-L // C))
+        padded = np.zeros(n_chunks * C, np.int32)
+        padded[:L] = feed
+        frag = self.model.init_cache(self.params, 1, self.max_seq)
+        logits = valid = None
+        for ci in range(n_chunks):
+            chunk = jnp.asarray(padded[None, ci * C:(ci + 1) * C])
+            valid = min(C, L - ci * C)
+            logits, frag = self._prefill(self.params, chunk, frag,
+                                         jnp.asarray(valid, jnp.int32))
+        first_tok = int(jnp.argmax(logits[0, valid - 1]))
+        return frag, first_tok
 
-        Single-cache-per-batch design: caches are batched, so per-slot
-        prefill steps the whole batch with masked writes. At production
-        scale this is the dedicated prefill graph (dry-run prefill cells);
-        here we reuse the decode graph for simplicity and exactness.
-        """
-        for t in range(len(req.prompt) - 1):
-            tok = np.zeros((self.slots, 1), np.int32)
-            tok[slot, 0] = req.prompt[t]
-            _, self.cache = self._decode(self.params, jnp.asarray(tok),
-                                         self.cache)
+    def _emit(self, req: Request, tok: int) -> bool:
+        """Record one generated token; fire the stream callback; returns
+        (and latches) the request's done state."""
+        req.out_tokens.append(tok)
+        done = (len(req.out_tokens) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id))
+        req.done = done
+        if req.on_token is not None:
+            req.on_token(req.uid, tok, done)
+        if done:
+            self.finished.append(req)
+        return done
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue: prefill + scatter + first token."""
+        while self.queue and self.cache.n_free > 0:
+            req = self.queue.popleft()
+            slot = self.cache.alloc()
+            t0 = time.perf_counter()
+            frag, first_tok = self._prefill_request(req)
+            self.cache.write_slot(slot, frag)
+            self.token_lat["prefill"].append(time.perf_counter() - t0)
+            if self._emit(req, first_tok):
+                self.cache.free(slot)          # one-token request
+            else:
+                self.active[slot] = req
+                self._last_tok[slot, 0] = first_tok
+
+    # -- the tick -----------------------------------------------------------
 
     def step(self) -> int:
-        """One engine tick: schedule, decode one token for every active slot.
-        Returns number of active slots."""
-        # schedule waiting requests into free slots
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
-                self._prefill_slot(s, req)
-                self.active[s] = req
-                self._slot_pos[s] = len(req.prompt) - 1
-
-        if not any(self.active):
+        """One engine tick: admit waiting requests, then one batched decode
+        advancing every active slot. Returns the number of slots that were
+        active this tick (0 = fully drained)."""
+        self._admit()
+        act = [s for s, r in enumerate(self.active) if r is not None]
+        if not act:
             return 0
-
-        tok = np.zeros((self.slots, 1), np.int32)
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            if req.out_tokens:
-                tok[s, 0] = req.out_tokens[-1]
+        t0 = time.perf_counter()
+        next_tok, _, new_cache = self._decode(
+            self.params, jnp.asarray(self._last_tok), self.cache.cache)
+        self.cache.cache = new_cache
+        nxt = np.asarray(next_tok)
+        wall = time.perf_counter() - t0
+        for s in act:
+            req = self.active[s]
+            tok = int(nxt[s, 0])
+            self.token_lat["decode"].append(wall)
+            if self._emit(req, tok):
+                self.active[s] = None          # recycle: continuous batching
+                self.cache.free(s)
             else:
-                tok[s, 0] = req.prompt[-1]
-        logits, self.cache = self._decode(self.params, jnp.asarray(tok),
-                                          self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        n_active = 0
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            req.out_tokens.append(int(nxt[s]))
-            if (len(req.out_tokens) >= req.max_new_tokens or
-                    (req.eos_id is not None and int(nxt[s]) == req.eos_id)):
-                req.done = True
-                self.active[s] = None     # recycle slot (continuous batching)
-            else:
-                n_active += 1
-        return n_active
+                self._last_tok[s, 0] = tok
+        return len(act)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen: set = set()
+    def evict(self, slot: int) -> Request:
+        """Preempt ``slot``: the in-flight request re-queues at the FRONT of
+        the admission queue with its generated tokens folded into the
+        prompt feed. No cache bytes move — the O(D) state is re-derived by
+        parallel prefill on re-admission (the state-cache eviction story;
+        contrast with KV-cache preemption, which must either transfer the
+        whole ring or replay the sequence)."""
+        req = self.active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not active")
+        self.active[slot] = None
+        self.cache.free(slot)
+        self.queue.appendleft(req)
+        return req
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> "deque[Request]":
+        """Tick until the queue and all slots are empty; returns the
+        finished-requests deque (completion order, bounded retention)."""
         for _ in range(max_ticks):
             self.step()
-            for req in list(self.queue) + self.active:
-                pass
-            if not self.queue and not any(self.active):
+            if not self.queue and not any(r is not None for r in self.active):
                 break
-        return finished
+        return self.finished
+
+    # -- stats --------------------------------------------------------------
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p99 per-token wall-clock latency over decode ticks (and p50
+        admission latency), in seconds — the benchmark's record format."""
+        out: Dict[str, float] = {}
+        if self.token_lat["decode"]:
+            d = np.asarray(list(self.token_lat["decode"]))
+            out["decode_p50_s"] = float(np.percentile(d, 50))
+            out["decode_p99_s"] = float(np.percentile(d, 99))
+        if self.token_lat["prefill"]:
+            p = np.asarray(list(self.token_lat["prefill"]))
+            out["prefill_p50_s"] = float(np.percentile(p, 50))
+        return out

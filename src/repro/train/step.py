@@ -68,6 +68,9 @@ def _check_microbatch(B: int, tcfg: TrainConfig, where: str = "batch"):
 
 
 def _compute_grads(model: Model, tcfg: TrainConfig, params, batch):
+    """value_and_grad of the model loss, with lax.scan gradient
+    accumulation over microbatches when ``tcfg.microbatch`` divides the
+    (per-device) batch — shared by both reduction modes."""
     def loss_fn(p, b):
         return model.loss(p, b)
 
@@ -105,6 +108,7 @@ def _squeeze_pod(residual):
 
 
 def _unsqueeze_pod(residual):
+    """Inverse of ``_squeeze_pod``: restore the leading pod dim."""
     return jax.tree_util.tree_map(lambda r: r[None], residual)
 
 
@@ -168,6 +172,8 @@ def make_step(model: Model, mode: str, tcfg: Optional[TrainConfig] = None,
 
 def _make_gspmd_train_step(model: Model, tcfg: TrainConfig,
                            mesh: Optional[Mesh]):
+    """The GSPMD-owned reduction path: XLA inserts the DP all-reduce;
+    optional int8 wire-format harness over the pod axis."""
     def train_step(state: TrainState, batch):
         loss, grads = _compute_grads(model, tcfg, state.params, batch)
         new_residual = state.residual
@@ -347,25 +353,31 @@ def jit_step(model: Model, mode: str, mesh: Mesh, *,
 def make_train_step(model: Model, tcfg: TrainConfig,
                     mesh: Optional[Mesh] = None
                     ) -> Callable[[TrainState, Dict], Tuple]:
+    """Legacy alias: ``make_step(model, "train", ...)``."""
     return make_step(model, "train", tcfg, mesh)
 
 
 def make_eval_step(model: Model):
+    """Legacy alias: ``make_step(model, "eval")``."""
     return make_step(model, "eval")
 
 
 def make_serve_step(model: Model):
+    """Legacy alias: ``make_step(model, "serve")`` — the greedy decode
+    tick the serving engine (serve/decode.py) jit-wires."""
     return make_step(model, "serve")
 
 
 def jit_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                    state_like: TrainState, batch_like,
                    donate: bool = True):
+    """Legacy alias: ``jit_step(model, "train", ...)``."""
     return jit_step(model, "train", mesh, tcfg=tcfg, state_like=state_like,
                     batch_like=batch_like, donate=donate)
 
 
 def jit_serve_step(model: Model, mesh: Mesh, params, cache_like,
                    batch_size: int = 0):
+    """Legacy alias: ``jit_step(model, "serve", ...)``."""
     return jit_step(model, "serve", mesh, params_like=params,
                     cache_like=cache_like, batch_size=batch_size)

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Docstring-coverage gate for the public API surface — the dependency-free
+local equivalent of the CI `doc-lint` job's
+
+    interrogate --ignore-nested-functions --ignore-init-method \
+        --fail-under <N> <paths>
+
+Counts module, class, and (non-nested, non-``__init__``) function/method
+docstrings — semiprivate ``_underscore`` units included, matching the CI
+invocation — over the gated paths below and fails when coverage drops
+under the threshold. Run from the repo root:
+
+    python tools/doc_coverage.py [--fail-under 95] [-v]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+# The gated public API surface (ISSUE 4 satellite: compat, sharding, the
+# step factory, and the whole serving subsystem). Paths relative to repo
+# root; directories are walked for *.py.
+GATED_PATHS = [
+    "src/repro/distributed/compat.py",
+    "src/repro/distributed/sharding.py",
+    "src/repro/train/step.py",
+    "src/repro/serve",
+    "src/repro/models/__init__.py",
+]
+DEFAULT_FAIL_UNDER = 95.0
+
+
+def _iter_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+        else:
+            yield p
+
+
+def _doc_nodes(tree):
+    """Yield (name, has_docstring) for the module, every class, and every
+    non-nested function/method (interrogate's default unit set minus nested
+    functions and __init__)."""
+    yield "<module>", bool(ast.get_docstring(tree))
+
+    def walk(node, prefix, inside_function):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if inside_function or child.name == "__init__":
+                    continue
+                yield (f"{prefix}{child.name}",
+                       bool(ast.get_docstring(child)))
+                yield from walk(child, f"{prefix}{child.name}.", True)
+            elif isinstance(child, ast.ClassDef):
+                yield (f"{prefix}{child.name}",
+                       bool(ast.get_docstring(child)))
+                yield from walk(child, f"{prefix}{child.name}.",
+                                inside_function)
+            else:
+                yield from walk(child, prefix, inside_function)
+
+    yield from walk(tree, "", False)
+
+
+def main() -> int:
+    """Scan the gated paths; print per-file coverage; exit 1 under the
+    threshold."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fail-under", type=float, default=DEFAULT_FAIL_UNDER)
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="list undocumented units")
+    args = ap.parse_args()
+
+    total = documented = 0
+    for path in _iter_files(GATED_PATHS):
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        units = list(_doc_nodes(tree))
+        n_doc = sum(1 for _, d in units if d)
+        total += len(units)
+        documented += n_doc
+        pct = 100.0 * n_doc / len(units)
+        print(f"{path}: {n_doc}/{len(units)} ({pct:.1f}%)")
+        if args.verbose:
+            for name, d in units:
+                if not d:
+                    print(f"    MISSING: {name}")
+
+    pct = 100.0 * documented / max(total, 1)
+    print(f"TOTAL: {documented}/{total} ({pct:.1f}%), "
+          f"fail-under {args.fail_under:.1f}%")
+    if pct < args.fail_under:
+        print("doc coverage FAILED", file=sys.stderr)
+        return 1
+    print("doc coverage OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
