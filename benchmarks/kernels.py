@@ -1,0 +1,184 @@
+"""Kernel-tier benchmark: lax Newton baseline vs per-iteration fused kernel
+vs whole-Newton megakernel, at the acceptance shape T=16384, K=8.
+
+Records, per solver implementation:
+
+  * wall-clock (median of 3 jitted calls) and tokens/s — on CPU CI hosts
+    the Pallas kernels run in INTERPRET mode, so absolute kernel numbers
+    are not comparable to the compiled lax baseline; the cross-kernel
+    ratio is still indicative, and the authoritative CI-host metric is
+  * the HBM stream accounting from the roofline model
+    (``kernels.autotune.solver_hbm_streams``): how many (T, D)-sized HBM
+    streams one K-iteration solve moves.  The megakernel's whole point is
+    collapsing K x (4..6) streams to ~3 — this ratio is hardware-
+    independent and is what the wall-clock win on a real TPU tracks;
+  * the early-exit iteration histogram: from the megakernel's in-kernel
+    per-channel residual reduction, at which Newton iteration each channel
+    of the solve converged below tol (plus the ``tol``-mode effective
+    n_iters a while_loop would have run).
+
+Output: ``BENCH_kernels.json`` at the repo root (override via
+``BENCH_JSON_OUT``), uploaded as a CI artifact by the bench-smoke job.
+``meets_bar`` requires megakernel >= 1.5x per-iteration wall-clock OR
+>= 2.5x fewer HBM streams (the interpret-only CI criterion).
+
+    PYTHONPATH=src python benchmarks/kernels.py        # standalone
+    KERNELS_BENCH_TOY=1 ...                            # small shape
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+T, D, K = 16384, 256, 8
+CHUNK, D_TILE = 512, 256
+TOY_T, TOY_D = 1024, 128
+TOL = 1e-6
+
+
+def _rand_problem(t, d):
+    from repro.kernels.lrc_deer.ops import PACK_ORDER
+    ks = jax.random.split(jax.random.PRNGKey(0), len(PACK_ORDER) + 2)
+    rows = []
+    for i, name in enumerate(PACK_ORDER):
+        if name == "g_leak":
+            rows.append(jnp.full((d,), 0.1))
+        elif name == "e_leak":
+            rows.append(jnp.ones((d,)))
+        elif name.startswith(("b_", "v_")):
+            rows.append(jnp.zeros((d,)))
+        else:
+            rows.append(jax.random.normal(ks[i], (d,)) * 0.5)
+    pp = jnp.stack(rows)
+    su = jax.nn.sigmoid(jax.random.normal(ks[-2], (t, d)))
+    eu = jax.random.normal(ks[-1], (t, d))
+    return su, eu, pp, jnp.zeros((d,))
+
+
+def _time(fn, args):
+    jitted = jax.jit(fn)
+    jax.block_until_ready(jitted(*args))   # compile + warm
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def bench_kernels() -> None:
+    """benchmarks/run.py entry: CSV rows + the BENCH_kernels.json artifact."""
+    from repro.core.deer import DeerConfig, deer_solve
+    from repro.kernels.autotune import solver_hbm_streams
+    from repro.kernels.lrc_deer.kernel import lrc_deer_megakernel_pallas
+    from repro.kernels.lrc_deer.ops import (lrc_deer_solve,
+                                            tol_iteration_count)
+    from repro.kernels.lrc_deer.ref import _step
+
+    toy = os.environ.get("KERNELS_BENCH_TOY") == "1"
+    t, d = (TOY_T, TOY_D) if toy else (T, D)
+    chunk = min(CHUNK, t)
+    d_tile = min(D_TILE, d)
+    interp = jax.default_backend() != "tpu"
+    su, eu, pp, x0 = _rand_problem(t, d)
+    args = (su, eu, pp, x0)
+    rows = []
+
+    def record(name, us, streams, err):
+        tok_s = t / (us * 1e-6)
+        rows.append({"name": name, "us_per_call": us, "tokens_per_s": tok_s,
+                     "hbm_td_streams": streams, "max_err_vs_lax": err,
+                     "T": t, "D": d, "iters": K, "interpret": interp})
+        print(f"{name},{us:.1f},tokens_per_s={tok_s:.0f};"
+              f"hbm_td_streams={streams:.0f};max_err={err:.2e}", flush=True)
+
+    # lax baseline: the generic unfused Newton solve (jvp + assoc. scan)
+    step = lambda x, fs, cp: _step(cp, x, fs[0], fs[1], 1.0)
+    dc = DeerConfig(max_iters=K, mode="fixed", grad="unroll")
+    lax_fn = lambda a, b, c, e: deer_solve(step, (a, b), e, t, dc,
+                                           params=c)[0]
+    lax_us = _time(lax_fn, args)
+    want = lax_fn(*args)
+    record(f"lax_deer_T{t}_K{K}", lax_us, solver_hbm_streams(K, "lax"), 0.0)
+
+    # per-iteration fused kernel (the pre-megakernel path)
+    iter_fn = lambda a, b, c, e: lrc_deer_solve(
+        a, b, c, e, n_iters=K, chunk=chunk, d_tile=d_tile,
+        megakernel=False, interpret=interp)
+    iter_us = _time(iter_fn, args)
+    err_i = float(jnp.max(jnp.abs(iter_fn(*args) - want)))
+    record(f"fused_iter_T{t}_K{K}", iter_us,
+           solver_hbm_streams(K, "fused_iter"), err_i)
+
+    # whole-Newton megakernel
+    mega_fn = lambda a, b, c, e: lrc_deer_solve(
+        a, b, c, e, n_iters=K, chunk=chunk, d_tile=d_tile,
+        megakernel=True, interpret=interp)
+    mega_us = _time(mega_fn, args)
+    err_m = float(jnp.max(jnp.abs(mega_fn(*args) - want)))
+    record(f"megakernel_T{t}_K{K}", mega_us,
+           solver_hbm_streams(K, "mega"), err_m)
+
+    # early-exit accounting from the in-kernel residual reduction
+    _, resid = lrc_deer_megakernel_pallas(su, eu, pp, x0, n_iters=K,
+                                          chunk=chunk, d_tile=d_tile,
+                                          interpret=interp)
+    resid = np.asarray(resid[:, :d])               # (K, D) per channel
+    conv = resid <= TOL
+    first = np.where(conv.any(axis=0), 1 + conv.argmax(axis=0), K + 1)
+    hist = {f"iter_{k}": int((first == k).sum()) for k in range(1, K + 1)}
+    hist["not_converged"] = int((first == K + 1).sum())
+    n_iters_tol = int(tol_iteration_count(
+        jnp.asarray(resid.max(axis=1)), TOL, K))
+
+    wall_ratio = iter_us / mega_us
+    stream_ratio = (solver_hbm_streams(K, "fused_iter")
+                    / solver_hbm_streams(K, "mega"))
+    out = {
+        "rows": rows,
+        "wall_ratio_mega_vs_iter": wall_ratio,
+        # NOTE the stream ratio comes from the ANALYTIC roofline model of
+        # the kernel schedules (solver_hbm_streams), not a measurement —
+        # it is the criterion interpret-only CI hosts are allowed to meet,
+        # and it moves only when the schedule itself changes.  Wall-clock
+        # is the measured signal: watch wall_ratio_mega_vs_iter per
+        # backend for regressions (interpret-mode wall-clock is dominated
+        # by the per-grid-step interpreter overhead, so ~1x is expected on
+        # CPU; the roofline win shows up compiled on TPU).
+        "hbm_stream_ratio_mega_vs_iter": stream_ratio,
+        "stream_ratio_is_analytic": True,
+        "meets_1p5x_wall": wall_ratio >= 1.5,
+        "meets_2p5x_streams": stream_ratio >= 2.5,
+        # the stream criterion only substitutes for wall-clock on
+        # interpret-mode hosts (the acceptance wording); on a compiled
+        # backend the bar is the MEASURED 1.5x, so a TPU regression that
+        # leaves the analytic schedule untouched still fails the gate
+        "meets_bar": (wall_ratio >= 1.5 if not interp
+                      else wall_ratio >= 1.5 or stream_ratio >= 2.5),
+        "tol": TOL,
+        "tol_mode_n_iters": n_iters_tol,
+        "early_exit_channel_histogram": hist,
+        "resid_max_per_iter": [float(r) for r in resid.max(axis=1)],
+        "backend": jax.default_backend(),
+    }
+    print(f"kernels/summary,0,wall_ratio={wall_ratio:.2f};"
+          f"stream_ratio={stream_ratio:.1f};meets_bar={out['meets_bar']};"
+          f"tol_iters={n_iters_tol}", flush=True)
+
+    path = os.environ.get("BENCH_JSON_OUT")
+    if not path:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    bench_kernels()

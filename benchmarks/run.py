@@ -15,8 +15,8 @@ def main() -> None:
                     help="run benchmarks whose name contains this substring")
     args = ap.parse_args()
 
-    from benchmarks import (ablations, grad_compression, paper_tables,
-                            seq_parallel, serve)
+    from benchmarks import (ablations, grad_compression, kernels,
+                            paper_tables, seq_parallel, serve)
     benches = [
         paper_tables.table1_accuracy,
         paper_tables.table2_variants,
@@ -28,6 +28,7 @@ def main() -> None:
         ablations.table10_state_dependency,
         ablations.table11_complex_params,
         ablations.kernels_micro,
+        kernels.bench_kernels,
         seq_parallel.bench_seq_parallel,
         grad_compression.bench_grad_compression,
         serve.bench_serve,

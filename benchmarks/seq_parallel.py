@@ -127,9 +127,14 @@ def _inner() -> None:
 
     fused_args = (su_f, eu_f, pp_f, x0_f)
     chunk = min(256, t // N_DEV)
-    measure(f"fused_replicated_T{t}",
+    measure(f"fused_iter_replicated_T{t}",
             lambda su, eu, pp, x_: lrc_deer_solve(
-                su, eu, pp, x_, n_iters=iters, chunk=chunk), fused_args)
+                su, eu, pp, x_, n_iters=iters, chunk=chunk,
+                megakernel=False), fused_args)
+    measure(f"fused_mega_replicated_T{t}",
+            lambda su, eu, pp, x_: lrc_deer_solve(
+                su, eu, pp, x_, n_iters=iters, chunk=chunk,
+                megakernel=True), fused_args)
     measure(f"fused_seq_sharded_T{t}_P{N_DEV}",
             lambda su, eu, pp, x_: sharded_lrc_deer_solve(
                 su, eu, pp, x_, mesh=mesh, seq_axis="data", n_iters=iters,

@@ -49,6 +49,13 @@ class SSMConfig:
     # whole mesh still participates. Falls back to the replicated solver
     # when no mesh / non-divisible T.
     seq_shard: bool = False
+    # fused Pallas tier for the lrc mixer (kernels/lrc_deer): route the
+    # full-sequence / prefill / training DEER solve through the
+    # whole-Newton megakernel (one kernel launch for all deer_iters
+    # iterations, autotuned tiling, fused implicit-adjoint backward) —
+    # sharded over the time axis when seq_shard applies, replicated
+    # otherwise. Decode (T == 1) is unaffected. Disabled under exact_hlo.
+    fused: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,17 +12,35 @@ The SSM core is selectable: "lrc" (the paper's model), "stc", "gru", "mgu",
 solver, or "elk" solver, or "sequential" (oracle; O(T) depth) for parity
 tests and the runtime benchmark (Table 6 comparison).
 
-Long-context scaling — the block picks the fastest applicable solver tier:
+Long-context scaling — the block picks the fastest applicable solver tier
+(sharded-fused > fused > sharded-lax > replicated):
 
   1. sharded-fused   (kernels/lrc_deer): the fused Pallas Newton iteration
      on a local T/P time slice per device, cross-shard prefix fixup between
-     kernel invocations. Requires ``fused`` + ``seq_axis`` + an active mesh
-     + the plain-lrc cell form; forward-only. Interpret-mode on CPU.
-  2. sharded-lax     (core/deer_sharded.py / core/elk_sharded.py): the
+     kernel invocations; backward = the fused implicit-adjoint kernel
+     composed through the same fixup seam in reverse. Requires ``fused`` +
+     ``seq_axis`` + an active mesh + the plain-lrc cell form.
+  2. fused           (kernels/lrc_deer megakernel): the WHOLE K-iteration
+     Newton solve in one Pallas launch, trajectory + Newton carry
+     VMEM-resident across iterations (~3 HBM (T,D)-streams per solve);
+     same fused-adjoint backward. Requires ``fused`` + the plain-lrc cell
+     form; no mesh needed.
+  3. sharded-lax     (core/deer_sharded.py / core/elk_sharded.py): the
      whole Newton/ELK solve on time shards — per-device trajectory memory
      O(T/P * D) instead of O(T * D). Requires ``seq_axis`` + an active
-     mesh; differentiable (unroll or implicit).
-  3. replicated      (core/deer.py / core/elk.py, vmapped over batch).
+     mesh; differentiable (unroll or implicit; the implicit backward uses
+     the fused adjoint KERNEL via ``fused_adjoint`` when the cell is in
+     the packed-lrc form).
+  4. replicated      (core/deer.py / core/elk.py, vmapped over batch).
+
+Kernel tiers run compiled on TPU and in interpret mode elsewhere
+(``kernel_interpret`` overrides the auto-detection); their tiling defaults
+to the measured/analytic sweep in ``kernels/autotune.py``.  NOTE the tier
+order is throughput-ranked: when a fused shard layout is non-viable but
+the cell form qualifies, tier 2 replicates the trajectory (single-device
+memory bound) rather than falling to the sharded-lax tier — set
+``fused=False`` to prefer trajectory sharding over kernel fusion for
+memory-bound shapes.
 
 ``seq_axis`` may be a mesh-axis name or a TUPLE of names (time sharded over
 the flattened product axis — e.g. ("data", "model") engages the whole mesh
@@ -74,12 +92,21 @@ class LrcSSMConfig:
     # active mesh containing the axes; otherwise falls back to the vmapped
     # replicated path.
     seq_axis: Optional[Any] = None
-    # fused-kernel tier (kernels/lrc_deer): drive the sequence-parallel DEER
-    # solve with the fused Pallas iteration (sharded-fused > sharded-lax >
-    # replicated). Honoured only for the plain lrc cell (solver="deer",
+    # fused-kernel tiers (kernels/lrc_deer): drive the DEER solve with the
+    # fused Pallas kernels (sharded-fused > fused megakernel > sharded-lax
+    # > replicated). Honoured only for the plain lrc cell (solver="deer",
     # mode="fixed", no rho/damping/jac_clip, real params, both
-    # state-dependency flags). Forward-only; interpret-mode on CPU.
+    # state-dependency flags). Differentiable: the backward pass is the
+    # fused implicit-adjoint kernel (IFT gradient at the fixed point —
+    # exact at convergence regardless of DeerConfig.grad).
     fused: bool = False
+    # backward-pass hook for the SHARDED-LAX tier: replace the implicit
+    # adjoint's jvp + reverse-scan segment with the fused adjoint kernel
+    # when the cell is in the packed-lrc form (grad="implicit" only).
+    fused_adjoint: bool = True
+    # Pallas execution mode: None = auto (compiled on TPU, interpreter on
+    # CPU hosts); bool forces it. Threaded to every kernel call site.
+    kernel_interpret: Optional[bool] = None
 
 
 def _cell_cfg(cfg: LrcSSMConfig):
@@ -171,35 +198,60 @@ def _seq_shard_mesh(cfg: LrcSSMConfig, T: int):
 
 
 def _fused_applicable(cfg: LrcSSMConfig) -> bool:
-    """The fused Pallas tier covers exactly the kernel's closed-form cell:
+    """The fused Pallas tiers cover exactly the kernel's closed-form cell:
     plain real-parameter lrc with both state-dependency flags, fixed-count
     undamped Newton."""
     d = cfg.deer
-    return (cfg.fused and cfg.cell == "lrc" and cfg.solver == "deer"
-            and cfg.rho is None and cfg.state_dependent_a
-            and cfg.state_dependent_b and not cfg.complex_state_params
+    return (cfg.fused and _lrc_kernel_form(cfg)
             and d.mode == "fixed" and d.damping == 1.0 and d.jac_clip is None)
+
+
+def _lrc_kernel_form(cfg: LrcSSMConfig) -> bool:
+    """True when the cell's step function is the packed-lrc closed form the
+    Pallas kernels implement (the fused-adjoint precondition)."""
+    return (cfg.cell == "lrc" and cfg.solver == "deer"
+            and cfg.rho is None and cfg.state_dependent_a
+            and cfg.state_dependent_b and not cfg.complex_state_params)
+
+
+def _fold_cell_inputs(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array):
+    """(B, T, H) -> the kernels' folded (T, B*S) inputs: input features in
+    time-major layout, then the shared batch-into-channel fold
+    (``ops.fold_channel_batch``)."""
+    from repro.kernels.lrc_deer.ops import fold_channel_batch
+    B, T, _ = hn.shape
+    hT = jnp.swapaxes(hn, 0, 1)                       # (T, B, H)
+    s_u, eps_u = input_features(cell_p, hT)           # (T, B, S)
+    suf, euf, pp, x0 = fold_channel_batch(s_u, eps_u, cell_p)
+    return suf, euf, pp, x0.astype(hn.dtype), B, T, cfg.d_state
 
 
 def _solve_cell_fused_sharded(cfg: LrcSSMConfig, cell_p: Params,
                               hn: jax.Array, mesh
                               ) -> Tuple[jax.Array, jax.Array]:
     """Sharded-fused tier: (B, T, H) -> (B, T, S) with the fused Pallas
-    Newton iteration on time shards. The batch folds into the channel axis
-    — every kernel quantity is per-channel elementwise, so the packed
-    (10, S) parameters simply tile to (10, B*S)."""
-    from repro.kernels.lrc_deer.ops import (pack_lrc_params,
-                                            sharded_lrc_deer_solve)
-    B, T, _ = hn.shape
-    S = cfg.d_state
-    hT = jnp.swapaxes(hn, 0, 1)                       # (T, B, H)
-    s_u, eps_u = input_features(cell_p, hT)           # (T, B, S)
-    pp = jnp.tile(pack_lrc_params(cell_p), (1, B))
-    x0 = jnp.zeros((B * S,), hn.dtype)
+    Newton iteration on time shards (fused-adjoint backward through the
+    same cross-shard fixup seam)."""
+    from repro.kernels.lrc_deer.ops import sharded_lrc_deer_solve
+    s_u, eps_u, pp, x0, B, T, S = _fold_cell_inputs(cfg, cell_p, hn)
     states = sharded_lrc_deer_solve(
-        s_u.reshape(T, B * S), eps_u.reshape(T, B * S), pp, x0,
-        mesh=mesh, seq_axis=cfg.seq_axis, n_iters=cfg.deer.max_iters,
-        dt=cfg.dt, interpret=jax.default_backend() != "tpu")
+        s_u, eps_u, pp, x0, mesh=mesh, seq_axis=cfg.seq_axis,
+        n_iters=cfg.deer.max_iters, dt=cfg.dt,
+        interpret=cfg.kernel_interpret)
+    states = jnp.swapaxes(states.reshape(T, B, S), 0, 1)
+    return states, jnp.asarray(cfg.deer.max_iters, jnp.int32)
+
+
+def _solve_cell_fused(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Fused (replicated megakernel) tier: the whole K-iteration Newton
+    solve in ONE Pallas launch, trajectory VMEM-resident across
+    iterations; autotuned tiling; fused-adjoint backward."""
+    from repro.kernels.lrc_deer.ops import lrc_deer_solve
+    s_u, eps_u, pp, x0, B, T, S = _fold_cell_inputs(cfg, cell_p, hn)
+    states = lrc_deer_solve(
+        s_u, eps_u, pp, x0, n_iters=cfg.deer.max_iters, dt=cfg.dt,
+        interpret=cfg.kernel_interpret)
     states = jnp.swapaxes(states.reshape(T, B, S), 0, 1)
     return states, jnp.asarray(cfg.deer.max_iters, jnp.int32)
 
@@ -236,9 +288,16 @@ def _solve_cell_seq_sharded(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
                                           mesh=mesh, seq_axis=cfg.seq_axis,
                                           params=cell_p)
     else:
+        fused_scan = None
+        if (cfg.fused_adjoint and cfg.deer.grad == "implicit"
+                and _lrc_kernel_form(cfg)):
+            from repro.kernels.lrc_deer.ops import make_fused_adjoint_scans
+            _, fused_scan = make_fused_adjoint_scans(
+                dt=cfg.dt, interpret=cfg.kernel_interpret)
         states, iters = sharded_deer_solve(step, feats, x0, T, cfg.deer,
                                            mesh=mesh, seq_axis=cfg.seq_axis,
-                                           params=cell_p)
+                                           params=cell_p,
+                                           fused_scan=fused_scan)
     if cfg.complex_state_params:
         states = states.real
     if cfg.cell == "lstm":
@@ -249,14 +308,20 @@ def _solve_cell_seq_sharded(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
 def _solve_block(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
                  ) -> Tuple[jax.Array, jax.Array]:
     """Solve one block's cell over the batch: (B, T, H) -> ((B, T, S), iters
-    scalar). Tier order: sharded-fused > sharded-lax > replicated — a tier
-    whose preconditions fail falls to the NEXT tier (a non-viable fused
-    shard layout must not silently re-replicate the trajectory)."""
+    scalar). Tier order: sharded-fused > fused (replicated megakernel) >
+    sharded-lax > replicated — a tier whose preconditions fail falls to
+    the NEXT tier."""
     mesh = _seq_shard_mesh(cfg, hn.shape[1])
-    if mesh is not None and _fused_applicable(cfg):
-        from repro.kernels.lrc_deer.ops import sharded_fused_viable
-        if sharded_fused_viable(hn.shape[1], mesh, cfg.seq_axis):
-            return _solve_cell_fused_sharded(cfg, cell_p, hn, mesh)
+    if _fused_applicable(cfg):
+        if mesh is not None:
+            from repro.kernels.lrc_deer.ops import sharded_fused_viable
+            # same (D, K) the solve will resolve its tiling with, so the
+            # viability answer matches what actually runs
+            if sharded_fused_viable(hn.shape[1], mesh, cfg.seq_axis,
+                                    D=hn.shape[0] * cfg.d_state,
+                                    n_iters=cfg.deer.max_iters):
+                return _solve_cell_fused_sharded(cfg, cell_p, hn, mesh)
+        return _solve_cell_fused(cfg, cell_p, hn)
     if mesh is not None:
         return _solve_cell_seq_sharded(cfg, cell_p, hn, mesh)
     states, iters = jax.vmap(lambda seq: _solve_cell(cfg, cell_p, seq))(hn)

@@ -30,7 +30,10 @@ Convergence control:
   * ``fixed``    — K iterations, lax.fori_loop (static; what the dry-run
                    lowers, and what a production TPU step uses).
   * ``tol``      — lax.while_loop on max|x_new - x| > tol with iteration cap
-                   (paper Algorithm 1 / Figure 2 measurement mode).
+                   (paper Algorithm 1 / Figure 2 measurement mode).  The
+                   reported n_iters is the while_loop trip count for BOTH
+                   grad modes (grad="implicit" stays differentiable here —
+                   the custom_vjp never differentiates through the loop).
 
 Damping: optional trust-region-free step damping x <- (1-d) x + d x_new, and
 optional clamping |J| <= rho for guaranteed-contractive iterations
@@ -45,7 +48,8 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.scan import chunked_diag_scan, diag_linear_scan
+from repro.core.scan import (chunked_diag_scan, diag_linear_scan,
+                             residual_init)
 
 # StepFn: (x_prev, feats[, params]) -> x_next, elementwise in x_prev.
 # feats is an arbitrary pytree of per-timestep features, leading axis T.
@@ -94,12 +98,21 @@ def _newton_iteration(step_fn: StepFn, feats, params, x0, states,
 def deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
                cfg: DeerConfig = DeerConfig(),
                init_guess: Optional[jax.Array] = None,
-               params=None) -> Tuple[jax.Array, jax.Array]:
+               params=None, fused_scan=None) -> Tuple[jax.Array, jax.Array]:
     """Solve x_t = step_fn(x_{t-1}, feats_t[, params]) for the trajectory.
 
     Returns (states (T, ...), n_iters ()). Differentiable per cfg.grad —
     w.r.t. feats, x0 AND params (pass cell parameters via ``params``, not a
-    closure, when using grad="implicit").
+    closure, when using grad="implicit").  ``n_iters`` is reported
+    consistently across modes: the iteration count the solve actually ran
+    (``max_iters`` in "fixed" mode, the while_loop trip count in "tol"
+    mode — for BOTH grad modes).
+
+    ``fused_scan`` (grad="implicit" only): optional fused-adjoint hook
+    ``(shifted_states, feats, params, gbar) -> g`` replacing the backward
+    pass's jvp + reverse-scan segment with a fused kernel — see
+    ``kernels.lrc_deer.ops.make_fused_adjoint_scans`` for the packed-lrc
+    implementation.  Forward values are unaffected.
     """
     if params is None:
         orig = step_fn
@@ -111,8 +124,8 @@ def deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
         init_guess = jnp.zeros((T,) + x0.shape, x0.dtype)
 
     if cfg.grad == "implicit":
-        states = _deer_fixed_point(step_fn, feats, params, x0, init_guess, cfg)
-        return states, jnp.asarray(cfg.max_iters, jnp.int32)
+        return _deer_fixed_point(step_fn, feats, params, x0, init_guess, cfg,
+                                 fused_scan)
     return _deer_unrolled(step_fn, feats, params, x0, init_guess, cfg)
 
 
@@ -137,9 +150,7 @@ def _deer_unrolled(step_fn, feats, params, x0, init_guess, cfg: DeerConfig):
         return new, diff, it + 1
 
     states, _, iters = jax.lax.while_loop(
-        cond, body, (init_guess, jnp.asarray(jnp.inf, init_guess.dtype if
-                                             jnp.issubdtype(init_guess.dtype, jnp.floating)
-                                             else jnp.float32),
+        cond, body, (init_guess, residual_init(init_guess.dtype),
                      jnp.asarray(0, jnp.int32)))
     return states, iters
 
@@ -162,20 +173,21 @@ def _deer_unrolled(step_fn, feats, params, x0, init_guess, cfg: DeerConfig):
 # cotangents follow from a single vjp through StepAll.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5, 6))
 def _deer_fixed_point(step_fn, feats, params, x0, init_guess,
-                      cfg: DeerConfig):
-    states, _ = _deer_unrolled(step_fn, feats, params, x0,
-                               jax.lax.stop_gradient(init_guess), cfg)
-    return states
+                      cfg: DeerConfig, fused_scan):
+    return _deer_unrolled(step_fn, feats, params, x0,
+                          jax.lax.stop_gradient(init_guess), cfg)
 
 
-def _dfp_fwd(step_fn, feats, params, x0, init_guess, cfg):
-    states = _deer_fixed_point(step_fn, feats, params, x0, init_guess, cfg)
-    return states, (feats, params, x0, states)
+def _dfp_fwd(step_fn, feats, params, x0, init_guess, cfg, fused_scan):
+    out = _deer_fixed_point(step_fn, feats, params, x0, init_guess, cfg,
+                            fused_scan)
+    return out, (feats, params, x0, out[0])
 
 
-def implicit_adjoint(step_fn, feats, params, x0, states, gbar):
+def implicit_adjoint(step_fn, feats, params, x0, states, gbar,
+                     fused_scan=None):
     """IFT adjoint of the fixed point x = F(shift(x)) at the converged
     ``states``. Returns (d_feats, d_params, d_x0).
 
@@ -183,16 +195,25 @@ def implicit_adjoint(step_fn, feats, params, x0, states, gbar):
     iteration converges to the same fixed-point equation (the smoother's
     observations y = x^prev become self-consistent at the solution), so the
     backward pass is identical.
+
+    ``fused_scan``: optional hook ``(shifted, feats, params, gbar) -> g``
+    computing the adjoint recurrence g_t = gbar_t + J_{t+1} g_{t+1} in one
+    fused pass (gate recompute + exact diagonal J + reverse scan — the
+    Pallas kernel in kernels/lrc_deer for packed-lrc cells).  None = the
+    generic jvp + associative reverse scan below.
     """
     shifted = _shift_right(states, x0)
 
-    fn_of_x = lambda xs: step_fn(xs, feats, params)
-    ones = jnp.ones_like(shifted)
-    _, jac = jax.jvp(fn_of_x, (shifted,), (ones,))   # J_t = dF_t/dx_{t-1}
+    if fused_scan is not None:
+        g = fused_scan(shifted, feats, params, gbar)
+    else:
+        fn_of_x = lambda xs: step_fn(xs, feats, params)
+        ones = jnp.ones_like(shifted)
+        _, jac = jax.jvp(fn_of_x, (shifted,), (ones,))  # J_t = dF_t/dx_{t-1}
 
-    # Adjoint recurrence (reverse scan): g_t = gbar_t + J_{t+1} g_{t+1}.
-    jac_next = jnp.concatenate([jac[1:], jnp.zeros_like(jac[:1])], axis=0)
-    g = diag_linear_scan(jac_next, gbar, None, reverse=True)
+        # Adjoint recurrence (reverse scan): g_t = gbar_t + J_{t+1} g_{t+1}.
+        jac_next = jnp.concatenate([jac[1:], jnp.zeros_like(jac[:1])], axis=0)
+        g = diag_linear_scan(jac_next, gbar, None, reverse=True)
 
     # Cotangents into (feats, params, x0) via one vjp through the step
     # applied to the *converged* trajectory.
@@ -204,10 +225,11 @@ def implicit_adjoint(step_fn, feats, params, x0, states, gbar):
     return d_feats, d_params, d_x0
 
 
-def _dfp_bwd(step_fn, cfg, res, gbar):
+def _dfp_bwd(step_fn, cfg, fused_scan, res, gbar):
     feats, params, x0, states = res
     d_feats, d_params, d_x0 = implicit_adjoint(step_fn, feats, params, x0,
-                                               states, gbar)
+                                               states, gbar[0],
+                                               fused_scan=fused_scan)
     d_init = jnp.zeros_like(states)  # init guess does not affect the solution
     return d_feats, d_params, d_x0, d_init
 

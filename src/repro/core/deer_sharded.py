@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.deer import DeerConfig, StepFn, deer_solve
-from repro.core.scan import sharded_scan_local
+from repro.core.scan import residual_init, sharded_scan_local
 from repro.distributed import compat
 
 
@@ -186,7 +186,7 @@ def _solve_shmapped(step_fn, feats, params, x0, init_guess, cfg: DeerConfig,
             return new, diff, it + 1
 
         states, _, iters = jax.lax.while_loop(
-            cond, body, (init_s, jnp.asarray(jnp.inf, jnp.float32),
+            cond, body, (init_s, residual_init(),
                          jnp.asarray(0, jnp.int32)))
         return states, iters
 
@@ -202,9 +202,10 @@ def _solve_shmapped(step_fn, feats, params, x0, init_guess, cfg: DeerConfig,
 # implicit differentiation at the fixed point (sharded adjoint)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5, 6, 7, 8, 9))
 def _sharded_fixed_point(step_fn, feats, params, x0, init_guess,
-                         cfg: DeerConfig, mesh, seq_axis, batch_axes):
+                         cfg: DeerConfig, mesh, seq_axis, batch_axes,
+                         fused_scan):
     states, _ = _solve_shmapped(step_fn, feats, params, x0,
                                 jax.lax.stop_gradient(init_guess), cfg,
                                 mesh, seq_axis, batch_axes)
@@ -212,20 +213,30 @@ def _sharded_fixed_point(step_fn, feats, params, x0, init_guess,
 
 
 def _sfp_fwd(step_fn, feats, params, x0, init_guess, cfg, mesh, seq_axis,
-             batch_axes):
+             batch_axes, fused_scan):
     states = _sharded_fixed_point(step_fn, feats, params, x0, init_guess,
-                                  cfg, mesh, seq_axis, batch_axes)
+                                  cfg, mesh, seq_axis, batch_axes,
+                                  fused_scan)
     return states, (feats, params, x0, states)
 
 
 def sharded_implicit_adjoint(step_fn, feats, params, x0, states, gbar, *,
-                             mesh, seq_axis, batch_axes):
+                             mesh, seq_axis, batch_axes, fused_scan=None):
     """IFT adjoint of the fixed point x = F(shift(x)), distributed on time
     shards. SHARED between the sharded DEER and sharded ELK solvers: both
     iterations converge to the same fixed-point equation, so the backward
     pass — reversed suffix-summary scan for g_t = gbar_t + J_{t+1} g_{t+1},
     one local vjp, psum of parameter cotangents over the sequence axes AND
     any batch shards, x0 cotangent from shard 0 — is identical.
+
+    ``fused_scan``: optional per-shard fused-adjoint hook
+    ``(shifted, feats, params, gbar, jac_right, seq_axis) -> g`` running
+    gate recompute + exact diagonal J + the reverse chunk scan in one
+    fused kernel and composing shards through the reverse summary fixup
+    (kernels.lrc_deer.ops.make_fused_adjoint_scans).  The hook only needs
+    the boundary Jacobian ``jac_right`` — the right neighbour's FIRST-row
+    J — which this function produces with a one-row jvp + the same
+    ppermute the generic path uses.
 
     Returns (d_feats, d_params, d_x0).
     """
@@ -238,17 +249,28 @@ def sharded_implicit_adjoint(step_fn, feats, params, x0, states, gbar, *,
         left = _left_boundary(states_s, x0_r, seq_axis, n_shards)
         shifted = jnp.concatenate([left[None], states_s[:-1]], axis=0)
 
-        fn_of_x = lambda xs: step_fn(xs, feats_s, params_r)
-        ones = jnp.ones_like(shifted)
-        _, jac = jax.jvp(fn_of_x, (shifted,), (ones,))  # J_t = dF_t/dx_{t-1}
+        if fused_scan is not None:
+            # one-row J (the boundary element the LEFT neighbour needs for
+            # its shifted-left Jacobian), exchanged with one ppermute
+            feats_row = jax.tree_util.tree_map(lambda a: a[:1], feats_s)
+            fn_row = lambda xs: step_fn(xs, feats_row, params_r)
+            _, j0 = jax.jvp(fn_row, (shifted[:1],),
+                            (jnp.ones_like(shifted[:1]),))
+            nxt = _right_jac_first(j0, seq_axis, n_shards)
+            g = fused_scan(shifted, feats_s, params_r, gbar_s, nxt,
+                           seq_axis)
+        else:
+            fn_of_x = lambda xs: step_fn(xs, feats_s, params_r)
+            ones = jnp.ones_like(shifted)
+            _, jac = jax.jvp(fn_of_x, (shifted,), (ones,))  # J = dF/dx_{t-1}
 
-        # Adjoint recurrence g_t = gbar_t + J_{t+1} g_{t+1}: shift J left
-        # (boundary element from the right neighbour), then the REVERSED
-        # sharded scan with the suffix-summary fixup.
-        nxt = _right_jac_first(jac, seq_axis, n_shards)
-        jac_next = jnp.concatenate([jac[1:], nxt[None]], axis=0)
-        g = sharded_scan_local(jac_next, gbar_s, None, seq_axis,
-                               reverse=True)
+            # Adjoint recurrence g_t = gbar_t + J_{t+1} g_{t+1}: shift J
+            # left (boundary element from the right neighbour), then the
+            # REVERSED sharded scan with the suffix-summary fixup.
+            nxt = _right_jac_first(jac, seq_axis, n_shards)
+            jac_next = jnp.concatenate([jac[1:], nxt[None]], axis=0)
+            g = sharded_scan_local(jac_next, gbar_s, None, seq_axis,
+                                   reverse=True)
 
         # Cotangents via one local vjp through the step at the converged
         # trajectory. Interior-state cotangents (d_shifted[1:], and slot 0
@@ -278,11 +300,12 @@ def sharded_implicit_adjoint(step_fn, feats, params, x0, states, gbar, *,
     )(feats, params, x0, states, gbar)
 
 
-def _sfp_bwd(step_fn, cfg, mesh, seq_axis, batch_axes, res, gbar):
+def _sfp_bwd(step_fn, cfg, mesh, seq_axis, batch_axes, fused_scan, res,
+             gbar):
     feats, params, x0, states = res
     d_feats, d_params, d_x0 = sharded_implicit_adjoint(
         step_fn, feats, params, x0, states, gbar, mesh=mesh,
-        seq_axis=seq_axis, batch_axes=batch_axes)
+        seq_axis=seq_axis, batch_axes=batch_axes, fused_scan=fused_scan)
     d_init = jnp.zeros_like(states)  # init guess does not affect the solution
     return d_feats, d_params, d_x0, d_init
 
@@ -299,7 +322,8 @@ def sharded_deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
                        seq_axis="data",
                        init_guess: Optional[jax.Array] = None,
                        params=None,
-                       batch_axes=None) -> Tuple[jax.Array, jax.Array]:
+                       batch_axes=None,
+                       fused_scan=None) -> Tuple[jax.Array, jax.Array]:
     """Solve x_t = step_fn(x_{t-1}, feats_t[, params]) with the trajectory
     SHARDED over mesh axis ``seq_axis`` for the whole Newton solve.
 
@@ -316,6 +340,8 @@ def sharded_deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
         first x0 dimension is sharded over, so a batch folded into the state
         dims stays distributed instead of being all-gathered into every
         shard (the ring-attention batch-spec lesson).
+      fused_scan: optional per-shard fused-adjoint hook (grad="implicit"
+        only) — see ``sharded_implicit_adjoint``.
 
     Falls back to the replicated ``deer_solve`` when T is not divisible by
     the shard count or any ``seq_axis`` name is missing from the mesh.
@@ -335,7 +361,8 @@ def sharded_deer_solve(step_fn: StepFn, feats, x0: jax.Array, T: int,
 
     if cfg.grad == "implicit":
         states = _sharded_fixed_point(step_fn, feats, params, x0, init_guess,
-                                      cfg, mesh, seq_axis, batch_axes)
+                                      cfg, mesh, seq_axis, batch_axes,
+                                      fused_scan)
         return states, jnp.asarray(cfg.max_iters, jnp.int32)
     return _solve_shmapped(step_fn, feats, params, x0, init_guess, cfg,
                            mesh, seq_axis, batch_axes)

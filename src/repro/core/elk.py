@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.deer import DeerConfig, StepFn, _shift_right, implicit_adjoint
+from repro.core.scan import residual_init
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +176,7 @@ def _elk_unrolled(step_fn, feats, params, x0, init_guess, cfg: ElkConfig
 
     states, _, iters = jax.lax.while_loop(
         cond, body,
-        (init_guess, jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32)))
+        (init_guess, residual_init(), jnp.asarray(0, jnp.int32)))
     return states, iters
 
 

@@ -57,6 +57,7 @@ from repro.core.deer_sharded import (_left_boundary, _replicated_axes,
 from repro.core.elk import (ElkConfig, _filter_combine, _smooth_combine,
                             elk_solve)
 from repro.core.deer import StepFn
+from repro.core.scan import residual_init
 from repro.distributed import compat
 
 
@@ -254,7 +255,7 @@ def _elk_shmapped(step_fn, feats, params, x0, init_guess, cfg: ElkConfig,
             return new, diff, it + 1
 
         states, _, iters = jax.lax.while_loop(
-            cond, body, (init_s, jnp.asarray(jnp.inf, jnp.float32),
+            cond, body, (init_s, residual_init(),
                          jnp.asarray(0, jnp.int32)))
         return states, iters
 

@@ -45,6 +45,20 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed import compat
 
 
+def residual_init(dtype=jnp.float32) -> jax.Array:
+    """Initial residual carry for a ``tol``-mode while_loop: +inf in the
+    float dtype the residual is tracked in (non-float state dtypes — int,
+    complex — track the max-abs residual in float32).
+
+    Hoisted here because every tol-mode solver (core/deer, core/deer_sharded,
+    core/elk, core/elk_sharded) needs the identical expression; it was
+    previously duplicated inline at each while_loop init.
+    """
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        dtype = jnp.float32
+    return jnp.asarray(jnp.inf, dtype)
+
+
 def _combine(elem_a, elem_b):
     """Associative combine for affine maps  x -> a*x + b.
 

@@ -1,0 +1,269 @@
+"""Autotuned tiling layer for the lrc_deer Pallas solver stack.
+
+Picks (chunk, d_tile) for the whole-Newton megakernel (and the
+per-iteration / adjoint kernels, which share the same block geometry) per
+(backend, T, D, K) problem shape:
+
+  1. **Analytic VMEM-budget pruning** — ``megakernel_vmem_bytes`` models
+     the kernel's VMEM residency (double-buffered pipeline blocks + the
+     wavefront scratch) and candidates exceeding the budget (default
+     16 MiB, override ``REPRO_VMEM_BUDGET_BYTES``) are discarded before
+     anything runs.
+  2. **Measured sweep** — on a real TPU backend the surviving candidates
+     are timed on synthetic data (median of 3) and the fastest wins.  On
+     CPU/interpret hosts measuring the interpreter is meaningless, so the
+     analytic score (largest tile area = fewest grid steps, biased toward
+     wide lanes) decides unless ``REPRO_AUTOTUNE_MEASURE=1`` forces a
+     sweep.
+  3. **Persistent cache** — decisions land in a JSON file keyed
+     ``{backend}:T{T}:D{D}:K{K}`` (``REPRO_AUTOTUNE_CACHE`` overrides the
+     default ``~/.cache/repro/lrc_autotune.json``), so a process restart
+     never re-measures a known shape.  Corrupt/unwritable cache files
+     degrade to in-memory-only operation, never to an error.
+
+``get_tiling`` is the single entry point the ops layer calls when the
+caller does not pin ``chunk``/``d_tile`` explicitly.
+
+The module also owns the HBM stream roofline model
+(``solver_hbm_streams``) that the kernel benchmark and docs quote: how
+many (T, D)-sized HBM streams one K-iteration solve moves per solver
+implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Dict, Optional, Tuple
+
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+CHUNK_CANDIDATES = (128, 256, 512, 1024)
+D_TILE_CANDIDATES = (128, 256, 512)
+_CACHE_VERSION = 1
+
+# in-memory layer over the persistent file (also serves cacheless mode)
+_mem_cache: Dict[str, Tuple[int, int]] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """One autotune decision: the block geometry plus how it was chosen
+    (``source``: "explicit" | "cache" | "measured" | "analytic")."""
+    chunk: int
+    d_tile: int
+    source: str = "analytic"
+
+
+def vmem_budget_bytes() -> int:
+    """The VMEM budget candidates are pruned against (env-overridable)."""
+    try:
+        return int(os.environ.get("REPRO_VMEM_BUDGET_BYTES",
+                                  DEFAULT_VMEM_BUDGET))
+    except ValueError:
+        return DEFAULT_VMEM_BUDGET
+
+
+def megakernel_vmem_bytes(chunk: int, d_tile: int, n_iters: int) -> int:
+    """Analytic VMEM residency of the megakernel for one grid step.
+
+    Pipeline buffers (double-buffered by Mosaic): s_u + eps_u blocks in,
+    states block out — 3 x 2 x (chunk, d_tile) f32 — plus the single-copy
+    (n_iters, d_tile) residual output block, the packed params and x0
+    rows, and the wavefront scratch: the (2*chunk, d_tile) trajectory
+    parity buffer, the (2*(K+1), d_tile) boundary vector and the
+    (1, d_tile) residual gate.
+    """
+    f32 = 4
+    tile = chunk * d_tile * f32
+    pipeline = 6 * tile + n_iters * d_tile * f32 + 2 * (10 + 1) * d_tile * f32
+    scratch = (2 * chunk * d_tile + 2 * (n_iters + 1) * d_tile +
+               d_tile) * f32
+    return pipeline + scratch
+
+
+def _padded(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+def viable_tilings(T: int, D: int, n_iters: int,
+                   budget: Optional[int] = None):
+    """All (chunk, d_tile) candidates that fit the VMEM budget, with the
+    padding overhead each would impose on this (T, D) problem."""
+    budget = vmem_budget_bytes() if budget is None else budget
+    out = []
+    for chunk in CHUNK_CANDIDATES:
+        for d_tile in D_TILE_CANDIDATES:
+            if megakernel_vmem_bytes(chunk, d_tile, n_iters) > budget:
+                continue
+            waste = (_padded(T, chunk) * _padded(D, d_tile)) / float(T * D)
+            out.append((chunk, d_tile, waste))
+    return out
+
+
+def _analytic_pick(T: int, D: int, n_iters: int,
+                   budget: Optional[int] = None) -> Tiling:
+    cands = viable_tilings(T, D, n_iters, budget)
+    if not cands:
+        return Tiling(128, 128, "analytic")
+    # fewest grid steps (largest tile) among the low-padding-waste set,
+    # ties broken toward wide lanes (better VPU utilisation)
+    min_waste = min(w for _, _, w in cands)
+    best = max((c for c in cands if c[2] <= min_waste * 1.25),
+               key=lambda c: (c[0] * c[1], c[1]))
+    return Tiling(best[0], best[1], "analytic")
+
+
+def _measure_pick(T: int, D: int, n_iters: int,
+                  budget: Optional[int] = None) -> Tiling:
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.lrc_deer.kernel import lrc_deer_megakernel_pallas
+
+    cands = viable_tilings(T, D, n_iters, budget)
+    if not cands:
+        return Tiling(128, 128, "analytic")
+    Tp = max(_padded(T, c) for c, _, _ in cands)
+    Dp = max(_padded(D, d) for _, d, _ in cands)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    su = jax.nn.sigmoid(jax.random.normal(ks[0], (Tp, Dp)))
+    eu = jax.random.normal(ks[1], (Tp, Dp))
+    pp = jax.random.normal(ks[2], (10, Dp)) * 0.5
+    x0 = jnp.zeros((Dp,))
+    best, best_us = None, None
+    for chunk, d_tile, _ in cands:
+        Tc, Dc = _padded(T, chunk), _padded(D, d_tile)
+        args = (su[:Tc, :Dc], eu[:Tc, :Dc], pp[:, :Dc], x0[:Dc])
+        try:
+            fn = lambda: lrc_deer_megakernel_pallas(
+                *args, n_iters=n_iters, chunk=chunk, d_tile=d_tile)[0]
+            jax.block_until_ready(fn())   # compile + warm
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                ts.append(time.perf_counter() - t0)
+            us = sorted(ts)[1] * 1e6
+        except Exception:
+            continue
+        if best_us is None or us < best_us:
+            best, best_us = (chunk, d_tile), us
+    if best is None:
+        return _analytic_pick(T, D, n_iters, budget)
+    return Tiling(best[0], best[1], "measured")
+
+
+# ---------------------------------------------------------------------------
+# persistent cache
+# ---------------------------------------------------------------------------
+
+def cache_path() -> str:
+    """Location of the persistent autotune cache file."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "lrc_autotune.json")
+
+
+def _cache_key(backend: str, T: int, D: int, n_iters: int) -> str:
+    return f"{backend}:T{T}:D{D}:K{n_iters}:v{_CACHE_VERSION}"
+
+
+def load_cache(path: Optional[str] = None) -> Dict[str, list]:
+    """Read the on-disk cache; any read/parse failure yields {}."""
+    path = path or cache_path()
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except Exception:
+        return {}
+
+
+def _save_cache(data: Dict[str, list], path: Optional[str] = None) -> None:
+    """Best-effort atomic write; failures (read-only FS) are swallowed —
+    the in-memory layer still serves the session."""
+    path = path or cache_path()
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   prefix=".autotune-")
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    except Exception:
+        pass
+
+
+def clear_cache(path: Optional[str] = None) -> None:
+    """Drop both cache layers (tests; or after a kernel change)."""
+    _mem_cache.clear()
+    path = path or cache_path()
+    try:
+        os.remove(path)
+    except OSError:
+        pass
+
+
+def get_tiling(T: int, D: int, n_iters: int, *,
+               backend: Optional[str] = None,
+               measure: Optional[bool] = None) -> Tiling:
+    """The (chunk, d_tile) to run shape (T, D, K) with on ``backend``.
+
+    Resolution order: in-memory cache -> persistent file cache -> measured
+    sweep (TPU, or ``REPRO_AUTOTUNE_MEASURE=1``) -> analytic pick.  The
+    decision is written back to both cache layers.
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    key = _cache_key(backend, T, D, n_iters)
+    if key in _mem_cache:
+        c, d = _mem_cache[key]
+        return Tiling(c, d, "cache")
+    disk = load_cache()
+    if key in disk:
+        try:
+            c, d = int(disk[key][0]), int(disk[key][1])
+            _mem_cache[key] = (c, d)
+            return Tiling(c, d, "cache")
+        except Exception:
+            pass
+    if measure is None:
+        measure = (backend == "tpu"
+                   or os.environ.get("REPRO_AUTOTUNE_MEASURE") == "1")
+    tiling = (_measure_pick if measure else _analytic_pick)(T, D, n_iters)
+    _mem_cache[key] = (tiling.chunk, tiling.d_tile)
+    disk[key] = [tiling.chunk, tiling.d_tile, tiling.source]
+    _save_cache(disk)
+    return tiling
+
+
+# ---------------------------------------------------------------------------
+# HBM stream roofline model
+# ---------------------------------------------------------------------------
+
+def solver_hbm_streams(n_iters: int, kind: str) -> float:
+    """(T, D)-sized HBM streams one K-iteration DEER solve moves.
+
+      * ``lax``        — unfused Newton iteration (jvp gate pass, J/b
+                         materialisation, associative scan): ~10 streams
+                         per iteration (kernels/lrc_deer docstring).
+      * ``fused_iter`` — per-iteration fused kernel: 3 reads + 1 write in
+                         the kernel, plus the host-side shifted-guess
+                         concatenate (1 read + 1 write) between calls.
+      * ``mega``       — whole-Newton megakernel: s_u + eps_u read once,
+                         trajectory written once; the guess never leaves
+                         VMEM.
+    """
+    if kind == "lax":
+        return 10.0 * n_iters
+    if kind == "fused_iter":
+        return 6.0 * n_iters
+    if kind == "mega":
+        return 3.0
+    raise ValueError(f"unknown solver kind: {kind!r}")

@@ -1,18 +1,47 @@
-"""Pallas TPU kernel: fused LRC-gate + exact-linearise + scan — one full
-DEER Newton iteration for the LrcSSM cell in a single HBM round trip.
+"""Pallas TPU kernels for the LRC-DEER solver stack.
 
-Per Newton iteration the unfused path materialises in HBM: the gate
-pre-activations, the step values f_s, the diagonal Jacobian J_s, the
-linearisation offset b_s, and the scan intermediates — 5+ (T, D) tensors
-read/written. This kernel computes everything on VMEM tiles:
+Three kernels share one closed-form gate/Jacobian body (`_gates_jac`):
 
-    read   x_shift (guess, pre-shifted), s_u, eps_u          (3 reads)
-    VMEM   gates sigma/tanh, ANALYTIC diagonal Jacobian J,
-           b = f - J*x_shift, Hillis-Steele chunk scan + carry
-    write  new states                                         (1 write)
+``_lrc_deer_kernel`` — ONE fused Newton iteration (gate + exact diagonal
+Jacobian + Hillis-Steele chunk scan) in a single HBM round trip.  Per
+iteration the unfused path materialises ~10 (T, D)-streams in HBM; this
+kernel reads x_shift/s_u/eps_u and writes the new states: 4 streams.
 
-=> HBM traffic per iteration drops from ~10 (T,D)-streams to 4, directly
-scaling the memory-roofline term of the DEER solve by ~2.5x (§Perf log).
+``_lrc_deer_megakernel`` — a WHOLE K-iteration DEER solve in one kernel
+launch.  The grid is (d_tile, t_chunk, newton_iter) with the Newton
+dimension INNERMOST: a loop-skewed (wavefront) traversal of the
+(iteration, time) plane.  Iteration k+1 on chunk c needs only
+
+    * the chunk's iteration-k trajectory            (VMEM scratch, just
+      computed one grid step earlier),
+    * the last state of chunk c-1 at iteration k    (the shifted-guess
+      boundary) and at iteration k+1 (the scan carry) — a (K+1)-slot
+      boundary vector per chunk, double-buffered in VMEM scratch,
+
+so the schedule computes EXACTLY the same values as K full-trajectory
+Newton sweeps while s_u/eps_u are fetched once per chunk (the block index
+map is constant in the innermost grid dimension, so the pipeline does not
+re-copy) and the trajectory is written once.  HBM traffic for the whole
+K-iteration solve: 2 (T, D) reads + 1 write, vs K x (4..6) streams for the
+per-iteration kernel — the memory-roofline term of the solve drops by
+~2K x.  VMEM residency is O(chunk * d_tile), independent of T and K.
+
+The kernel also reduces the per-iteration Newton residual
+max_t |x^{k+1} - x^k| per channel into a (K, D) output, so ``tol``-mode
+iteration counts (and compute early-exit via ``skip_tol``) are available
+on device without a host sync.
+
+``_lrc_deer_adjoint_kernel`` — the implicit-adjoint reverse recurrence
+
+    g_t = gbar_t + J_{t+1} * g_{t+1},     g_{T+1} = 0
+
+fused into one pass: gate recompute at the converged trajectory, exact
+diagonal J, in-kernel shift-left of J (chunks walked right-to-left, the
+neighbouring chunk's first-row J carried in scratch), reverse
+Hillis-Steele chunk scan + right-edge carry.  ``with_cumulative`` emits
+the local reverse affine map (A_cum, g|zero-terminal) that
+``core.scan.sharded_scan_fixup(reverse=True)`` stitches across time
+shards — the same seam the forward kernel uses.
 
 The Jacobian is the exact closed-form elementwise derivative of the LRC
 Euler step (diagonal BY MODEL DESIGN — the paper's central property):
@@ -21,6 +50,9 @@ Euler step (diagonal BY MODEL DESIGN — the paper's central property):
     J  = lam + x*dlam/dx + dbeta/dx        (all elementwise)
 
 Per-channel parameters (10 x (D,)) ride along as a (10, Dt) block.
+
+``interpret=None`` on every entry point auto-detects the backend:
+compiled on TPU, interpreter as the CPU fallback (CI hosts).
 """
 from __future__ import annotations
 
@@ -39,6 +71,79 @@ def _sigmoid(x):
     return jax.nn.sigmoid(x)
 
 
+def resolve_interpret(interpret) -> bool:
+    """None -> auto-detect: compiled on TPU, interpreter elsewhere (CPU CI)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _gates_jac(xs, su, eu, pp, dt: float):
+    """Shared closed-form body: gates at the guess + exact diagonal Jacobian.
+
+    xs/su/eu: (C, Dt) f32 tiles; pp: (10, Dt).  Returns (f_s, J) — the step
+    value F(xs) and dF/dxs, both (C, Dt)."""
+    a_x, b_x = pp[P_AX], pp[P_BX]
+    gmx, kmx = pp[P_GMX], pp[P_KMX]
+    gmu, kmu = pp[P_GMU], pp[P_KMU]
+    w_x, v_x = pp[P_WX], pp[P_VX]
+    g_l, e_l = pp[P_GL], pp[P_EL]
+
+    s_x = _sigmoid(a_x * xs + b_x)
+    f = gmx * s_x + gmu * su + g_l
+    z = kmx * s_x + kmu * su + g_l
+    eps = w_x * xs + v_x + eu
+    sig_f = _sigmoid(f)
+    sig_e = _sigmoid(eps)
+    tau_z = jnp.tanh(z)
+    lam = 1.0 - dt * sig_f * sig_e
+    beta = dt * tau_z * sig_e * e_l
+    f_s = lam * xs + beta
+
+    ds_x = s_x * (1.0 - s_x) * a_x
+    dsig_f = sig_f * (1.0 - sig_f) * (gmx * ds_x)
+    dsig_e = sig_e * (1.0 - sig_e) * w_x
+    dtau_z = (1.0 - tau_z * tau_z) * (kmx * ds_x)
+    dlam = -dt * (dsig_f * sig_e + sig_f * dsig_e)
+    dbeta = dt * e_l * (dtau_z * sig_e + tau_z * dsig_e)
+    J = lam + xs * dlam + dbeta
+    return f_s, J
+
+
+def _fwd_chunk_scan(A, B, chunk: int):
+    """In-register Hillis-Steele prefix over the affine maps (A, B):
+    after the sweep, row t holds the composition of rows 0..t."""
+    k = 1
+    while k < chunk:
+        ones = jnp.ones((k, A.shape[1]), jnp.float32)
+        zeros = jnp.zeros((k, B.shape[1]), jnp.float32)
+        A_prev = jnp.concatenate([ones, A[:-k]], axis=0)
+        B_prev = jnp.concatenate([zeros, B[:-k]], axis=0)
+        B = A * B_prev + B
+        A = A * A_prev
+        k *= 2
+    return A, B
+
+
+def _rev_chunk_scan(A, B, chunk: int):
+    """Reverse (suffix) Hillis-Steele: after the sweep, row t holds the
+    composition of rows t..chunk-1, i.e. g_t = A_t * g_term + B_t."""
+    k = 1
+    while k < chunk:
+        ones = jnp.ones((k, A.shape[1]), jnp.float32)
+        zeros = jnp.zeros((k, B.shape[1]), jnp.float32)
+        A_next = jnp.concatenate([A[k:], ones], axis=0)
+        B_next = jnp.concatenate([B[k:], zeros], axis=0)
+        B = A * B_next + B
+        A = A * A_next
+        k *= 2
+    return A, B
+
+
+# ---------------------------------------------------------------------------
+# single Newton iteration (kept: the sharded per-iteration seam needs it)
+# ---------------------------------------------------------------------------
+
 def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, *refs,
                      chunk: int, dt: float, with_cumulative: bool = False):
     if with_cumulative:
@@ -52,32 +157,7 @@ def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, *refs,
     eu = eu_ref[...].astype(jnp.float32)
     pp = pp_ref[...].astype(jnp.float32)     # (10, Dt)
 
-    a_x, b_x = pp[P_AX], pp[P_BX]
-    gmx, kmx = pp[P_GMX], pp[P_KMX]
-    gmu, kmu = pp[P_GMU], pp[P_KMU]
-    w_x, v_x = pp[P_WX], pp[P_VX]
-    g_l, e_l = pp[P_GL], pp[P_EL]
-
-    # ---- gates at the guess -------------------------------------------------
-    s_x = _sigmoid(a_x * xs + b_x)
-    f = gmx * s_x + gmu * su + g_l
-    z = kmx * s_x + kmu * su + g_l
-    eps = w_x * xs + v_x + eu
-    sig_f = _sigmoid(f)
-    sig_e = _sigmoid(eps)
-    tau_z = jnp.tanh(z)
-    lam = 1.0 - dt * sig_f * sig_e
-    beta = dt * tau_z * sig_e * e_l
-    f_s = lam * xs + beta                    # step value F(x_guess)
-
-    # ---- exact diagonal Jacobian (closed form) ------------------------------
-    ds_x = s_x * (1.0 - s_x) * a_x
-    dsig_f = sig_f * (1.0 - sig_f) * (gmx * ds_x)
-    dsig_e = sig_e * (1.0 - sig_e) * w_x
-    dtau_z = (1.0 - tau_z * tau_z) * (kmx * ds_x)
-    dlam = -dt * (dsig_f * sig_e + sig_f * dsig_e)
-    dbeta = dt * e_l * (dtau_z * sig_e + tau_z * dsig_e)
-    J = lam + xs * dlam + dbeta
+    f_s, J = _gates_jac(xs, su, eu, pp, dt)
     b_lin = f_s - J * xs
 
     # ---- carry init ----------------------------------------------------------
@@ -88,16 +168,7 @@ def _lrc_deer_kernel(xs_ref, su_ref, eu_ref, pp_ref, x0_ref, *refs,
             acarry_ref[...] = jnp.ones_like(acarry_ref)
 
     # ---- Hillis-Steele chunk scan -------------------------------------------
-    A, B = J, b_lin
-    k = 1
-    while k < chunk:
-        ones = jnp.ones((k, A.shape[1]), jnp.float32)
-        zeros = jnp.zeros((k, B.shape[1]), jnp.float32)
-        A_prev = jnp.concatenate([ones, A[:-k]], axis=0)
-        B_prev = jnp.concatenate([zeros, B[:-k]], axis=0)
-        B = A * B_prev + B
-        A = A * A_prev
-        k *= 2
+    A, B = _fwd_chunk_scan(J, b_lin, chunk)
 
     carry = carry_ref[...]
     states = A * carry + B
@@ -120,7 +191,7 @@ def lrc_deer_iteration_pallas(x_shift: jax.Array, s_u: jax.Array,
                               eps_u: jax.Array, packed_params: jax.Array,
                               x0: jax.Array, *, chunk: int = 256,
                               d_tile: int = 512, dt: float = 1.0,
-                              interpret: bool = True,
+                              interpret: bool | None = None,
                               with_cumulative: bool = False):
     """One fused Newton iteration. x_shift/s_u/eps_u: (T, D);
     packed_params: (10, D) rows [a_x,b_x,g_max_x,k_max_x,g_max_u,k_max_u,
@@ -131,7 +202,11 @@ def lrc_deer_iteration_pallas(x_shift: jax.Array, s_u: jax.Array,
     the local affine map (A_cum, states|_{x0=0}) that the shard-composable
     entry point (``ops.sharded_lrc_deer_solve``) stitches across time shards
     with ``core.scan.sharded_scan_fixup``.
+
+    ``interpret=None`` auto-detects the backend (compiled on TPU,
+    interpreter on CPU hosts).
     """
+    interpret = resolve_interpret(interpret)
     T, D = x_shift.shape
     assert T % chunk == 0 and D % d_tile == 0
     grid = (D // d_tile, T // chunk)
@@ -158,3 +233,288 @@ def lrc_deer_iteration_pallas(x_shift: jax.Array, s_u: jax.Array,
         scratch_shapes=scratch,
         interpret=interpret,
     )(x_shift, s_u, eps_u, packed_params, x0.reshape(1, D))
+
+
+# ---------------------------------------------------------------------------
+# whole-Newton megakernel (wavefront schedule)
+# ---------------------------------------------------------------------------
+
+def _lrc_deer_megakernel(su_ref, eu_ref, pp_ref, x0_ref, out_ref, resid_ref,
+                         traj_ref, bound_ref, ldelta_ref, *,
+                         chunk: int, n_iters: int, dt: float,
+                         valid_rows: int, skip_tol: float):
+    """Wavefront body: grid step (d, c, k) computes iteration k+1 of chunk c.
+
+    Scratch layout (all f32):
+      traj_ref   (2*chunk, Dt)      — parity-k double buffer of the chunk's
+                                      trajectory (guess at rows src*chunk..,
+                                      result at dst*chunk..).
+      bound_ref  (2*(K+1), Dt)      — parity-c double buffer of the chunk's
+                                      last-row states per iteration:
+                                      row p*(K+1)+j = last state of x^j of
+                                      the previous (p == c%2) or current
+                                      (p == (c+1)%2) chunk.  x^0 is the zero
+                                      initial guess; the "chunk -1" boundary
+                                      is x0 for every j.
+      ldelta_ref (1, Dt)            — previous step's chunk residual (the
+                                      ``skip_tol`` compute gate).
+    """
+    c = pl.program_id(1)
+    k = pl.program_id(2)
+    K = n_iters
+
+    su = su_ref[...].astype(jnp.float32)
+    eu = eu_ref[...].astype(jnp.float32)
+    pp = pp_ref[...].astype(jnp.float32)
+    d_tile = su.shape[1]
+
+    # ---- initialisation -----------------------------------------------------
+    @pl.when(jnp.logical_and(c == 0, k == 0))
+    def _():
+        # chunk -1 boundary := x0 at every iteration slot (parity 0)
+        bound_ref[pl.ds(0, K + 1), :] = jnp.broadcast_to(
+            x0_ref[...].astype(jnp.float32), (K + 1, d_tile))
+        resid_ref[...] = jnp.zeros_like(resid_ref)
+
+    p_prev = jax.lax.rem(c, 2)
+    p_cur = 1 - p_prev
+
+    @pl.when(k == 0)
+    def _():
+        # iteration-0 guess of this chunk is all-zero …
+        traj_ref[pl.ds(0, chunk), :] = jnp.zeros((chunk, d_tile), jnp.float32)
+        # … so its last row (next chunk's k=0 guess boundary) is zero too
+        bound_ref[pl.ds(p_cur * (K + 1), 1), :] = jnp.zeros(
+            (1, d_tile), jnp.float32)
+        ldelta_ref[...] = jnp.full((1, d_tile), jnp.inf, jnp.float32)
+
+    src = jax.lax.rem(k, 2)
+    dst = 1 - src
+    guess = traj_ref[pl.ds(src * chunk, chunk), :]
+    left = bound_ref[pl.ds(p_prev * (K + 1) + k, 1), :]        # guess boundary
+    carry = bound_ref[pl.ds(p_prev * (K + 1) + k + 1, 1), :]   # scan carry
+
+    def newton_step(_):
+        x_shift = jnp.concatenate([left, guess[:-1]], axis=0)
+        f_s, J = _gates_jac(x_shift, su, eu, pp, dt)
+        b_lin = f_s - J * x_shift
+        A, B = _fwd_chunk_scan(J, b_lin, chunk)
+        return A * carry + B
+
+    if skip_tol > 0.0:
+        # chunk-local compute early exit: if the previous step left this
+        # chunk AND both incoming boundary slots unchanged (<= skip_tol),
+        # iteration k+1 reproduces iteration k — copy instead of compute.
+        left_prev = bound_ref[pl.ds(p_prev * (K + 1) +
+                                    jnp.maximum(k - 1, 0), 1), :]
+        carry_prev = left    # carry at step k-1 was bound_prev[k]
+        bnd_delta = jnp.maximum(jnp.max(jnp.abs(left - left_prev)),
+                                jnp.max(jnp.abs(carry - carry_prev)))
+        converged = jnp.logical_and(
+            k > 0, jnp.logical_and(jnp.max(ldelta_ref[...]) <= skip_tol,
+                                   bnd_delta <= skip_tol))
+        states = jax.lax.cond(converged, lambda _: guess, newton_step, None)
+    else:
+        states = newton_step(None)
+
+    # ---- residual reduction (per channel, valid rows only) ------------------
+    delta = jnp.abs(states - guess)
+    if valid_rows % chunk != 0:
+        row = jax.lax.broadcasted_iota(jnp.int32, (chunk, d_tile), 0)
+        delta = jnp.where(row + c * chunk < valid_rows, delta, 0.0)
+    delta = jnp.max(delta, axis=0, keepdims=True)
+    ldelta_ref[...] = delta
+    resid_ref[pl.ds(k, 1), :] = jnp.maximum(resid_ref[pl.ds(k, 1), :], delta)
+
+    # ---- commit -------------------------------------------------------------
+    out_ref[...] = states.astype(out_ref.dtype)   # flushed once per chunk
+    traj_ref[pl.ds(dst * chunk, chunk), :] = states
+    bound_ref[pl.ds(p_cur * (K + 1) + k + 1, 1), :] = states[-1:]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "chunk", "d_tile", "dt",
+                                    "interpret", "valid_rows", "skip_tol"))
+def lrc_deer_megakernel_pallas(s_u: jax.Array, eps_u: jax.Array,
+                               packed_params: jax.Array, x0: jax.Array, *,
+                               n_iters: int = 10, chunk: int = 256,
+                               d_tile: int = 512, dt: float = 1.0,
+                               interpret: bool | None = None,
+                               valid_rows: int | None = None,
+                               skip_tol: float = 0.0):
+    """Whole K-iteration DEER solve in ONE kernel launch (zero init guess).
+
+    s_u/eps_u: (T, D); packed_params: (10, D); x0: (D,).  Returns
+    ``(states (T, D), resid (n_iters, D))`` where ``resid[k, d]`` is the
+    channel-d Newton residual max_t |x^{k+1}_t - x^k_t| of iteration k+1
+    over the first ``valid_rows`` timesteps (default T) — the on-device
+    input for ``tol``-mode iteration counting without a host sync.
+
+    Identical values to ``n_iters`` applications of
+    ``lrc_deer_iteration_pallas`` (the wavefront schedule is a loop-skewed
+    traversal of the same iteration space), at 2 reads + 1 write of (T, D)
+    HBM traffic for the WHOLE solve.
+
+    ``skip_tol > 0`` additionally gates the per-chunk compute: once a
+    chunk's trajectory and both incoming boundary slots move less than
+    ``skip_tol`` between consecutive iterations, remaining iterations on
+    that chunk degenerate to copies (an approximate compute early exit;
+    0.0 = exact schedule).
+    """
+    interpret = resolve_interpret(interpret)
+    T, D = s_u.shape
+    assert T % chunk == 0 and D % d_tile == 0
+    if valid_rows is None:
+        valid_rows = T
+    grid = (D // d_tile, T // chunk, n_iters)
+    t_spec = pl.BlockSpec((chunk, d_tile), lambda d, c, k: (c, d))
+    return pl.pallas_call(
+        functools.partial(_lrc_deer_megakernel, chunk=chunk, n_iters=n_iters,
+                          dt=dt, valid_rows=valid_rows, skip_tol=skip_tol),
+        grid=grid,
+        in_specs=[
+            t_spec,
+            t_spec,
+            pl.BlockSpec((10, d_tile), lambda d, c, k: (0, d)),
+            pl.BlockSpec((1, d_tile), lambda d, c, k: (0, d)),
+        ],
+        out_specs=[
+            t_spec,
+            pl.BlockSpec((n_iters, d_tile), lambda d, c, k: (0, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, D), s_u.dtype),
+            jax.ShapeDtypeStruct((n_iters, D), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2 * chunk, d_tile), jnp.float32),
+            pltpu.VMEM((2 * (n_iters + 1), d_tile), jnp.float32),
+            pltpu.VMEM((1, d_tile), jnp.float32),
+        ],
+        interpret=interpret,
+    )(s_u, eps_u, packed_params, x0.reshape(1, D))
+
+
+# ---------------------------------------------------------------------------
+# fused implicit-adjoint reverse kernel
+# ---------------------------------------------------------------------------
+
+def _lrc_deer_adjoint_kernel(xs_ref, su_ref, eu_ref, pp_ref, gbar_ref,
+                             jr_ref, *refs, chunk: int, n_chunks: int,
+                             dt: float, valid_rows: int,
+                             with_cumulative: bool):
+    if with_cumulative:
+        out_ref, aout_ref, gcarry_ref, acarry_ref, jb_ref = refs
+    else:
+        (out_ref, gcarry_ref, jb_ref), aout_ref, acarry_ref = refs, None, None
+    t = pl.program_id(1)   # walks chunks right-to-left (index maps reversed)
+
+    xs = xs_ref[...].astype(jnp.float32)     # shifted CONVERGED states
+    su = su_ref[...].astype(jnp.float32)
+    eu = eu_ref[...].astype(jnp.float32)
+    pp = pp_ref[...].astype(jnp.float32)
+    gbar = gbar_ref[...].astype(jnp.float32)
+
+    @pl.when(t == 0)
+    def _():
+        # rightmost chunk: J just past the end (zero, or the right
+        # neighbour's first-row J on a time shard) and terminal g = 0
+        jb_ref[...] = jr_ref[...].astype(jnp.float32)
+        gcarry_ref[...] = jnp.zeros_like(gcarry_ref)
+        if with_cumulative:
+            acarry_ref[...] = jnp.ones_like(acarry_ref)
+
+    _, J = _gates_jac(xs, su, eu, pp, dt)
+    jac_next = jnp.concatenate([J[1:], jb_ref[...]], axis=0)
+    jb_ref[...] = J[:1]
+
+    if valid_rows % chunk != 0:
+        # padded tail: identity affine maps (A=1, B=0) pass the carry
+        # through unchanged and the true right-boundary J applies at the
+        # LAST VALID row, so the emitted cumulative map is exact for the
+        # real rows — required by the cross-shard reverse fixup.
+        c_actual = n_chunks - 1 - t
+        grow = (jax.lax.broadcasted_iota(jnp.int32, gbar.shape, 0)
+                + c_actual * chunk)
+        jac_next = jnp.where(grow >= valid_rows, 1.0, jac_next)
+        jac_next = jnp.where(grow == valid_rows - 1,
+                             jr_ref[...].astype(jnp.float32), jac_next)
+        gbar = jnp.where(grow >= valid_rows, 0.0, gbar)
+
+    # reverse Hillis-Steele: g_t = A_t * g_{edge+1} + B_t within the chunk
+    A, B = _rev_chunk_scan(jac_next, gbar, chunk)
+
+    if with_cumulative:
+        # local affine map from the SLICE's right edge: compose the chunk's
+        # suffix map with the carry map accumulated from chunks to the right
+        a_glob = A * acarry_ref[...]
+        g_glob = A * gcarry_ref[...] + B
+        out_ref[...] = g_glob.astype(out_ref.dtype)
+        aout_ref[...] = a_glob.astype(aout_ref.dtype)
+        acarry_ref[...] = a_glob[:1]
+        gcarry_ref[...] = g_glob[:1]
+    else:
+        g = A * gcarry_ref[...] + B
+        out_ref[...] = g.astype(out_ref.dtype)
+        gcarry_ref[...] = g[:1]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "d_tile", "dt", "interpret",
+                                    "valid_rows", "with_cumulative"))
+def lrc_deer_adjoint_pallas(x_shift: jax.Array, s_u: jax.Array,
+                            eps_u: jax.Array, packed_params: jax.Array,
+                            gbar: jax.Array, jac_right: jax.Array, *,
+                            chunk: int = 256, d_tile: int = 512,
+                            dt: float = 1.0, interpret: bool | None = None,
+                            valid_rows: int | None = None,
+                            with_cumulative: bool = False):
+    """Fused implicit-adjoint reverse scan: solves
+
+        g_t = gbar_t + J_{t+1} * g_{t+1},   g_{T+1} = 0
+
+    in one pass — gate recompute at the converged trajectory (``x_shift`` =
+    states shifted right by one, slot 0 = x0), exact diagonal J, in-kernel
+    shift-left of J, reverse Hillis-Steele chunk scan.  ``jac_right`` (D,)
+    is J at the step just past the end: zeros for a replicated solve, the
+    right neighbour's first-row J on a time shard.
+
+    Returns g (T, D).  With ``with_cumulative``: (g0, A_cum) where g0 is
+    the solution with zero terminal state and A_cum the cumulative
+    jac_next product from the slice's right edge — the reverse local
+    affine map ``core.scan.sharded_scan_fixup(reverse=True)`` composes
+    across time shards.
+    """
+    interpret = resolve_interpret(interpret)
+    T, D = x_shift.shape
+    assert T % chunk == 0 and D % d_tile == 0
+    if valid_rows is None:
+        valid_rows = T
+    n_t = T // chunk
+    grid = (D // d_tile, n_t)
+    t_spec = pl.BlockSpec((chunk, d_tile), lambda d, t: (n_t - 1 - t, d))
+    out_specs = [t_spec, t_spec] if with_cumulative else t_spec
+    out_shape = jax.ShapeDtypeStruct((T, D), gbar.dtype)
+    scratch = [pltpu.VMEM((1, d_tile), jnp.float32)]
+    if with_cumulative:
+        out_shape = [out_shape, jax.ShapeDtypeStruct((T, D), gbar.dtype)]
+        scratch = scratch + [pltpu.VMEM((1, d_tile), jnp.float32)]
+    scratch = scratch + [pltpu.VMEM((1, d_tile), jnp.float32)]  # jb_ref
+    return pl.pallas_call(
+        functools.partial(_lrc_deer_adjoint_kernel, chunk=chunk,
+                          n_chunks=n_t, dt=dt, valid_rows=valid_rows,
+                          with_cumulative=with_cumulative),
+        grid=grid,
+        in_specs=[
+            t_spec,
+            t_spec,
+            t_spec,
+            pl.BlockSpec((10, d_tile), lambda d, t: (0, d)),
+            t_spec,
+            pl.BlockSpec((1, d_tile), lambda d, t: (0, d)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x_shift, s_u, eps_u, packed_params, gbar, jac_right.reshape(1, D))

@@ -1,45 +1,71 @@
-"""Public wrappers: full DEER solve driven by the fused Pallas iteration.
+"""Public wrappers: full DEER solves driven by the fused Pallas kernels.
 
 ``pack_lrc_params`` adapts a core.lrc parameter dict to the kernel's packed
 (10, D) layout, so the kernel is a drop-in backend for LrcCellConfig models
-(same math as core.deer with grad="unroll", mode="fixed").
+(same math as core.deer with mode="fixed").
 
-Two solve entry points:
+Solve entry points (all DIFFERENTIABLE via the implicit-function-theorem
+adjoint, run by the fused reverse kernel — the fixed point's gradient does
+not depend on how many Newton iterations produced it):
 
   * ``lrc_deer_solve``          — replicated: full (T, D) trajectory per
-                                  device, the kernel's sequential chunk
-                                  carry spans the whole sequence.
+                                  device.  By default the whole K-iteration
+                                  Newton solve runs inside ONE megakernel
+                                  launch (``megakernel=False`` falls back
+                                  to K per-iteration kernel calls, kept as
+                                  the benchmark baseline).
+  * ``lrc_deer_solve_tol``      — megakernel + the in-kernel residual
+                                  reduction: returns (states, n_iters)
+                                  with ``tol``-mode iteration counting on
+                                  device (no host sync).
   * ``sharded_lrc_deer_solve``  — shard-composable: the on-chip Pallas
                                   schedule runs on a LOCAL T/P time slice
-                                  (zero carry, emitting the slice's
-                                  cumulative affine map) and the cross-chip
-                                  decomposition is the same P-sized
-                                  summary exchange + prefix fixup the lax
-                                  solvers use (core.scan.sharded_scan_fixup)
-                                  — composing the paper's two parallelism
-                                  levels. Forward-only (the Pallas kernel
-                                  has no vjp); per Newton iteration one
-                                  (D,) ppermute + 2*P*D all-gather.
+                                  and the cross-chip decomposition is the
+                                  same P-sized summary exchange + prefix
+                                  fixup the lax solvers use
+                                  (core.scan.sharded_scan_fixup), in BOTH
+                                  time directions: per Newton iteration one
+                                  (D,) ppermute + 2*P*D all-gather forward;
+                                  one ppermute + one reverse fixup for the
+                                  fused adjoint backward.
+
+Tiling (``chunk``/``d_tile``) defaults to ``kernels.autotune.get_tiling``
+— the measured/analytic sweep with the persistent per-(backend, T, D, K)
+cache; pass explicit values to pin the geometry.  ``interpret=None``
+auto-detects the backend (compiled on TPU, interpreter on CPU).
+
+``make_fused_adjoint_scans`` builds the hooks that plug the fused reverse
+kernel into the GENERIC solvers' IFT backward passes
+(``core.deer.implicit_adjoint`` / ``core.deer_sharded.
+sharded_implicit_adjoint``) for cells in the packed-lrc form.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.deer_sharded import _left_boundary, n_seq_shards
+from repro.core.deer_sharded import (_left_boundary, _right_jac_first,
+                                     n_seq_shards)
 from repro.core.scan import sharded_scan_fixup
 from repro.distributed import compat
-from repro.kernels.lrc_deer.kernel import lrc_deer_iteration_pallas
+from repro.kernels import autotune
+from repro.kernels.lrc_deer.kernel import (lrc_deer_adjoint_pallas,
+                                           lrc_deer_iteration_pallas,
+                                           lrc_deer_megakernel_pallas)
+from repro.kernels.lrc_deer.ref import _step as _ref_step
+from repro.kernels.lrc_deer.ref import lrc_jac_ref
 
 PACK_ORDER = ("a_x", "b_x", "g_max_x", "k_max_x", "g_max_u", "k_max_u",
               "w_x", "v_x", "g_leak", "e_leak")
 
 
 def pack_lrc_params(p: Dict[str, jax.Array]) -> jax.Array:
+    """Stack the 10 per-channel cell parameters into the kernels' (10, D)
+    packed layout (row order = ``PACK_ORDER``)."""
     return jnp.stack([p[k].astype(jnp.float32) for k in PACK_ORDER], axis=0)
 
 
@@ -58,54 +84,292 @@ def _adapt_chunk(T: int, chunk: int) -> int:
     return chunk if T >= chunk else max(8, 1 << max(T - 1, 1).bit_length())
 
 
-@functools.partial(jax.jit, static_argnames=("n_iters", "chunk", "d_tile",
-                                             "dt", "interpret"))
-def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
-                   packed_params: jax.Array, x0: jax.Array, *,
-                   n_iters: int = 10, chunk: int = 256, d_tile: int = 512,
-                   dt: float = 1.0, interpret: bool = True) -> jax.Array:
-    """DEER fixed-point solve of the LrcSSM recurrence using the fused
-    Pallas iteration. s_u, eps_u: (T, D); returns states (T, D)."""
-    T, D = s_u.shape
-    c = _adapt_chunk(T, chunk)
-    dtile = d_tile if D >= d_tile else 128
+def _resolve_tiling(T: int, D: int, n_iters: int,
+                    chunk: Optional[int], d_tile: Optional[int]):
+    """Fill unset chunk/d_tile from the autotune layer, then clamp both to
+    the problem extent (small-T chunk adaptation, small-D 128-lane tile)."""
+    if chunk is None or d_tile is None:
+        t = autotune.get_tiling(T, D, n_iters)
+        chunk = chunk if chunk is not None else t.chunk
+        d_tile = d_tile if d_tile is not None else t.d_tile
+    return _adapt_chunk(T, chunk), (d_tile if D >= d_tile else 128)
+
+
+def _f32_step(dt: float):
+    """The closed-form Euler step in f32, as a 4-ary function of
+    (packed_params, x_shift, s_u, eps_u) — the vjp target for the
+    implicit-adjoint parameter/feature cotangents."""
+    def step(pp, xs, su, eu):
+        return _ref_step(pp.astype(jnp.float32), xs.astype(jnp.float32),
+                         su.astype(jnp.float32), eu.astype(jnp.float32), dt)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# replicated solve (megakernel by default, differentiable)
+# ---------------------------------------------------------------------------
+
+class _SolveCfg(NamedTuple):
+    n_iters: int
+    chunk: int
+    d_tile: int
+    dt: float
+    interpret: Optional[bool]
+    megakernel: bool
+    skip_tol: float
+
+
+def _solve_fwd_impl(cfg: _SolveCfg, su, eu, pp, x0, valid_rows):
+    """Forward Newton solve on PADDED (Tp, Dp) arrays."""
+    if cfg.megakernel:
+        states, resid = lrc_deer_megakernel_pallas(
+            su, eu, pp, x0, n_iters=cfg.n_iters, chunk=cfg.chunk,
+            d_tile=cfg.d_tile, dt=cfg.dt, interpret=cfg.interpret,
+            valid_rows=valid_rows, skip_tol=cfg.skip_tol)
+        return states, resid
+    def body(_, states):
+        x_shift = jnp.concatenate([x0[None], states[:-1]], axis=0)
+        return lrc_deer_iteration_pallas(
+            x_shift, su, eu, pp, x0, chunk=cfg.chunk, d_tile=cfg.d_tile,
+            dt=cfg.dt, interpret=cfg.interpret)
+    states = jax.lax.fori_loop(0, cfg.n_iters, body,
+                               jnp.zeros(su.shape, su.dtype), unroll=False)
+    return states, None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_solve(cfg: _SolveCfg, su, eu, pp, x0):
+    """Padded-domain fixed-point solve with the IFT custom_vjp."""
+    states, _ = _solve_fwd_impl(cfg, su, eu, pp, x0, su.shape[0])
+    return states
+
+
+def _fused_solve_fwd(cfg, su, eu, pp, x0):
+    states = _fused_solve(cfg, su, eu, pp, x0)
+    return states, (su, eu, pp, x0, states)
+
+
+def _fused_solve_bwd(cfg, res, gbar):
+    su, eu, pp, x0, states = res
+    shifted = jnp.concatenate([x0[None], states[:-1]], axis=0)
+    g = lrc_deer_adjoint_pallas(
+        shifted, su, eu, pp, gbar.astype(jnp.float32),
+        jnp.zeros((su.shape[1],), jnp.float32), chunk=cfg.chunk,
+        d_tile=cfg.d_tile, dt=cfg.dt, interpret=cfg.interpret)
+    _, vjp = jax.vjp(_f32_step(cfg.dt), pp, shifted, su, eu)
+    d_pp, d_xs, d_su, d_eu = vjp(g)
+    return (d_su.astype(su.dtype), d_eu.astype(eu.dtype),
+            d_pp.astype(pp.dtype), d_xs[0].astype(x0.dtype))
+
+
+_fused_solve.defvjp(_fused_solve_fwd, _fused_solve_bwd)
+
+
+def _pad_solve_args(s_u, eps_u, packed_params, x0, c, dtile):
     su = _pad_axis(_pad_axis(s_u, 0, c), 1, dtile)
     eu = _pad_axis(_pad_axis(eps_u, 0, c), 1, dtile)
     pp = _pad_axis(packed_params, 1, dtile)
     x0p = _pad_axis(x0, 0, dtile)
-    Tp, Dp = su.shape
-
-    def body(_, states):
-        x_shift = jnp.concatenate([x0p[None], states[:-1]], axis=0)
-        return lrc_deer_iteration_pallas(
-            x_shift, su, eu, pp, x0p, chunk=c, d_tile=dtile, dt=dt,
-            interpret=interpret)
-
-    states = jax.lax.fori_loop(
-        0, n_iters, body, jnp.zeros((Tp, Dp), s_u.dtype), unroll=False)
-    return states[:T, :D]
+    return su, eu, pp, x0p
 
 
-def sharded_fused_viable(T: int, mesh, seq_axis, chunk: int = 256) -> bool:
+def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
+                   packed_params: jax.Array, x0: jax.Array, *,
+                   n_iters: int = 10, chunk: Optional[int] = None,
+                   d_tile: Optional[int] = None, dt: float = 1.0,
+                   interpret: Optional[bool] = None,
+                   megakernel: bool = True,
+                   skip_tol: float = 0.0) -> jax.Array:
+    """DEER fixed-point solve of the LrcSSM recurrence with the fused
+    Pallas kernels.  s_u, eps_u: (T, D); returns states (T, D).
+
+    Differentiable w.r.t. every array argument via the fused
+    implicit-adjoint reverse kernel (exact IFT gradient at the fixed
+    point).  ``megakernel=True`` (default) runs all ``n_iters`` Newton
+    iterations inside one kernel launch — ~3 HBM (T, D)-streams for the
+    whole solve; ``False`` issues one fused kernel per iteration (the
+    pre-megakernel baseline, kept for the roofline benchmark).
+    ``chunk``/``d_tile`` default to the autotuned tiling.
+    """
+    T, D = s_u.shape
+    c, dtile = _resolve_tiling(T, D, n_iters, chunk, d_tile)
+    su, eu, pp, x0p = _pad_solve_args(s_u, eps_u, packed_params, x0, c, dtile)
+    cfg = _SolveCfg(n_iters, c, dtile, dt, interpret, megakernel, skip_tol)
+    return _fused_solve(cfg, su, eu, pp, x0p)[:T, :D]
+
+
+def tol_iteration_count(resid: jax.Array, tol: float,
+                        max_iters: int) -> jax.Array:
+    """Iterations a ``tol``-mode while_loop would have run, from the
+    per-iteration residual vector ``resid`` (max-norm over state entries,
+    shape (max_iters,)): the first 1-based iteration whose residual is
+    <= tol, or ``max_iters`` when none converges (exactly the
+    ``core.deer`` while_loop trip count)."""
+    conv = resid <= tol
+    return jnp.where(jnp.any(conv),
+                     1 + jnp.argmax(conv).astype(jnp.int32),
+                     jnp.asarray(max_iters, jnp.int32))
+
+
+def lrc_deer_solve_tol(s_u: jax.Array, eps_u: jax.Array,
+                       packed_params: jax.Array, x0: jax.Array, *,
+                       max_iters: int = 12, tol: float = 1e-6,
+                       chunk: Optional[int] = None,
+                       d_tile: Optional[int] = None, dt: float = 1.0,
+                       interpret: Optional[bool] = None,
+                       skip_tol: float = 0.0):
+    """``tol``-mode megakernel solve: runs ``max_iters`` Newton iterations
+    in one launch and derives the effective iteration count from the
+    in-kernel residual reduction — no host sync, same counting semantics
+    as ``core.deer.deer_solve(mode="tol")``.
+
+    ``skip_tol > 0`` additionally lets chunks whose local update AND
+    boundary slots moved less than ``skip_tol`` skip their remaining
+    per-iteration compute inside the kernel (a skipped chunk records a
+    zero residual).  That is an APPROXIMATE compute saver: with it on,
+    reported n_iters can undercount the exact while_loop semantics, so it
+    is opt-in — the default keeps exact counting parity.
+    Returns (states (T, D), n_iters (), resid (max_iters,)).
+    """
+    T, D = s_u.shape
+    c, dtile = _resolve_tiling(T, D, max_iters, chunk, d_tile)
+    su, eu, pp, x0p = _pad_solve_args(s_u, eps_u, packed_params, x0, c, dtile)
+    states, resid = lrc_deer_megakernel_pallas(
+        su, eu, pp, x0p, n_iters=max_iters, chunk=c, d_tile=dtile, dt=dt,
+        interpret=interpret, valid_rows=T, skip_tol=skip_tol)
+    resid_max = jnp.max(resid[:, :D], axis=1)
+    return (states[:T, :D], tol_iteration_count(resid_max, tol, max_iters),
+            resid_max)
+
+
+# ---------------------------------------------------------------------------
+# shard-composable solve (differentiable)
+# ---------------------------------------------------------------------------
+
+def _sharded_tiling(T_loc: int, D: int, n_iters: int,
+                    chunk: Optional[int], d_tile: Optional[int]):
+    """Tiling for the local T/P slice: explicit values win, otherwise the
+    autotuner — the SAME resolution ``sharded_fused_viable`` uses, so the
+    router's viability answer matches what the solve will actually run."""
+    return _resolve_tiling(T_loc, D, n_iters, chunk, d_tile)
+
+
+def sharded_fused_viable(T: int, mesh, seq_axis,
+                         chunk: Optional[int] = None, *, D: int = 128,
+                         n_iters: int = 10) -> bool:
     """True when ``sharded_lrc_deer_solve`` would actually run SHARDED for
     this (T, mesh, seq_axis): axes present, T divisible by the shard count,
-    local slice a multiple of the adapted chunk. Routing layers
-    (core/block.py) check this so a non-viable fused tier falls to the
-    sharded-lax tier — NOT to the replicated fused solve this entry point
-    itself degrades to for direct callers."""
+    local slice a multiple of the (autotuned or explicit, then adapted)
+    chunk. Routing layers (core/block.py) check this so a non-viable fused
+    tier falls to the next tier rather than silently re-replicating the
+    trajectory."""
     n = n_seq_shards(mesh, seq_axis)
     if n <= 1 or T % n != 0:
         return False
     T_loc = T // n
-    return T_loc % _adapt_chunk(T_loc, chunk) == 0
+    c, _ = _sharded_tiling(T_loc, D, n_iters, chunk, None)
+    return T_loc % c == 0
+
+
+class _ShardedCfg(NamedTuple):
+    mesh: object
+    seq_axis: object
+    n_shards: int
+    n_iters: int
+    chunk: int
+    d_tile: int
+    dt: float
+    interpret: Optional[bool]
+
+
+def _sharded_specs(cfg: _ShardedCfg):
+    t_spec = P(cfg.seq_axis)
+    return t_spec, P(), P()
+
+
+def _sharded_fwd_impl(cfg: _ShardedCfg, su, eu, pp, x0p):
+    t_spec, _, _ = _sharded_specs(cfg)
+    T_loc = su.shape[0] // cfg.n_shards
+
+    def local(su_s, eu_s, pp_r, x0_r):
+        zeros0 = jnp.zeros_like(x0_r)
+
+        def body(_, states_s):
+            left = _left_boundary(states_s, x0_r, cfg.seq_axis, cfg.n_shards)
+            x_shift = jnp.concatenate([left[None], states_s[:-1]], axis=0)
+            b_cum, a_cum = lrc_deer_iteration_pallas(
+                x_shift, su_s, eu_s, pp_r, zeros0, chunk=cfg.chunk,
+                d_tile=cfg.d_tile, dt=cfg.dt, interpret=cfg.interpret,
+                with_cumulative=True)
+            return sharded_scan_fixup(a_cum, b_cum, x0_r, cfg.seq_axis)
+
+        return jax.lax.fori_loop(0, cfg.n_iters, body,
+                                 jnp.zeros((T_loc, su_s.shape[1]),
+                                           su_s.dtype),
+                                 unroll=False)
+
+    return compat.shard_map(
+        local, mesh=cfg.mesh,
+        in_specs=(t_spec, t_spec, P(), P()),
+        out_specs=t_spec,
+        check_vma=False,
+    )(su, eu, pp, x0p)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sharded_fused_solve(cfg: _ShardedCfg, su, eu, pp, x0):
+    return _sharded_fwd_impl(cfg, su, eu, pp, x0)
+
+
+def _sharded_fused_fwd(cfg, su, eu, pp, x0):
+    states = _sharded_fused_solve(cfg, su, eu, pp, x0)
+    return states, (su, eu, pp, x0, states)
+
+
+def _sharded_fused_bwd(cfg, res, gbar):
+    su, eu, pp, x0, states = res
+    t_spec, _, _ = _sharded_specs(cfg)
+
+    def local(su_s, eu_s, pp_r, x0_r, states_s, gbar_s):
+        idx = compat.axis_index(cfg.seq_axis)
+        left = _left_boundary(states_s, x0_r, cfg.seq_axis, cfg.n_shards)
+        shifted = jnp.concatenate([left[None], states_s[:-1]], axis=0)
+        # boundary J for the shifted-left Jacobian: THIS shard's first-row
+        # J travels to the left neighbour (zero past the global end)
+        j0 = lrc_jac_ref(shifted[:1], su_s[:1], eu_s[:1], pp_r, cfg.dt)
+        jR = _right_jac_first(j0, cfg.seq_axis, cfg.n_shards)
+        g0, a_cum = lrc_deer_adjoint_pallas(
+            shifted, su_s, eu_s, pp_r, gbar_s.astype(jnp.float32), jR,
+            chunk=cfg.chunk, d_tile=cfg.d_tile, dt=cfg.dt,
+            interpret=cfg.interpret, with_cumulative=True)
+        g = sharded_scan_fixup(a_cum, g0, None, cfg.seq_axis, reverse=True)
+        _, vjp = jax.vjp(_f32_step(cfg.dt), pp_r, shifted, su_s, eu_s)
+        d_pp, d_xs, d_su, d_eu = vjp(g)
+        d_pp = compat.psum(d_pp, cfg.seq_axis)
+        d_x0 = compat.psum(
+            jnp.where(idx == 0, d_xs[0], jnp.zeros_like(d_xs[0])),
+            cfg.seq_axis)
+        return (d_su.astype(su_s.dtype), d_eu.astype(eu_s.dtype),
+                d_pp.astype(pp_r.dtype), d_x0.astype(x0_r.dtype))
+
+    return compat.shard_map(
+        local, mesh=cfg.mesh,
+        in_specs=(t_spec, t_spec, P(), P(), t_spec, t_spec),
+        out_specs=(t_spec, t_spec, P(), P()),
+        check_vma=False,
+    )(su, eu, pp, x0, states, gbar)
+
+
+_sharded_fused_solve.defvjp(_sharded_fused_fwd, _sharded_fused_bwd)
 
 
 def sharded_lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
                            packed_params: jax.Array, x0: jax.Array, *,
                            mesh, seq_axis="data", n_iters: int = 10,
-                           chunk: int = 256, d_tile: int = 512,
+                           chunk: Optional[int] = None,
+                           d_tile: Optional[int] = None,
                            dt: float = 1.0,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: Optional[bool] = None) -> jax.Array:
     """DEER fixed-point solve with the fused Pallas iteration running on a
     T/P time shard per device, the trajectory sharded over mesh axis (or
     axes tuple) ``seq_axis`` for the whole solve.
@@ -118,49 +382,124 @@ def sharded_lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
     (``core.scan.sharded_scan_fixup``: all-gather of P summaries, exclusive
     prefix, one elementwise apply).
 
-    Same result as ``lrc_deer_solve`` (values only; forward-only like it).
-    Falls back to the replicated ``lrc_deer_solve`` when any ``seq_axis``
-    name is missing from the mesh or T/P is not a positive multiple of the
+    DIFFERENTIABLE: the backward pass is the fused implicit-adjoint kernel
+    on each time shard (gate recompute + exact diagonal J + reverse
+    Hillis-Steele, ``with_cumulative``) composed through the SAME fixup
+    seam in reverse, plus one ppermute for the boundary Jacobian — the
+    shard-level mirror of ``core.deer_sharded.sharded_implicit_adjoint``.
+
+    Same result as ``lrc_deer_solve`` (values AND gradients).  Falls back
+    to the replicated megakernel solve when any ``seq_axis`` name is
+    missing from the mesh or T/P is not a positive multiple of the
     (adapted) chunk.
     """
     T, D = s_u.shape
     n_shards = n_seq_shards(mesh, seq_axis)
-    repl = functools.partial(lrc_deer_solve, n_iters=n_iters, chunk=chunk,
-                             d_tile=d_tile, dt=dt, interpret=interpret)
-    if n_shards <= 1 or T % n_shards != 0:
-        return repl(s_u, eps_u, packed_params, x0)
+    if not sharded_fused_viable(T, mesh, seq_axis, chunk, D=D,
+                                n_iters=n_iters):
+        return lrc_deer_solve(s_u, eps_u, packed_params, x0,
+                              n_iters=n_iters, chunk=chunk, d_tile=d_tile,
+                              dt=dt, interpret=interpret)
     T_loc = T // n_shards
-    c = _adapt_chunk(T_loc, chunk)
-    if T_loc % c != 0:
-        return repl(s_u, eps_u, packed_params, x0)
-
-    dtile = d_tile if D >= d_tile else 128
+    c, dtile = _sharded_tiling(T_loc, D, n_iters, chunk, d_tile)
     su = _pad_axis(s_u, 1, dtile)
     eu = _pad_axis(eps_u, 1, dtile)
     pp = _pad_axis(packed_params, 1, dtile)
     x0p = _pad_axis(x0, 0, dtile)
-    Dp = su.shape[1]
+    cfg = _ShardedCfg(mesh, seq_axis, n_shards, n_iters, c, dtile, dt,
+                      interpret)
+    return _sharded_fused_solve(cfg, su, eu, pp, x0p)[:, :D]
 
-    def local(su_s, eu_s, pp_r, x0_r):
-        zeros0 = jnp.zeros_like(x0_r)
 
-        def body(_, states_s):
-            left = _left_boundary(states_s, x0_r, seq_axis, n_shards)
-            x_shift = jnp.concatenate([left[None], states_s[:-1]], axis=0)
-            b_cum, a_cum = lrc_deer_iteration_pallas(
-                x_shift, su_s, eu_s, pp_r, zeros0, chunk=c, d_tile=dtile,
-                dt=dt, interpret=interpret, with_cumulative=True)
-            return sharded_scan_fixup(a_cum, b_cum, x0_r, seq_axis)
+# ---------------------------------------------------------------------------
+# fused-adjoint hooks for the generic IFT solvers
+# ---------------------------------------------------------------------------
 
-        return jax.lax.fori_loop(0, n_iters, body,
-                                 jnp.zeros((T_loc, Dp), su_s.dtype),
-                                 unroll=False)
+def _fold(x: jax.Array) -> jax.Array:
+    """(T, ...) -> (T, prod(...)): fold trailing batch/state dims into the
+    kernel's channel axis (every kernel quantity is per-channel
+    elementwise, so the fold is exact)."""
+    return x.reshape(x.shape[0], -1)
 
-    t_spec = P(seq_axis)
-    states = compat.shard_map(
-        local, mesh=mesh,
-        in_specs=(t_spec, t_spec, P(), P()),
-        out_specs=t_spec,
-        check_vma=False,
-    )(su, eu, pp, x0p)
-    return states[:, :D]
+
+def _packed_for(params, d_fold: int) -> jax.Array:
+    pp = pack_lrc_params(params)
+    reps = d_fold // pp.shape[1]
+    return jnp.tile(pp, (1, reps)) if reps > 1 else pp
+
+
+def fold_channel_batch(s_u: jax.Array, eps_u: jax.Array, params,
+                       x0: Optional[jax.Array] = None):
+    """Fold a time-major batched problem into the kernels' 2D layout:
+    s_u/eps_u (T, B, S) -> (T, B*S), params dict -> the (10, B*S) tiled
+    packed block, x0 (B, S) -> (B*S,) (None -> zeros).  The single fold
+    used by every batched caller (core/block.py tiers, the lrc LM mixer)
+    — every kernel quantity is per-channel elementwise, so the fold is
+    exact; channel b*S+s carries params[s]."""
+    T = s_u.shape[0]
+    suf, euf = _fold(s_u), _fold(eps_u)
+    pp = _packed_for(params, suf.shape[1])
+    if x0 is None:
+        x0f = jnp.zeros((suf.shape[1],), s_u.dtype)
+    else:
+        x0f = x0.reshape(suf.shape[1])
+    return suf, euf, pp, x0f
+
+
+def make_fused_adjoint_scans(dt: float = 1.0, chunk: Optional[int] = None,
+                             d_tile: Optional[int] = None,
+                             interpret: Optional[bool] = None):
+    """Build the (replicated, sharded) fused-adjoint hooks that replace the
+    jvp + reverse-scan segment of ``core.deer.implicit_adjoint`` /
+    ``core.deer_sharded.sharded_implicit_adjoint`` with the fused reverse
+    kernel, for step functions in the packed-lrc closed form (params dict
+    carrying the ``PACK_ORDER`` keys; feats = (s_u, eps_u); uniform
+    ``dt``).
+
+    Hook protocols (see the solver modules):
+      replicated(shifted, feats, params, gbar)                        -> g
+      sharded(shifted, feats, params, gbar, jac_right, seq_axis)      -> g
+    Shapes may carry trailing batch dims — (T, B, S) folds to (T, B*S).
+    """
+    def _tiling(T, D):
+        return _resolve_tiling(T, D, 1, chunk, d_tile)
+
+    def _padded_adjoint(xs2, su2, eu2, pp, g2, jr, with_cumulative):
+        T, D = xs2.shape
+        c, dtile = _tiling(T, D)
+        xs_p, su_p, eu_p, g_p = (
+            _pad_axis(_pad_axis(a, 0, c), 1, dtile)
+            for a in (xs2, su2, eu2, g2))
+        pp_p = _pad_axis(pp, 1, dtile)
+        jr_p = _pad_axis(jr, 0, dtile)
+        out = lrc_deer_adjoint_pallas(
+            xs_p, su_p, eu_p, pp_p, g_p, jr_p, chunk=c, d_tile=dtile,
+            dt=dt, interpret=interpret, valid_rows=T,
+            with_cumulative=with_cumulative)
+        if with_cumulative:
+            return out[0][:T, :D], out[1][:T, :D]
+        return out[:T, :D]
+
+    def replicated(shifted, feats, params, gbar):
+        su, eu = feats
+        xs2 = _fold(shifted).astype(jnp.float32)
+        g2 = _fold(gbar).astype(jnp.float32)
+        pp = _packed_for(params, xs2.shape[1])
+        g = _padded_adjoint(xs2, _fold(su).astype(jnp.float32),
+                            _fold(eu).astype(jnp.float32), pp, g2,
+                            jnp.zeros((xs2.shape[1],), jnp.float32), False)
+        return g.reshape(gbar.shape).astype(gbar.dtype)
+
+    def sharded(shifted, feats, params, gbar, jac_right, seq_axis):
+        su, eu = feats
+        xs2 = _fold(shifted).astype(jnp.float32)
+        g2 = _fold(gbar).astype(jnp.float32)
+        pp = _packed_for(params, xs2.shape[1])
+        g0, a_cum = _padded_adjoint(
+            xs2, _fold(su).astype(jnp.float32),
+            _fold(eu).astype(jnp.float32), pp, g2,
+            jac_right.reshape(-1).astype(jnp.float32), True)
+        g = sharded_scan_fixup(a_cum, g0, None, seq_axis, reverse=True)
+        return g.reshape(gbar.shape).astype(gbar.dtype)
+
+    return replicated, sharded

@@ -72,3 +72,34 @@ def lrc_deer_solve_ref(s_u, eps_u, packed_params, x0, n_iters: int = 10,
         states = lrc_deer_iteration_ref(x_shift, s_u, eps_u, packed_params,
                                         x0, dt)
     return states
+
+
+def lrc_jac_ref(x_shift, s_u, eps_u, packed_params, dt: float = 1.0):
+    """Exact diagonal Jacobian dF/dx at ``x_shift`` (any (.., D) shape) —
+    one jvp through the closed-form step.  Oracle for the in-kernel
+    analytic J, and the cheap one-row boundary-J producer the sharded
+    fused adjoint ppermutes between time shards."""
+    pp = packed_params.astype(jnp.float32)
+    fn = lambda x: _step(pp, x, s_u.astype(jnp.float32),
+                         eps_u.astype(jnp.float32), dt)
+    _, J = jax.jvp(fn, (x_shift.astype(jnp.float32),),
+                   (jnp.ones_like(x_shift, jnp.float32),))
+    return J
+
+
+def lrc_deer_adjoint_ref(x_shift, s_u, eps_u, packed_params, gbar,
+                         dt: float = 1.0):
+    """Unfused oracle for the fused adjoint kernel: jvp Jacobian at the
+    converged (shifted) trajectory, shift-left, sequential reverse solve of
+    g_t = gbar_t + J_{t+1} * g_{t+1} with zero terminal state."""
+    J = lrc_jac_ref(x_shift, s_u, eps_u, packed_params, dt)
+    jac_next = jnp.concatenate([J[1:], jnp.zeros_like(J[:1])], axis=0)
+
+    def step(g_next, ab):
+        a, b = ab
+        g = a * g_next + b
+        return g, g
+
+    _, g = jax.lax.scan(step, jnp.zeros_like(gbar[0], jnp.float32),
+                        (jac_next, gbar.astype(jnp.float32)), reverse=True)
+    return g.astype(gbar.dtype)

@@ -387,6 +387,12 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
     """DEER solve of the lrc-mixer trajectory. s_u/eps_u: (B, T, di).
     ``x0``: (B, di) initial state (chunked-prefill carry) or None for zero.
 
+    With ``arch.ssm.fused`` the solve routes through the fused Pallas
+    tiers (kernels/lrc_deer): the whole-Newton megakernel (replicated) or
+    the shard-composable per-iteration kernel (sequence-parallel), both
+    with the fused implicit-adjoint backward — so LM training AND prefill
+    hit the kernel roofline, not just inference.
+
     With ``arch.ssm.seq_shard`` and an active mesh carrying a "model" axis
     (the ring-attention convention for the time dimension), the Newton solve
     runs sequence-parallel (core/deer_sharded.py): time over "model", batch
@@ -398,9 +404,10 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
     solve vmapped over the batch.
     """
     B, T = s_u.shape[0], s_u.shape[1]
+    fused = arch.ssm.fused and not arch.exact_hlo
+    mesh = seq_axes = ba = None
     if arch.ssm.seq_shard:
-        from repro.core.deer_sharded import (n_seq_shards,
-                                             sharded_deer_solve)
+        from repro.core.deer_sharded import n_seq_shards
         from repro.distributed import compat
         from repro.distributed.sharding import batch_axes, current_mesh
         mesh = current_mesh()
@@ -415,20 +422,66 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
                              if a in mesh.axis_names)
                 if len(wide) > 1 and T % n_seq_shards(mesh, wide) == 0:
                     seq_axes = wide
-            if T % n_seq_shards(mesh, seq_axes) == 0:
-                xb = (jnp.zeros((B, d_inner), jnp.float32) if x0 is None
-                      else x0.astype(jnp.float32))
-                states, _ = sharded_deer_solve(
-                    step, (jnp.swapaxes(s_u, 0, 1),
-                           jnp.swapaxes(eps_u, 0, 1)),
-                    xb, T, dc, mesh=mesh, seq_axis=seq_axes, params=cell_p,
-                    batch_axes=ba)
-                return jnp.swapaxes(states, 0, 1)
+            if T % n_seq_shards(mesh, seq_axes) != 0:
+                mesh = seq_axes = None
+        else:
+            mesh = None
+
     xb = (jnp.zeros((B, d_inner), jnp.float32) if x0 is None
           else x0.astype(jnp.float32))
+
+    if fused:
+        got = _lrc_fused_trajectory(s_u, eps_u, cell_p, xb, dc,
+                                    mesh=mesh, seq_axes=seq_axes,
+                                    batch_sharded=ba is not None)
+        if got is not None:
+            return got
+
+    if mesh is not None:
+        from repro.core.deer_sharded import sharded_deer_solve
+        fused_scan = None
+        if fused:
+            from repro.kernels.lrc_deer.ops import make_fused_adjoint_scans
+            _, fused_scan = make_fused_adjoint_scans(dt=1.0)
+        states, _ = sharded_deer_solve(
+            step, (jnp.swapaxes(s_u, 0, 1), jnp.swapaxes(eps_u, 0, 1)),
+            xb, T, dc, mesh=mesh, seq_axis=seq_axes, params=cell_p,
+            batch_axes=ba, fused_scan=fused_scan)
+        return jnp.swapaxes(states, 0, 1)
     solve = lambda su, eu, xi: deer_solve(step, (su, eu), xi, T, dc,
                                           params=cell_p)[0]
     return jax.vmap(solve)(s_u, eps_u, xb)
+
+
+def _lrc_fused_trajectory(s_u, eps_u, cell_p, x0, dc: DeerConfig, *,
+                          mesh, seq_axes, batch_sharded: bool):
+    """Fused-kernel route for the lrc mixer: fold the batch into the
+    channel axis ((B, T, di) -> (T, B*di); every kernel quantity is
+    per-channel elementwise) and run the megakernel (replicated) or the
+    shard-composable fused solve (time-sharded, batch replicated).
+
+    Returns None when no fused tier applies — a batch that RIDES SHARDED
+    through the lax solver must not be silently replicated by the channel
+    fold, so that case falls back to the sharded-lax tier."""
+    from repro.kernels.lrc_deer.ops import (fold_channel_batch,
+                                            lrc_deer_solve,
+                                            sharded_fused_viable,
+                                            sharded_lrc_deer_solve)
+    B, T, di = s_u.shape
+    suf, euf, pp, x0f = fold_channel_batch(
+        jnp.swapaxes(s_u, 0, 1), jnp.swapaxes(eps_u, 0, 1), cell_p, x0)
+    if mesh is not None and not batch_sharded:
+        if sharded_fused_viable(T, mesh, seq_axes, D=B * di,
+                                n_iters=dc.max_iters):
+            states = sharded_lrc_deer_solve(
+                suf, euf, pp, x0f, mesh=mesh, seq_axis=seq_axes,
+                n_iters=dc.max_iters)
+            return jnp.swapaxes(states.reshape(T, B, di), 0, 1)
+        return None
+    if mesh is not None:
+        return None
+    states = lrc_deer_solve(suf, euf, pp, x0f, n_iters=dc.max_iters)
+    return jnp.swapaxes(states.reshape(T, B, di), 0, 1)
 
 
 def lrc_mixer_init_state(arch: ArchConfig, batch: int) -> Dict:

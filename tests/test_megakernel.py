@@ -1,0 +1,439 @@
+"""Whole-Newton megakernel, fused implicit-adjoint kernel, and autotune
+layer validation (interpret mode on CPU):
+
+  * megakernel == K x single-iteration kernel == unfused DEER oracle
+    (exact wavefront schedule, incl. nonzero x0 and the padding path);
+  * tol-mode iteration counts from the in-kernel residual reduction match
+    ``core.deer.deer_solve(mode="tol")``;
+  * adjoint kernel parity vs the jvp + reverse-scan reference, and full
+    IFT gradient parity on ALL THREE solver routes: replicated,
+    sharded-lax (+ fused_scan hook), sharded-fused;
+  * autotune cache round-trip + analytic VMEM-budget pruning;
+  * block/mixer fused-tier routing (values AND gradients).
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from repro.core.deer import DeerConfig, deer_solve
+from repro.kernels import autotune
+from repro.kernels.lrc_deer.kernel import (lrc_deer_adjoint_pallas,
+                                           lrc_deer_iteration_pallas,
+                                           lrc_deer_megakernel_pallas)
+from repro.kernels.lrc_deer.ops import (PACK_ORDER, lrc_deer_solve,
+                                        lrc_deer_solve_tol,
+                                        make_fused_adjoint_scans,
+                                        tol_iteration_count)
+from repro.kernels.lrc_deer.ref import (_step, lrc_deer_adjoint_ref,
+                                        lrc_deer_solve_ref)
+
+# the packed-lrc step as a deer_solve StepFn over a params DICT (the form
+# the adjoint hooks pack): identical algebra to kernel/_gates_jac at dt=1
+_CELL_KEYS = PACK_ORDER
+
+
+def _dict_step(x, fs, p):
+    s_u, eps_u = fs
+    s_x = jax.nn.sigmoid(p["a_x"] * x + p["b_x"])
+    f = p["g_max_x"] * s_x + p["g_max_u"] * s_u + p["g_leak"]
+    z = p["k_max_x"] * s_x + p["k_max_u"] * s_u + p["g_leak"]
+    eps = p["w_x"] * x + p["v_x"] + eps_u
+    sig_e = jax.nn.sigmoid(eps)
+    lam = 1.0 - jax.nn.sigmoid(f) * sig_e
+    beta = jnp.tanh(z) * sig_e * p["e_leak"]
+    return lam * x + beta
+
+
+def _rand_packed(D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(PACK_ORDER))
+    rows = []
+    for i, name in enumerate(PACK_ORDER):
+        if name == "g_leak":
+            rows.append(jnp.full((D,), 0.1))
+        elif name == "e_leak":
+            rows.append(jnp.ones((D,)))
+        elif name.startswith(("b_", "v_")):
+            rows.append(jnp.zeros((D,)))
+        else:
+            rows.append(jax.random.normal(ks[i], (D,)) * 0.5)
+    return jnp.stack(rows)
+
+
+def _problem(T, D, seed=1, x0_scale=0.3):
+    pp = _rand_packed(D, seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 100), 4)
+    su = jax.nn.sigmoid(jax.random.normal(ks[0], (T, D)))
+    eu = jax.random.normal(ks[1], (T, D))
+    x0 = jax.random.normal(ks[2], (D,)) * x0_scale
+    gbar = jax.random.normal(ks[3], (T, D))
+    return pp, su, eu, x0, gbar
+
+
+# ---------------------------------------------------------------------------
+# megakernel forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D,K,chunk", [(128, 16, 6, 32), (96, 20, 8, 32),
+                                         (64, 8, 1, 16)])
+def test_megakernel_matches_iterated_kernel_and_oracle(T, D, K, chunk):
+    """The wavefront schedule is a loop-skewed traversal of the SAME
+    iteration space: megakernel == K applications of the single-iteration
+    kernel == the unfused oracle (incl. the T/D padding path)."""
+    pp, su, eu, x0, _ = _problem(T, D)
+    got = lrc_deer_solve(su, eu, pp, x0, n_iters=K, chunk=chunk, d_tile=128)
+    per_iter = lrc_deer_solve(su, eu, pp, x0, n_iters=K, chunk=chunk,
+                              d_tile=128, megakernel=False)
+    want = lrc_deer_solve_ref(su, eu, pp, x0, n_iters=K)
+    np.testing.assert_allclose(got, per_iter, rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_megakernel_skip_tol_stays_converged():
+    """skip_tol > 0 freezes converged chunks; by then the trajectory is at
+    the fixed point, so the final states still match the oracle."""
+    T, D = 128, 16
+    pp, su, eu, x0, _ = _problem(T, D)
+    want = lrc_deer_solve_ref(su, eu, pp, x0, n_iters=20)
+    got = lrc_deer_solve(su, eu, pp, x0, n_iters=20, chunk=32, d_tile=128,
+                         skip_tol=1e-7)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_megakernel_tol_iters_match_deer():
+    """tol-mode iteration counting from the in-kernel residual reduction
+    == the core.deer while_loop trip count, across tol decades."""
+    T, D = 96, 16
+    pp, su, eu, x0, _ = _problem(T, D)
+    step = lambda x, fs, cp: _step(cp, x, fs[0], fs[1], 1.0)
+    for tol in (1e-3, 1e-5, 1e-7):
+        states, n_it, resid = lrc_deer_solve_tol(
+            su, eu, pp, x0, max_iters=15, tol=tol, chunk=32, d_tile=128)
+        ref_states, ref_it = deer_solve(
+            step, (su, eu), x0, T,
+            DeerConfig(max_iters=15, tol=tol, mode="tol", grad="unroll"),
+            params=pp)
+        assert int(n_it) == int(ref_it), (tol, int(n_it), int(ref_it))
+        np.testing.assert_allclose(states, ref_states, rtol=1e-5, atol=1e-5)
+    # counting helper semantics at the edges
+    assert int(tol_iteration_count(jnp.asarray([1.0, 1e-9, 0.0]),
+                                   1e-6, 3)) == 2
+    assert int(tol_iteration_count(jnp.asarray([1.0, 1.0]), 1e-6, 2)) == 2
+
+
+def test_deer_solve_tol_implicit_reports_real_iters():
+    """n_iters reporting is consistent across grad modes: implicit+tol now
+    returns the while_loop trip count, not max_iters."""
+    T, D = 64, 8
+    pp, su, eu, x0, _ = _problem(T, D)
+    step = lambda x, fs, cp: _step(cp, x, fs[0], fs[1], 1.0)
+    cfg = DeerConfig(max_iters=25, tol=1e-4, mode="tol", grad="implicit")
+    _, it_imp = deer_solve(step, (su, eu), x0, T, cfg, params=pp)
+    _, it_unr = deer_solve(step, (su, eu), x0, T,
+                           dataclasses.replace(cfg, grad="unroll"),
+                           params=pp)
+    assert int(it_imp) == int(it_unr) < 25
+
+
+# ---------------------------------------------------------------------------
+# fused adjoint kernel
+# ---------------------------------------------------------------------------
+
+def test_adjoint_kernel_matches_reference():
+    """Fused reverse kernel (gate recompute + analytic J + reverse
+    Hillis-Steele) == the jvp + sequential reverse solve oracle."""
+    T, D = 96, 20          # exercises both T and D padding
+    pp, su, eu, x0, gbar = _problem(T, D)
+    states = lrc_deer_solve_ref(su, eu, pp, x0, n_iters=12)
+    shifted = jnp.concatenate([x0[None], states[:-1]], axis=0)
+    want = lrc_deer_adjoint_ref(shifted, su, eu, pp, gbar)
+
+    pad_d = (-D) % 128
+    pad = lambda a: jnp.pad(a, ((0, 0), (0, pad_d)))
+    got = lrc_deer_adjoint_pallas(
+        pad(shifted), pad(su), pad(eu), jnp.pad(pp, ((0, 0), (0, pad_d))),
+        pad(gbar), jnp.zeros((D + pad_d,)), chunk=32, d_tile=128)[:, :D]
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_solve_grad_matches_deer_implicit():
+    """Replicated route: gradients of the differentiable fused solve
+    (megakernel fwd + adjoint kernel bwd) == deer_solve(grad="implicit")
+    w.r.t. features, packed params AND x0, at fp32 tolerance."""
+    T, D, K = 96, 16, 12
+    pp, su, eu, x0, _ = _problem(T, D)
+    step = lambda x, fs, cp: _step(cp, x, fs[0], fs[1], 1.0)
+
+    def loss_fused(su, eu, pp, x0):
+        s = lrc_deer_solve(su, eu, pp, x0, n_iters=K, chunk=32, d_tile=128)
+        return jnp.sum(jnp.sin(s))
+
+    def loss_ref(su, eu, pp, x0):
+        s, _ = deer_solve(step, (su, eu), x0, T,
+                          DeerConfig(max_iters=K, mode="fixed",
+                                     grad="implicit"), params=pp)
+        return jnp.sum(jnp.sin(s))
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3))(su, eu, pp, x0)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(su, eu, pp, x0)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_implicit_adjoint_fused_scan_hook_replicated():
+    """deer_solve(grad="implicit", fused_scan=hook): identical gradients
+    with the adjoint's jvp + reverse scan replaced by the fused kernel —
+    for the plain (T, D) form AND a trailing-batch (T, B, S) fold."""
+    repl_hook, _ = make_fused_adjoint_scans(dt=1.0, chunk=16, d_tile=128)
+    cfg = DeerConfig(max_iters=10, mode="fixed", grad="implicit")
+    for shape_batch in (None, 3):
+        T, D = 64, 8
+        pp, su, eu, x0, _ = _problem(T, D, seed=7)
+        pd = {k: pp[i] for i, k in enumerate(_CELL_KEYS)}
+        if shape_batch:
+            B = shape_batch
+            su = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0),
+                                                  (T, B, D)))
+            eu = jax.random.normal(jax.random.PRNGKey(1), (T, B, D))
+            x0 = jax.random.normal(jax.random.PRNGKey(2), (B, D)) * 0.3
+
+        def loss(su, eu, pd, x0, hook):
+            s, _ = deer_solve(_dict_step, (su, eu), x0, su.shape[0], cfg,
+                              params=pd, fused_scan=hook)
+            return jnp.sum(jnp.sin(s))
+
+        g_ref = jax.grad(loss, argnums=(0, 1, 2, 3))(su, eu, pd, x0, None)
+        g_hook = jax.grad(loss, argnums=(0, 1, 2, 3))(su, eu, pd, x0,
+                                                      repl_hook)
+        err = jtu.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), g_hook, g_ref)
+        assert max(jtu.tree_leaves(err)) < 2e-4, err
+
+
+def test_sharded_routes_fused_adjoint_parity(run_sub):
+    """Sharded-lax (+ fused_scan hook) and sharded-fused (custom_vjp over
+    the shard-composable solve) gradient parity vs the replicated
+    reference, on an 8-device CPU mesh — the acceptance criterion's three
+    solver routes, backward."""
+    out = run_sub("""
+    import jax.tree_util as jtu
+    from repro.core.deer import DeerConfig, deer_solve
+    from repro.core.deer_sharded import sharded_deer_solve
+    from repro.kernels.lrc_deer.ops import (PACK_ORDER, lrc_deer_solve,
+                                            make_fused_adjoint_scans,
+                                            sharded_lrc_deer_solve)
+
+    def _dict_step(x, fs, p):
+        s_u, eps_u = fs
+        s_x = jax.nn.sigmoid(p["a_x"] * x + p["b_x"])
+        f = p["g_max_x"] * s_x + p["g_max_u"] * s_u + p["g_leak"]
+        z = p["k_max_x"] * s_x + p["k_max_u"] * s_u + p["g_leak"]
+        eps = p["w_x"] * x + p["v_x"] + eps_u
+        sig_e = jax.nn.sigmoid(eps)
+        lam = 1.0 - jax.nn.sigmoid(f) * sig_e
+        beta = jnp.tanh(z) * sig_e * p["e_leak"]
+        return lam * x + beta
+
+    T, D, K = 256, 16, 10
+    ks = jax.random.split(jax.random.PRNGKey(101), len(PACK_ORDER) + 3)
+    rows = []
+    for i, name in enumerate(PACK_ORDER):
+        if name == "g_leak": rows.append(jnp.full((D,), 0.1))
+        elif name == "e_leak": rows.append(jnp.ones((D,)))
+        elif name.startswith(("b_", "v_")): rows.append(jnp.zeros((D,)))
+        else: rows.append(jax.random.normal(ks[i], (D,)) * 0.5)
+    pp = jnp.stack(rows)
+    su = jax.nn.sigmoid(jax.random.normal(ks[-3], (T, D)))
+    eu = jax.random.normal(ks[-2], (T, D))
+    x0 = jax.random.normal(ks[-1], (D,)) * 0.3
+    pd = {k: pp[i] for i, k in enumerate(PACK_ORDER)}
+    mesh = jax.make_mesh((8,), ("data",))
+    dc = DeerConfig(max_iters=K, mode="fixed", grad="implicit")
+    _, sh_hook = make_fused_adjoint_scans(dt=1.0, chunk=16, d_tile=128)
+
+    def loss_ref(su, eu, pd, x0):
+        s, _ = deer_solve(_dict_step, (su, eu), x0, T, dc, params=pd)
+        return jnp.sum(jnp.sin(s))
+
+    def loss_shlax(su, eu, pd, x0):
+        with mesh:
+            s, _ = sharded_deer_solve(_dict_step, (su, eu), x0, T, dc,
+                                      mesh=mesh, seq_axis="data", params=pd,
+                                      fused_scan=sh_hook)
+        return jnp.sum(jnp.sin(s))
+
+    def loss_shfused(su, eu, pd, x0):
+        ppk = jnp.stack([pd[k] for k in PACK_ORDER])
+        with mesh:
+            s = sharded_lrc_deer_solve(su, eu, ppk, x0, mesh=mesh,
+                                       seq_axis="data", n_iters=K,
+                                       chunk=16, d_tile=128)
+        return jnp.sum(jnp.sin(s))
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(su, eu, pd, x0)
+    gl = jax.grad(loss_shlax, argnums=(0, 1, 2, 3))(su, eu, pd, x0)
+    gf = jax.grad(loss_shfused, argnums=(0, 1, 2, 3))(su, eu, pd, x0)
+    mx = lambda a, b: max(jtu.tree_leaves(jtu.tree_map(
+        lambda u, v: float(jnp.max(jnp.abs(u - v))), a, b)))
+    print(json.dumps({"err_shlax": mx(gl, gr), "err_shfused": mx(gf, gr)}))
+    """)
+    assert out["err_shlax"] < 2e-4, out
+    assert out["err_shfused"] < 2e-4, out
+
+
+# ---------------------------------------------------------------------------
+# autotune layer
+# ---------------------------------------------------------------------------
+
+def test_autotune_vmem_pruning():
+    """Every viable tiling fits the budget; a tiny budget prunes to the
+    minimal geometry rather than erroring."""
+    budget = autotune.vmem_budget_bytes()
+    for chunk, d_tile, _ in autotune.viable_tilings(16384, 512, 8):
+        assert autotune.megakernel_vmem_bytes(chunk, d_tile, 8) <= budget
+    assert autotune.viable_tilings(16384, 512, 8, budget=1) == []
+    t = autotune._analytic_pick(16384, 512, 8, budget=1)
+    assert (t.chunk, t.d_tile) == (128, 128)
+
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    """Decision persists across a cold in-memory cache; corrupt cache files
+    degrade gracefully; clear_cache removes the file."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune._mem_cache.clear()
+    t1 = autotune.get_tiling(2048, 256, 8, backend="cpu", measure=False)
+    assert t1.source == "analytic"
+    assert os.path.exists(path)
+    disk = autotune.load_cache(path)
+    assert disk[autotune._cache_key("cpu", 2048, 256, 8)][:2] == [
+        t1.chunk, t1.d_tile]
+    # cold process: file cache hit
+    autotune._mem_cache.clear()
+    t2 = autotune.get_tiling(2048, 256, 8, backend="cpu", measure=False)
+    assert (t2.chunk, t2.d_tile, t2.source) == (t1.chunk, t1.d_tile, "cache")
+    # corrupt file: falls back to recomputing, no crash
+    with open(path, "w") as f:
+        f.write("{not json")
+    autotune._mem_cache.clear()
+    t3 = autotune.get_tiling(2048, 256, 8, backend="cpu", measure=False)
+    assert (t3.chunk, t3.d_tile) == (t1.chunk, t1.d_tile)
+    autotune.clear_cache(path)
+    assert not os.path.exists(path)
+    assert autotune._mem_cache == {}
+
+
+def test_autotune_backed_solve(tmp_path, monkeypatch):
+    """lrc_deer_solve with unset chunk/d_tile resolves through the
+    autotuner and still matches the oracle."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune._mem_cache.clear()
+    T, D = 128, 16
+    pp, su, eu, x0, _ = _problem(T, D)
+    got = lrc_deer_solve(su, eu, pp, x0, n_iters=10)
+    want = lrc_deer_solve_ref(su, eu, pp, x0, n_iters=10)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# routing: block fused tier + lrc LM mixer
+# ---------------------------------------------------------------------------
+
+def test_block_fused_replicated_tier():
+    """LrcSSMConfig(fused=True) with NO mesh routes the replicated
+    megakernel tier: forward AND gradient parity vs the lax block."""
+    from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+    base = LrcSSMConfig(d_input=6, n_classes=2, d_hidden=16, d_state=16,
+                        n_blocks=2,
+                        deer=DeerConfig(max_iters=12, mode="fixed",
+                                        grad="implicit"))
+    fused = dataclasses.replace(base, fused=True)
+    p = init_lrcssm(base, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 96, 6))
+    np.testing.assert_allclose(apply_lrcssm(fused, p, x),
+                               apply_lrcssm(base, p, x),
+                               rtol=1e-5, atol=1e-5)
+    loss = lambda cfg, pp: jnp.sum(jnp.tanh(apply_lrcssm(cfg, pp, x)))
+    g_ref = jax.grad(lambda pp: loss(base, pp))(p)
+    g_f = jax.grad(lambda pp: loss(fused, pp))(p)
+    err = jtu.tree_map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                       g_f, g_ref)
+    assert max(jtu.tree_leaves(err)) < 1e-4, err
+
+
+def test_lrc_mixer_fused_seq_sharded(run_sub):
+    """SSMConfig(fused=True, seq_shard=True) with a batch=1 long sequence
+    on a (2, 4) mesh: the mixer routes the sharded-fused solve over the
+    ("data", "model") tuple axis (the long_500k shape) — forward and
+    training gradients match the replicated unfused mixer."""
+    out = run_sub("""
+    import dataclasses
+    import jax.tree_util as jtu
+    from repro.config import ArchConfig, SSMConfig
+    from repro.models import mixers
+    from repro.distributed import sharding as shd
+    base = ArchConfig(name="t", family="ssm", n_layers=1, d_model=8,
+                      n_heads=2, n_kv_heads=2, d_ff=16, vocab=64,
+                      ssm=SSMConfig(kind="lrc", deer_iters=6),
+                      dtype=jnp.float32, param_dtype=jnp.float32)
+    fused = dataclasses.replace(base, ssm=dataclasses.replace(
+        base.ssm, fused=True, seq_shard=True))
+    p = mixers.lrc_mixer_init(base, jax.random.PRNGKey(0))
+    h = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 8))
+    want, _ = mixers.lrc_mixer_apply(p, base, h)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with shd.use_mesh(mesh):
+        got = jax.jit(lambda pp, hh: mixers.lrc_mixer_apply(
+            pp, fused, hh)[0])(p, h)
+    loss = lambda a, pp: jnp.sum(jnp.tanh(
+        mixers.lrc_mixer_apply(pp, a, h)[0]))
+    g_ref = jax.grad(lambda pp: loss(base, pp))(p)
+    with shd.use_mesh(mesh):
+        g_f = jax.jit(jax.grad(lambda pp: loss(fused, pp)))(p)
+    gerr = max(jtu.tree_leaves(jtu.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_f, g_ref)))
+    print(json.dumps({"fwd": float(jnp.max(jnp.abs(got - want))),
+                      "grad": gerr}))
+    """)
+    assert out["fwd"] < 1e-4, out
+    assert out["grad"] < 2e-4, out
+
+
+def test_lrc_mixer_fused_route():
+    """SSMConfig(fused=True): full-sequence forward, training gradients and
+    prefill-from-carried-state all match the unfused mixer."""
+    from repro.config import ArchConfig, SSMConfig
+    from repro.models import mixers
+    arch = ArchConfig(name="t", family="ssm", n_layers=1, d_model=8,
+                      n_heads=2, n_kv_heads=2, d_ff=16, vocab=64,
+                      ssm=SSMConfig(kind="lrc", deer_iters=8),
+                      dtype=jnp.float32, param_dtype=jnp.float32)
+    arch_f = dataclasses.replace(
+        arch, ssm=dataclasses.replace(arch.ssm, fused=True))
+    p = mixers.lrc_mixer_init(arch, jax.random.PRNGKey(2))
+    h = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 8))
+    o_ref, _ = mixers.lrc_mixer_apply(p, arch, h)
+    o_f, _ = mixers.lrc_mixer_apply(p, arch_f, h)
+    np.testing.assert_allclose(o_f, o_ref, rtol=1e-5, atol=1e-5)
+
+    loss = lambda a, pp: jnp.sum(jnp.tanh(
+        mixers.lrc_mixer_apply(pp, a, h)[0]))
+    g_ref = jax.grad(lambda pp: loss(arch, pp))(p)
+    g_f = jax.grad(lambda pp: loss(arch_f, pp))(p)
+    err = jtu.tree_map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                       g_f, g_ref)
+    assert max(jtu.tree_leaves(err)) < 1e-4, err
+
+    st = mixers.lrc_mixer_init_state(arch, 2)
+    st["ssm"] = jax.random.normal(jax.random.PRNGKey(4),
+                                  st["ssm"].shape) * 0.3
+    o_pr, s_r = mixers.lrc_mixer_apply(p, arch, h, state=st, prefill_len=50)
+    o_pf, s_f = mixers.lrc_mixer_apply(p, arch_f, h, state=st,
+                                       prefill_len=50)
+    np.testing.assert_allclose(o_pf, o_pr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s_f["ssm"], s_r["ssm"], rtol=1e-5, atol=1e-5)

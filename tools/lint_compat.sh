@@ -24,11 +24,21 @@ alias_pattern='(^|[^.[:alnum:]_])lax\.(psum|pmax|pmin|pmean|all_gather|ppermute|
 alias_hits=$(grep -rn --include='*.py' -E "$alias_pattern" src tests benchmarks examples 2>/dev/null \
          | grep -v 'src/repro/distributed/compat\.py' || true)
 
-if [ -n "$hits" ] || [ -n "$alias_hits" ]; then
+# Kernel-layer guard: src/repro/kernels must never spell shard_map except
+# through compat.shard_map — Pallas kernels are the lowest layer and any
+# direct jax shard_map import there would dodge both the version-portability
+# shim AND the solver-level seam (sharded composition belongs to the ops
+# wrappers via core.scan.sharded_scan_fixup, not inside kernel bodies).
+kernel_pattern='(^|[^.[:alnum:]_])shard_map[[:space:]]*\(|import[^#]*[[:space:]]shard_map'
+kernel_hits=$(grep -rnE --include='*.py' "$kernel_pattern" src/repro/kernels 2>/dev/null \
+         | grep -v 'compat\.shard_map' || true)
+
+if [ -n "$hits" ] || [ -n "$alias_hits" ] || [ -n "$kernel_hits" ]; then
   echo "compat-contract violation: shard_map / raw collectives referenced" >&2
   echo "outside src/repro/distributed/compat.py (route through compat.*):" >&2
   [ -n "$hits" ] && echo "$hits" >&2
   [ -n "$alias_hits" ] && echo "$alias_hits" >&2
+  [ -n "$kernel_hits" ] && { echo "kernels/ shard_map guard:" >&2; echo "$kernel_hits" >&2; }
   exit 1
 fi
 echo "compat lint OK: all shard_map/collective call sites route through distributed/compat.py"
