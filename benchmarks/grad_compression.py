@@ -15,7 +15,7 @@ LM, BOTH gradient-reduction modes:
 Per mode it reports the jitted step wall time AND cross-pod gradient
 bytes-on-wire, two ways: the analytic per-device accounting
 (``distributed/compression.reduction_wire_bytes``) and the per-op HLO
-collective inventory (``roofline.collective_ops_from_hlo``) so the
+collective inventory (``repro.contracts.collective_ops_from_hlo``) so the
 analytic number is auditable against what XLA actually lowered. The
 summary row asserts-by-reporting the acceptance ratio: explicit-int8
 moves >= 3x fewer cross-pod gradient bytes than gspmd-fp32 at the
@@ -52,11 +52,11 @@ def _inner() -> None:
     from repro.config import ShapeConfig, TrainConfig
     from repro.configs import get_reduced
     from repro.distributed import sharding as shd
+    from repro.contracts import collective_ops_from_hlo, ring_wire_bytes
     from repro.distributed.compression import (reduction_wire_bytes,
                                                tree_elems)
     from repro.launch.specs import make_batch
     from repro.models import build_model
-    from repro.roofline import collective_ops_from_hlo
     from repro.train.state import train_state_init
     from repro.train.step import jit_train_step
 
@@ -101,16 +101,6 @@ def _inner() -> None:
         # shard-sized but numerous — bytes, not op counts, are comparable.
         intra = N_DEV // N_POD
 
-        def ring_wire(op):
-            """Per-device wire bytes for one op (ring accounting, same
-            factors as roofline.collective_bytes_from_hlo)."""
-            g = op["group"]
-            if op["kind"] == "all-reduce":
-                return 2 * op["bytes"] * (g - 1) / g
-            if op["kind"] == "reduce-scatter":
-                return op["bytes"] * (g - 1)
-            return op["bytes"] * (g - 1) / g     # all-gather, all-to-all
-
         cross = [o for o in ops if o["group"] != intra]
         hlo = {
             "cross_pod_f32_bytes": sum(o["bytes"] for o in cross
@@ -121,7 +111,10 @@ def _inner() -> None:
                                        if o["group"] == intra
                                        and o["dtype"] == "f32"),
         }
-        measured = int(sum(ring_wire(o) for o in cross))
+        # ring wire accounting shared with the contract layer
+        # (repro.contracts.ring_wire_bytes — same factors the roofline
+        # collective term uses)
+        measured = int(sum(ring_wire_bytes(o) for o in cross))
         rows.append({"name": name, "us_per_step": us,
                      "cross_pod_grad_bytes": wire,
                      "cross_pod_wire_measured": measured,

@@ -12,7 +12,7 @@ Per row: tokens/s over generated tokens, p50/p99 per-token decode latency,
 p50 admission (prefill) latency. The ``speedup`` row records the
 continuous/one-at-a-time tokens/s ratio and the ``meets_2x`` flag (the PR-4
 acceptance bar). A further ``prefill_parallel`` row asserts — at the jaxpr
-level, via ``roofline.sequential_loop_lengths`` — that chunk prefill
+level, via ``repro.contracts.check_lowering`` — that chunk prefill
 contains NO length-T sequential scan (the parallel-solver-lowering
 acceptance check) and records the loop lengths it does contain.
 
@@ -74,8 +74,8 @@ def main() -> None:
     import numpy as np
 
     from repro.configs import get_reduced
+    from repro.contracts import check_lowering
     from repro.models import build_model
-    from repro.roofline import sequential_loop_lengths
 
     toy = os.environ.get("SERVE_TOY") == "1"
     n_req, p_len, max_new, slots, chunk = TOY if toy else (
@@ -115,22 +115,27 @@ def main() -> None:
     print(f"speedup,0,continuous_over_serial={speedup:.2f};"
           f"meets_2x={speedup >= 2.0}", flush=True)
 
-    # parallel-prefill lowering check: no sequential scan of length T
+    # parallel-prefill lowering contract: no sequential scan of length T
+    # (the same declarative clause tests/test_serve.py and the CI contract
+    # suite evaluate — repro.contracts.check_lowering)
     T = chunk
     arch32 = dataclasses.replace(arch, dtype=jnp.float32)
     m32 = build_model(arch32)
     cache = m32.init_cache(params, 1, max_seq)
-    lens = sequential_loop_lengths(
-        lambda p, t, c: m32.prefill(p, t, c, T), params,
-        jnp.zeros((1, T), jnp.int32), cache)
-    parallel = T not in lens and -1 not in lens
+    report = check_lowering(
+        lambda p, t, c: m32.prefill(p, t, c, T),
+        (params, jnp.zeros((1, T), jnp.int32), cache),
+        forbid_sequential_loop_over=T)
+    lens = report.loop_lengths or set()
     rows.append({"name": "prefill_parallel", "chunk_T": T,
                  "seq_loop_lengths": sorted(lens),
-                 "no_length_T_scan": bool(parallel)})
-    print(f"prefill_parallel,0,no_length_T_scan={parallel};"
+                 "no_length_T_scan": bool(report.ok),
+                 "violations": [v.to_json() for v in report.violations]})
+    print(f"prefill_parallel,0,no_length_T_scan={report.ok};"
           f"loop_lengths={sorted(lens)}", flush=True)
-    assert parallel, (
-        f"prefill lowered a sequential loop of prompt length: {sorted(lens)}")
+    assert report.ok, (
+        f"prefill lowering contract violated: "
+        f"{[v.message for v in report.violations]}")
 
     out = os.environ.get("BENCH_JSON_OUT")
     if out:

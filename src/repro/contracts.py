@@ -1,0 +1,462 @@
+"""Declarative lowering contracts: structural assertions on what a jax
+function COMPILES TO, checked per commit instead of per incident.
+
+The codebase's scaling claims are contracts on the lowered artifact, not
+on Python source:
+
+  * serve prefill lowers with NO sequential loop of prompt length
+    (the parallel-prefill acceptance check, tests/test_serve.py);
+  * the explicit-int8 gradient path emits NO gradient-sized fp32
+    cross-pod collective (tests/test_train_engine.py);
+  * the whole-Newton megakernel moves a bounded number of (T, D)-sized
+    HBM streams per solve (benchmarks/kernels.py).
+
+This module gives those assertions one API. The low-level introspection
+primitives — ``sequential_loop_lengths`` (jaxpr scan/while walker) and
+``collective_ops_from_hlo`` / ``collective_bytes_from_hlo`` (optimized-HLO
+collective inventory with ring wire accounting) — live here and are
+re-exported by ``repro.roofline`` for its roofline model. On top of them,
+``check_lowering(fn, args, ...)`` evaluates a declarative contract and
+returns STRUCTURED violations (never asserts itself), so tests,
+benchmarks and the CI contract suite (tools/contract_suite.py) all share
+one vocabulary and one JSON shape.
+
+The companion source-level layer is the AST rule engine in
+``tools/repro_lint`` (compat-collective routing, host-sync detection,
+...); docs/static_analysis.md documents both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Union
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+
+# ---------------------------------------------------------------------------
+# structured violations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One structured contract violation.
+
+    ``contract`` names the clause that fired (``"sequential-loop"``,
+    ``"unbounded-loop"``, ``"forbidden-collective"``,
+    ``"collective-bytes"``, ``"stream-budget"``, ``"lowering-error"``);
+    ``message`` is the human line; ``detail`` carries the machine-readable
+    evidence (loop length, the offending HLO op record, byte counts...).
+    """
+    contract: str
+    message: str
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        """Plain-dict form for JSON reports."""
+        return {"contract": self.contract, "message": self.message,
+                "detail": self.detail}
+
+
+@dataclasses.dataclass
+class LoweringReport:
+    """Result of ``check_lowering``: the evidence plus any violations.
+
+    ``loop_lengths`` / ``collectives`` / ``collective_wire_bytes`` are
+    populated only for the clauses the contract actually requested (e.g. a
+    loops-only contract never compiles the function).
+    """
+    violations: List[Violation]
+    loop_lengths: Optional[Set[int]] = None
+    collectives: Optional[List[Dict[str, Any]]] = None
+    collective_wire_bytes: Optional[Dict[str, int]] = None
+
+    @property
+    def ok(self) -> bool:
+        """True when every requested contract clause held."""
+        return not self.violations
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-serialisable form (sets become sorted lists)."""
+        return {
+            "ok": self.ok,
+            "violations": [v.to_json() for v in self.violations],
+            "loop_lengths": (sorted(self.loop_lengths)
+                             if self.loop_lengths is not None else None),
+            "collectives": self.collectives,
+            "collective_wire_bytes": self.collective_wire_bytes,
+        }
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level sequential-depth introspection
+# ---------------------------------------------------------------------------
+
+def sequential_loop_lengths(fn, *args) -> set:
+    """Trip counts of every ``lax.scan`` in ``fn``'s jaxpr, recursively
+    (scan bodies, pjit calls, cond branches, custom-vjp wrappers, ...).
+    Unbounded ``lax.while_loop``s are recorded as ``-1``.
+
+    This is the parallel-prefill acceptance check, asserted at the jaxpr
+    level where loop trip counts are structural: a token-by-token prefill
+    would show up as a scan of length T, while the parallel solver paths
+    lower to associative scans (log-depth slices, no scan primitive) plus
+    short carries — Newton iterations, scan-chunk carries, layer groups —
+    whose lengths are all independent of T.
+    """
+    import jax
+
+    out: set = set()
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                out.add(int(eqn.params["length"]))
+            elif eqn.primitive.name == "while":
+                out.add(-1)
+            for v in eqn.params.values():
+                for sub in _jaxprs_in(v):
+                    walk(sub)
+
+    def _jaxprs_in(v):
+        core = jax.core
+        if isinstance(v, core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, core.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from _jaxprs_in(item)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# optimized-HLO collective inventory
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\((?:[^)]*)\)|[\w\[\],{}]+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|collective-permute-start)"
+    r"\b(.*)$",
+    re.MULTILINE)
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line_rest: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line_rest)
+    if m:
+        return int(m.group(2))            # [n_groups, group_size]<=[total]
+    m = _GROUPS_BRACE_RE.search(line_rest)
+    if m:
+        return m.group(1).count(",") + 1
+    return 1
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of one HLO shape string like 'bf16[128,1024]{1,0}' or a
+    tuple '(f32[2,4], u32[])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_ops_from_hlo(hlo_text: str):
+    """Per-OP collective inventory from optimized HLO text: one record per
+    (component of a) collective result, ``{kind, dtype, elems, bytes,
+    group}``. This is what the pod-local gradient tests assert on — e.g.
+    "the compressed explicit path lowers NO fp32 all-reduce/all-gather
+    larger than N elements" (tests/test_train_engine.py) — and what
+    benchmarks/grad_compression.py reports next to the analytic
+    ``reduction_wire_bytes`` accounting."""
+    ops = []
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
+        kind = kind.replace("-start", "")
+        g = max(_group_size(rest), 1)
+        for sm in _SHAPE_RE.finditer(shape_str):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            ops.append({"kind": kind, "dtype": dt, "elems": n,
+                        "bytes": n * _DTYPE_BYTES[dt], "group": g})
+    return ops
+
+
+def ring_wire_bytes(op: Dict[str, Any]) -> float:
+    """Per-device wire bytes for ONE collective-op record (ring-algorithm
+    accounting; group size g from the op's replica_groups):
+
+      all-gather         : bytes * (g-1)/g      (bytes = gathered tensor)
+      all-reduce         : 2 * bytes * (g-1)/g
+      reduce-scatter     : bytes * (g-1)        (bytes = 1/g of input)
+      all-to-all         : bytes * (g-1)/g
+      collective-permute : bytes
+    """
+    g = max(op["group"], 1)
+    if op["kind"] == "all-reduce":
+        return 2 * op["bytes"] * (g - 1) / g
+    if op["kind"] == "reduce-scatter":
+        return op["bytes"] * (g - 1)
+    if op["kind"] == "collective-permute":
+        return float(op["bytes"])
+    return op["bytes"] * (g - 1) / g          # all-gather, all-to-all
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-chip WIRE bytes per collective kind from the optimized HLO
+    (``ring_wire_bytes`` accounting summed over the op inventory)."""
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
+        kind = kind.replace("-start", "")
+        op = {"kind": kind, "bytes": _shape_bytes(shape_str),
+              "group": max(_group_size(rest), 1)}
+        out[kind] = out.get(kind, 0) + int(ring_wire_bytes(op))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# declarative contract clauses
+# ---------------------------------------------------------------------------
+
+def _as_lengths(spec: Union[int, Iterable[int]]) -> Set[int]:
+    if isinstance(spec, int):
+        return {int(spec)}
+    return {int(s) for s in spec}
+
+
+def check_jaxpr_loops(fn, args: Sequence[Any], *,
+                      forbid_lengths: Union[int, Iterable[int]] = (),
+                      forbid_unbounded: bool = True,
+                      ) -> "tuple[Set[int], List[Violation]]":
+    """Loop clause: trace ``fn(*args)`` and flag forbidden scan trip
+    counts. ``forbid_lengths`` is one length (typically the sequence
+    length T) or an iterable; ``forbid_unbounded`` also flags
+    ``lax.while_loop``s (recorded as length -1 — data-dependent trip
+    counts can hide a sequential sweep from the length check).
+    Returns ``(all observed lengths, violations)``."""
+    lens = sequential_loop_lengths(fn, *args)
+    bad = _as_lengths(forbid_lengths)
+    violations = [
+        Violation("sequential-loop",
+                  f"jaxpr contains a sequential loop of forbidden length {L}",
+                  {"length": L, "observed_lengths": sorted(lens)})
+        for L in sorted(bad & lens)]
+    if forbid_unbounded and -1 in lens:
+        violations.append(Violation(
+            "unbounded-loop",
+            "jaxpr contains an unbounded while_loop (length -1)",
+            {"observed_lengths": sorted(lens)}))
+    return lens, violations
+
+
+def _op_matches(op: Dict[str, Any], spec: Dict[str, Any]) -> bool:
+    """True when ``op`` (a collective_ops_from_hlo record) matches every
+    constraint in ``spec``: {kind?, dtype?, min_elems?, min_bytes?,
+    min_group?}."""
+    if "kind" in spec and op["kind"] != spec["kind"]:
+        return False
+    if "dtype" in spec and op["dtype"] != spec["dtype"]:
+        return False
+    if "min_elems" in spec and op["elems"] <= spec["min_elems"]:
+        return False
+    if "min_bytes" in spec and op["bytes"] <= spec["min_bytes"]:
+        return False
+    if "min_group" in spec and op["group"] < spec["min_group"]:
+        return False
+    return True
+
+
+def check_hlo_collectives(hlo_text: str, *,
+                          forbid: Optional[Sequence[Dict[str, Any]]] = None,
+                          max_wire_bytes: Optional[Union[int, Dict[str, int]]]
+                          = None,
+                          ) -> "tuple[List[Dict[str, Any]], List[Violation]]":
+    """Collective clause, on ALREADY-COMPILED optimized HLO text.
+
+    ``forbid`` is a list of match specs — an op violates when it matches
+    every key of any spec. E.g. the pod-local gradient contract
+    "no gradient-sized fp32 collective" is
+    ``forbid=[{"dtype": "f32", "min_elems": 16384}]``.
+
+    ``max_wire_bytes`` caps ring-accounted wire bytes: an int caps the
+    total across kinds, a dict caps per kind (``{"all-reduce": 0}``
+    forbids all-reduce entirely).
+
+    Returns ``(op inventory, violations)``.
+    """
+    ops = collective_ops_from_hlo(hlo_text)
+    violations: List[Violation] = []
+    for spec in (forbid or []):
+        for op in ops:
+            if _op_matches(op, spec):
+                violations.append(Violation(
+                    "forbidden-collective",
+                    f"HLO lowers a forbidden collective: {op['kind']} "
+                    f"{op['dtype']}[{op['elems']}] group={op['group']}",
+                    {"op": op, "spec": spec}))
+    if max_wire_bytes is not None:
+        wire: Dict[str, int] = {}
+        for op in ops:
+            wire[op["kind"]] = wire.get(op["kind"], 0) \
+                + int(ring_wire_bytes(op))
+        if isinstance(max_wire_bytes, dict):
+            for kind, cap in max_wire_bytes.items():
+                got = wire.get(kind, 0)
+                if got > cap:
+                    violations.append(Violation(
+                        "collective-bytes",
+                        f"{kind} wire bytes {got} exceed cap {cap}",
+                        {"kind": kind, "wire_bytes": got, "cap": cap}))
+        else:
+            total = sum(wire.values())
+            if total > max_wire_bytes:
+                violations.append(Violation(
+                    "collective-bytes",
+                    f"total collective wire bytes {total} exceed cap "
+                    f"{max_wire_bytes}",
+                    {"wire_bytes": total, "cap": int(max_wire_bytes),
+                     "per_kind": wire}))
+    return ops, violations
+
+
+def check_lowering(fn: Callable, args: Sequence[Any], *,
+                   forbid_sequential_loop_over:
+                   Optional[Union[int, Iterable[int]]] = None,
+                   allow_unbounded_loops: bool = False,
+                   forbid_collectives:
+                   Optional[Sequence[Dict[str, Any]]] = None,
+                   max_collective_bytes:
+                   Optional[Union[int, Dict[str, int]]] = None,
+                   hlo_text: Optional[str] = None,
+                   ) -> LoweringReport:
+    """Evaluate a declarative lowering contract against ``fn(*args)``.
+
+    Clauses (any subset; only the requested artifacts are produced):
+
+      forbid_sequential_loop_over=T   no ``lax.scan`` of trip count T (or
+                                      any length in an iterable) in the
+                                      jaxpr; unbounded while_loops also
+                                      violate unless
+                                      ``allow_unbounded_loops=True``.
+      forbid_collectives=[spec, ...]  no collective op in the OPTIMIZED
+                                      HLO matching a spec ({kind?, dtype?,
+                                      min_elems?, min_bytes?, min_group?}).
+      max_collective_bytes=N | {kind: N}
+                                      ring-accounted wire-byte cap.
+
+    The collective clauses need compiled HLO: ``fn`` is jitted and
+    compiled unless ``hlo_text`` is supplied (pass it when the caller
+    already holds ``compiled.as_text()`` — e.g. a train step built under a
+    mesh context). Lowering failures surface as a ``lowering-error``
+    violation rather than raising, so contract suites can report them.
+
+    Returns a :class:`LoweringReport`; callers assert ``report.ok`` and
+    get structured ``report.violations`` on failure.
+    """
+    violations: List[Violation] = []
+    lens: Optional[Set[int]] = None
+    ops: Optional[List[Dict[str, Any]]] = None
+    wire: Optional[Dict[str, int]] = None
+
+    if forbid_sequential_loop_over is not None:
+        try:
+            lens, loop_v = check_jaxpr_loops(
+                fn, args, forbid_lengths=forbid_sequential_loop_over,
+                forbid_unbounded=not allow_unbounded_loops)
+            violations += loop_v
+        except Exception as e:                    # pragma: no cover - env
+            violations.append(Violation(
+                "lowering-error", f"jaxpr tracing failed: {e!r}",
+                {"stage": "trace"}))
+
+    if forbid_collectives is not None or max_collective_bytes is not None:
+        try:
+            if hlo_text is None:
+                import jax
+                hlo_text = jax.jit(fn).lower(*args).compile().as_text()
+            wire = collective_bytes_from_hlo(hlo_text)
+            ops, coll_v = check_hlo_collectives(
+                hlo_text, forbid=forbid_collectives,
+                max_wire_bytes=max_collective_bytes)
+            violations += coll_v
+        except Exception as e:
+            violations.append(Violation(
+                "lowering-error", f"compilation failed: {e!r}",
+                {"stage": "compile"}))
+
+    return LoweringReport(violations=violations, loop_lengths=lens,
+                          collectives=ops, collective_wire_bytes=wire)
+
+
+# ---------------------------------------------------------------------------
+# kernel HBM-stream budget (the benchmarks/kernels.py acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def check_stream_budget(n_iters: int, impl: str, *,
+                        baseline: Optional[str] = None,
+                        min_ratio: Optional[float] = None,
+                        max_streams: Optional[float] = None,
+                        ) -> LoweringReport:
+    """HBM-stream clause over the ANALYTIC kernel-schedule roofline
+    (``kernels.autotune.solver_hbm_streams``): how many (T, D)-sized HBM
+    streams a K-iteration solve moves.
+
+    ``max_streams`` caps ``impl``'s stream count; ``min_ratio`` (with
+    ``baseline``) demands ``streams(baseline) / streams(impl) >=
+    min_ratio`` — the megakernel's interpret-host acceptance bar
+    (>= 2.5x fewer streams than the per-iteration kernel). The counts are
+    schedule properties, hardware-independent; wall-clock is the measured
+    companion signal recorded next to this check in BENCH_kernels.json.
+    """
+    from repro.kernels.autotune import solver_hbm_streams
+
+    streams = solver_hbm_streams(n_iters, impl)
+    detail: Dict[str, Any] = {"impl": impl, "n_iters": n_iters,
+                              "streams": streams}
+    violations: List[Violation] = []
+    if max_streams is not None and streams > max_streams:
+        violations.append(Violation(
+            "stream-budget",
+            f"{impl} moves {streams:.1f} (T,D) HBM streams "
+            f"> budget {max_streams}",
+            dict(detail, budget=max_streams)))
+    if min_ratio is not None:
+        if baseline is None:
+            raise ValueError("min_ratio requires a baseline impl")
+        base = solver_hbm_streams(n_iters, baseline)
+        ratio = base / max(streams, 1e-12)
+        detail.update(baseline=baseline, baseline_streams=base, ratio=ratio)
+        if ratio < min_ratio:
+            violations.append(Violation(
+                "stream-budget",
+                f"stream ratio {baseline}/{impl} = {ratio:.2f} "
+                f"< required {min_ratio}",
+                dict(detail, required_ratio=min_ratio)))
+    return LoweringReport(violations=violations)

@@ -7,167 +7,29 @@ Three terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e:
     collective = collective_bytes     / (chips * n_links * 50e9 B/s link)
 
 HLO_FLOPs / bytes come from compiled.cost_analysis(). collective_bytes is
-NOT in cost_analysis: we parse the optimized HLO (compiled.as_text()) and
-sum the operand sizes of every all-gather / all-reduce / reduce-scatter /
-all-to-all / collective-permute op, attributing each op's bytes to the
-devices in its replica groups. MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D
-(MoE) gives the useful-compute ratio that exposes remat/dispatch waste.
+NOT in cost_analysis: the optimized-HLO collective inventory
+(``repro.contracts.collective_bytes_from_hlo`` — the introspection
+primitives live in the declarative contracts module and are re-exported
+here) sums the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, attributing each
+op's bytes to the devices in its replica groups. MODEL_FLOPS = 6*N*D
+(dense) or 6*N_active*D (MoE) gives the useful-compute ratio that exposes
+remat/dispatch waste.
 """
 from __future__ import annotations
 
-import re
 from typing import Any, Dict, Optional
 
 import numpy as np
 
 from repro.config import HW, ArchConfig, ShapeConfig
+# Back-compat re-exports: these moved to repro.contracts (the declarative
+# lowering-contract API built on top of them); existing imports from
+# repro.roofline keep working.
+from repro.contracts import (collective_bytes_from_hlo,   # noqa: F401
+                             collective_ops_from_hlo,
+                             sequential_loop_lengths)
 from repro.distributed import compat
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16,
-}
-
-
-# ---------------------------------------------------------------------------
-# jaxpr-level sequential-depth introspection
-# ---------------------------------------------------------------------------
-
-def sequential_loop_lengths(fn, *args) -> set:
-    """Trip counts of every ``lax.scan`` in ``fn``'s jaxpr, recursively
-    (scan bodies, pjit calls, cond branches, custom-vjp wrappers, ...).
-    Unbounded ``lax.while_loop``s are recorded as ``-1``.
-
-    This is the parallel-prefill acceptance check, asserted at the jaxpr
-    level where loop trip counts are structural: a token-by-token prefill
-    would show up as a scan of length T, while the parallel solver paths
-    lower to associative scans (log-depth slices, no scan primitive) plus
-    short carries — Newton iterations, scan-chunk carries, layer groups —
-    whose lengths are all independent of T.
-    """
-    import jax
-
-    out: set = set()
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "scan":
-                out.add(int(eqn.params["length"]))
-            elif eqn.primitive.name == "while":
-                out.add(-1)
-            for v in eqn.params.values():
-                for sub in _jaxprs_in(v):
-                    walk(sub)
-
-    def _jaxprs_in(v):
-        core = jax.core
-        if isinstance(v, core.ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, core.Jaxpr):
-            yield v
-        elif isinstance(v, (tuple, list)):
-            for item in v:
-                yield from _jaxprs_in(item)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return out
-
-_COLLECTIVE_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
-    r"(\((?:[^)]*)\)|[\w\[\],{}]+)\s*"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
-    r"all-gather-start|all-reduce-start|collective-permute-start)"
-    r"\b(.*)$",
-    re.MULTILINE)
-
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-
-
-def _group_size(line_rest: str) -> int:
-    m = _GROUPS_IOTA_RE.search(line_rest)
-    if m:
-        return int(m.group(2))            # [n_groups, group_size]<=[total]
-    m = _GROUPS_BRACE_RE.search(line_rest)
-    if m:
-        return m.group(1).count(",") + 1
-    return 1
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    """Total bytes of one HLO shape string like 'bf16[128,1024]{1,0}' or a
-    tuple '(f32[2,4], u32[])'."""
-    total = 0
-    for m in _SHAPE_RE.finditer(shape_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_ops_from_hlo(hlo_text: str):
-    """Per-OP collective inventory from optimized HLO text: one record per
-    (component of a) collective result, ``{kind, dtype, elems, bytes,
-    group}``. This is what the pod-local gradient tests assert on — e.g.
-    "the compressed explicit path lowers NO fp32 all-reduce/all-gather
-    larger than N elements" (tests/test_train_engine.py) — and what
-    benchmarks/grad_compression.py reports next to the analytic
-    ``reduction_wire_bytes`` accounting."""
-    ops = []
-    for m in _COLLECTIVE_RE.finditer(hlo_text):
-        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
-        kind = kind.replace("-start", "")
-        g = max(_group_size(rest), 1)
-        for sm in _SHAPE_RE.finditer(shape_str):
-            dt, dims = sm.group(1), sm.group(2)
-            if dt not in _DTYPE_BYTES:
-                continue
-            n = 1
-            if dims:
-                for d in dims.split(","):
-                    if d:
-                        n *= int(d)
-            ops.append({"kind": kind, "dtype": dt, "elems": n,
-                        "bytes": n * _DTYPE_BYTES[dt], "group": g})
-    return ops
-
-
-def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
-    """Per-chip WIRE bytes per collective kind from the optimized HLO.
-
-    Ring-algorithm accounting per op (group size g from replica_groups —
-    both explicit {{...}} and iota [n,g]<=[N] forms):
-      all-gather         : output * (g-1)/g      (output = gathered tensor)
-      all-reduce         : 2 * output * (g-1)/g
-      reduce-scatter     : output * (g-1)        (output = 1/g of input)
-      all-to-all         : output * (g-1)/g
-      collective-permute : output
-    """
-    out: Dict[str, int] = {}
-    for m in _COLLECTIVE_RE.finditer(hlo_text):
-        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
-        kind = kind.replace("-start", "")
-        nbytes = _shape_bytes(shape_str)
-        g = max(_group_size(rest), 1)
-        if kind == "all-reduce":
-            wire = 2 * nbytes * (g - 1) / max(g, 1)
-        elif kind == "reduce-scatter":
-            wire = nbytes * (g - 1)
-        elif kind == "collective-permute":
-            wire = nbytes
-        else:  # all-gather, all-to-all
-            wire = nbytes * (g - 1) / max(g, 1)
-        out[kind] = out.get(kind, 0) + int(wire)
-    return out
 
 
 def model_flops(arch: ArchConfig, shape: ShapeConfig,

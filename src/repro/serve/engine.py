@@ -136,7 +136,9 @@ class ServeEngine:
             valid = min(C, L - ci * C)
             logits, frag = self._prefill(self.params, chunk, frag,
                                          jnp.asarray(valid, jnp.int32))
-        first_tok = int(jnp.argmax(logits[0, valid - 1]))
+        # deliberate host boundary: one sync per ADMISSION (not per step) —
+        # the first token feeds host-side slot bookkeeping and callbacks
+        first_tok = int(jnp.argmax(logits[0, valid - 1]))  # repro-lint: disable=host-sync
         return frag, first_tok
 
     def _emit(self, req: Request, tok: int) -> bool:

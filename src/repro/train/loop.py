@@ -134,7 +134,8 @@ class Trainer:
                 ckpt_step = bool(self.tcfg.checkpoint_every) and \
                     self.step % self.tcfg.checkpoint_every == 0
                 if log_step or ckpt_step:
-                    # the only host syncs in the loop
+                    # the only host syncs in the loop (log/ckpt cadence,
+                    # never per step)  # repro-lint: disable=host-sync
                     loss = float(jax.block_until_ready(loss))
                     self._materialise_history()
                 straggler = False

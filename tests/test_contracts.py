@@ -1,0 +1,258 @@
+"""Tests for the declarative lowering-contract API (repro.contracts).
+
+Each clause gets a deliberate-violation toy (MUST produce a structured
+violation) and a clean variant (MUST pass) — the same must-fire /
+must-stay-silent discipline as the AST-linter fixtures, one level down
+the stack (jaxpr / optimized HLO instead of source text).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.contracts import (LoweringReport, Violation, check_hlo_collectives,
+                             check_jaxpr_loops, check_lowering,
+                             check_stream_budget, collective_bytes_from_hlo,
+                             collective_ops_from_hlo, ring_wire_bytes)
+
+T = 64
+
+
+# ------------------------------------------------------------- loop clause
+
+
+def _scan_cumsum(x):
+    """Deliberately sequential: a lax.scan of trip count T."""
+    def step(c, xt):
+        c = c + xt
+        return c, c
+    _, ys = jax.lax.scan(step, jnp.zeros(x.shape[1:]), x)
+    return ys
+
+
+def _parallel_cumsum(x):
+    """The parallel spelling of the same function (no scan primitive)."""
+    return jnp.cumsum(x, axis=0)
+
+
+class TestLoopClause:
+    def test_scan_over_T_violates(self):
+        x = jnp.ones((T, 4))
+        report = check_lowering(_scan_cumsum, (x,),
+                                forbid_sequential_loop_over=T)
+        assert not report.ok
+        assert [v.contract for v in report.violations] == ["sequential-loop"]
+        assert report.violations[0].detail["length"] == T
+        assert T in report.loop_lengths
+
+    def test_parallel_variant_passes(self):
+        x = jnp.ones((T, 4))
+        report = check_lowering(_parallel_cumsum, (x,),
+                                forbid_sequential_loop_over=T)
+        assert report.ok and report.violations == []
+        assert T not in report.loop_lengths
+
+    def test_non_T_scan_passes_and_is_reported(self):
+        # a short carry (length K != T) is allowed but must be visible
+        def f(x):
+            carry = jax.lax.scan(lambda c, _: (c + 1.0, c), 0.0, None,
+                                 length=8)[1]
+            return carry.sum() + x.sum()
+        report = check_lowering(f, (jnp.ones((T, 4)),),
+                                forbid_sequential_loop_over=T)
+        assert report.ok
+        assert 8 in report.loop_lengths
+
+    def test_unbounded_while_violates_by_default(self):
+        def f(x):
+            return jax.lax.while_loop(lambda c: c[0] < 10,
+                                      lambda c: (c[0] + 1, c[1] * 2),
+                                      (0, x))[1]
+        report = check_lowering(f, (jnp.ones(4),),
+                                forbid_sequential_loop_over=T)
+        assert not report.ok
+        assert report.violations[0].contract == "unbounded-loop"
+        assert -1 in report.loop_lengths
+
+    def test_unbounded_while_allowed_when_opted_in(self):
+        def f(x):
+            return jax.lax.while_loop(lambda c: c[0] < 10,
+                                      lambda c: (c[0] + 1, c[1] * 2),
+                                      (0, x))[1]
+        report = check_lowering(f, (jnp.ones(4),),
+                                forbid_sequential_loop_over=T,
+                                allow_unbounded_loops=True)
+        assert report.ok
+
+    def test_multiple_forbidden_lengths(self):
+        x = jnp.ones((T, 4))
+        lens, violations = check_jaxpr_loops(
+            _scan_cumsum, (x,), forbid_lengths=(T, 999))
+        assert lens == {T}
+        assert len(violations) == 1
+
+    def test_trace_failure_is_structured_not_raised(self):
+        report = check_lowering(lambda x: x @ x, (jnp.ones((3, 4)),),
+                                forbid_sequential_loop_over=T)
+        assert not report.ok
+        assert report.violations[0].contract == "lowering-error"
+
+
+# ------------------------------------------- collective clause (real HLO)
+
+
+class TestCollectiveClause:
+    def test_fp32_psum_violates_and_clean_int8_variant_passes(self, run_sub):
+        # a shard_map'd fp32 psum over a gradient-sized tensor MUST
+        # produce a forbidden-collective violation; the int8-payload
+        # variant of the same reduction (all_gather of quantized shards)
+        # MUST pass the same clause — exercised on a real 8-device
+        # compiled HLO through compat (never raw jax.lax)
+        out = run_sub("""
+            from jax.sharding import PartitionSpec as P
+            from repro.contracts import check_lowering
+            from repro.distributed import compat
+
+            mesh = jax.make_mesh((8,), ("data",))
+            N = 65536            # > the 16384-elem contract threshold
+
+            def fp32_reduce(x):
+                f = compat.shard_map(
+                    lambda s: compat.psum(s, "data"), mesh=mesh,
+                    in_specs=P("data"), out_specs=P())
+                return f(x)
+
+            def int8_payload(x):
+                def shard_fn(s):
+                    q = jnp.clip(jnp.round(s * 127.0), -127, 127)
+                    return compat.all_gather(q.astype(jnp.int8), "data")
+                f = compat.shard_map(shard_fn, mesh=mesh,
+                                     in_specs=P("data"), out_specs=P(None),
+                                     check_vma=False)
+                return f(x)
+
+            FORBID = [{"dtype": "f32", "min_elems": 16384}]
+            x = jnp.ones((8 * N,), jnp.float32)
+            bad = check_lowering(fp32_reduce, (x,), forbid_collectives=FORBID)
+            good = check_lowering(int8_payload, (x,),
+                                  forbid_collectives=FORBID)
+            print(json.dumps({
+                "bad_ok": bad.ok,
+                "bad_contracts": sorted({v.contract
+                                         for v in bad.violations}),
+                "bad_has_f32": any(v.detail["op"]["dtype"] == "f32"
+                                   for v in bad.violations),
+                "good_ok": good.ok,
+                "good_kinds": sorted({o["kind"] for o in good.collectives}),
+            }))
+        """)
+        assert out["bad_ok"] is False
+        assert out["bad_contracts"] == ["forbidden-collective"]
+        assert out["bad_has_f32"] is True
+        assert out["good_ok"] is True
+        assert "all-gather" in out["good_kinds"]
+
+
+# ------------------------------------------ HLO parsing unit tests (fast)
+
+
+HLO = """\
+HloModule toy
+ENTRY main {
+  %ar = f32[65536]{0} all-reduce(f32[65536]{0} %p0), replica_groups={{0,1,2,3}}
+  %ag = s8[1024,64]{1,0} all-gather(s8[256,64]{1,0} %p1), replica_groups=[2,4]<=[8]
+  %cp = bf16[128]{0} collective-permute(bf16[128]{0} %p2), source_target_pairs={{0,1}}
+}
+"""
+
+
+class TestHloParsing:
+    def test_inventory(self):
+        ops = collective_ops_from_hlo(HLO)
+        by_kind = {o["kind"]: o for o in ops}
+        assert by_kind["all-reduce"] == {
+            "kind": "all-reduce", "dtype": "f32", "elems": 65536,
+            "bytes": 262144, "group": 4}
+        assert by_kind["all-gather"]["dtype"] == "s8"
+        assert by_kind["all-gather"]["elems"] == 1024 * 64
+        assert by_kind["all-gather"]["group"] == 4
+        assert by_kind["collective-permute"]["bytes"] == 256
+
+    def test_forbid_spec_matches_all_keys(self):
+        _, v = check_hlo_collectives(
+            HLO, forbid=[{"dtype": "f32", "min_elems": 16384}])
+        assert len(v) == 1 and v[0].detail["op"]["kind"] == "all-reduce"
+        # same dtype but a threshold above the op's size: no violation
+        _, v = check_hlo_collectives(
+            HLO, forbid=[{"dtype": "f32", "min_elems": 65536}])
+        assert v == []
+        # kind-only spec catches the int8 gather too
+        _, v = check_hlo_collectives(HLO, forbid=[{"kind": "all-gather"}])
+        assert len(v) == 1
+
+    def test_wire_byte_caps(self):
+        wire = collective_bytes_from_hlo(HLO)
+        # ring accounting: all-reduce 2*b*(g-1)/g, all-gather b*(g-1)/g
+        assert wire["all-reduce"] == int(2 * 262144 * 3 / 4)
+        assert wire["all-gather"] == int(65536 * 3 / 4)
+        assert wire["collective-permute"] == 256
+        _, v = check_hlo_collectives(HLO, max_wire_bytes={"all-reduce": 0})
+        assert [x.contract for x in v] == ["collective-bytes"]
+        _, v = check_hlo_collectives(HLO, max_wire_bytes=10**9)
+        assert v == []
+
+    def test_ring_wire_bytes_factors(self):
+        op = {"kind": "reduce-scatter", "bytes": 100, "group": 4}
+        assert ring_wire_bytes(op) == 300
+        op = {"kind": "all-to-all", "bytes": 100, "group": 4}
+        assert ring_wire_bytes(op) == 75
+
+    def test_no_collectives_no_violations(self):
+        ops, v = check_hlo_collectives("ENTRY main { ROOT %r = f32[] add }",
+                                       forbid=[{"dtype": "f32"}])
+        assert ops == [] and v == []
+
+
+# ------------------------------------------------------- stream budget
+
+
+class TestStreamBudget:
+    def test_megakernel_meets_ratio(self):
+        report = check_stream_budget(8, "mega", baseline="fused_iter",
+                                     min_ratio=2.5)
+        assert report.ok
+
+    def test_per_iteration_kernel_fails_same_bar(self):
+        report = check_stream_budget(8, "fused_iter", baseline="lax",
+                                     min_ratio=2.5)
+        assert not report.ok
+        assert report.violations[0].contract == "stream-budget"
+        assert report.violations[0].detail["ratio"] < 2.5
+
+    def test_max_streams_cap(self):
+        assert check_stream_budget(8, "mega", max_streams=4.0).ok
+        assert not check_stream_budget(8, "lax", max_streams=4.0).ok
+
+    def test_min_ratio_requires_baseline(self):
+        with pytest.raises(ValueError):
+            check_stream_budget(8, "mega", min_ratio=2.5)
+
+
+# --------------------------------------------------------------- plumbing
+
+
+class TestReportShape:
+    def test_json_roundtrip(self):
+        rep = LoweringReport(
+            violations=[Violation("sequential-loop", "msg", {"length": 5})],
+            loop_lengths={5, 2})
+        d = rep.to_json()
+        assert d["ok"] is False
+        assert d["loop_lengths"] == [2, 5]
+        assert d["violations"][0]["contract"] == "sequential-loop"
+
+    def test_loops_only_contract_never_compiles(self):
+        # a loops-only contract must not populate collective artifacts
+        report = check_lowering(_parallel_cumsum, (jnp.ones((T, 4)),),
+                                forbid_sequential_loop_over=T)
+        assert report.collectives is None
+        assert report.collective_wire_bytes is None

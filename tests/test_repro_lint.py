@@ -1,0 +1,281 @@
+"""Self-test fixture corpus for the AST rule engine (tools/repro_lint).
+
+Every rule gets (at least) one violating snippet that MUST fire and one
+clean snippet that MUST stay silent — so a refactor of the engine can't
+silently lobotomize a rule — plus suppression-comment and wrapper tests.
+Snippets are linted in-memory via ``lint_source`` at a relpath chosen to
+land inside the rule's scope (the rules are path-scoped: host-sync only
+watches hot paths, kernels-shard-map only src/repro/kernels/, ...).
+
+The closing test lints the ACTUAL repo tree and requires zero findings —
+the "clean on current tree while every rule demonstrably fires" bar.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from tools.repro_lint import lint_source, run_lint  # noqa: E402
+from tools.repro_lint.rules import ALL_RULES  # noqa: E402
+
+
+def lint(src, relpath="src/repro/train/x.py"):
+    """Lint a dedented snippet at a path inside the hot-path scope."""
+    return lint_source(textwrap.dedent(src), relpath, ALL_RULES)
+
+
+def rules_fired(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------- compat
+
+
+class TestCompatCollective:
+    def test_direct_lax_import_fires(self):
+        fs = lint("from jax.lax import psum\n")
+        assert rules_fired(fs) == {"compat-collective"}
+
+    def test_parenthesized_multiline_import_fires(self):
+        # the grep-era false negative: names on continuation lines
+        fs = lint("""\
+            from jax.lax import (
+                psum,
+                all_gather,
+            )
+        """)
+        assert len([f for f in fs if f.rule == "compat-collective"]) == 2
+
+    def test_aliased_module_usage_fires(self):
+        fs = lint("""\
+            import jax.lax as jl
+            def f(x):
+                return jl.psum(x, "data")
+        """)
+        assert "compat-collective" in rules_fired(fs)
+
+    def test_shard_map_import_fires(self):
+        fs = lint("from jax.experimental.shard_map import shard_map\n")
+        assert "compat-collective" in rules_fired(fs)
+
+    def test_new_api_attribute_fires(self):
+        fs = lint("""\
+            import jax
+            f = jax.shard_map(lambda x: x, mesh=None, in_specs=None,
+                              out_specs=None)
+        """)
+        assert "compat-collective" in rules_fired(fs)
+
+    def test_compat_import_is_clean(self):
+        fs = lint("""\
+            from repro.distributed.compat import psum, shard_map
+            import jax.numpy as jnp
+            def f(x):
+                return psum(jnp.sum(x), "data")
+        """)
+        assert fs == []
+
+    def test_compat_module_itself_exempt(self):
+        fs = lint("from jax.lax import psum\n",
+                  relpath="src/repro/distributed/compat.py")
+        assert fs == []
+
+    def test_unrelated_lax_import_is_clean(self):
+        fs = lint("from jax.lax import scan, associative_scan\n")
+        assert fs == []
+
+
+class TestKernelsShardMap:
+    def test_any_shard_map_spelling_in_kernels_fires(self):
+        fs = lint("from jax.experimental.shard_map import shard_map\n",
+                  relpath="src/repro/kernels/k.py")
+        assert "kernels-shard-map" in rules_fired(fs)
+
+    def test_compat_shard_map_in_kernels_is_clean(self):
+        fs = lint("""\
+            from repro.distributed import compat
+            def f(fn, mesh, spec):
+                return compat.shard_map(fn, mesh=mesh, in_specs=spec,
+                                        out_specs=spec)
+        """, relpath="src/repro/kernels/k.py")
+        assert fs == []
+
+    def test_out_of_scope_path_ignored(self):
+        # the kernels rule must not fire outside src/repro/kernels/
+        fs = lint("""\
+            from repro.distributed.compat import shard_map
+            g = shard_map
+        """, relpath="benchmarks/b.py")
+        assert fs == []
+
+
+# -------------------------------------------------------------- host-sync
+
+
+class TestHostSync:
+    def test_item_fires(self):
+        fs = lint("""\
+            def step(loss):
+                return loss.item()
+        """)
+        assert rules_fired(fs) == {"host-sync"}
+
+    def test_device_get_fires(self):
+        fs = lint("""\
+            import jax
+            def step(x):
+                return jax.device_get(x)
+        """)
+        assert "host-sync" in rules_fired(fs)
+
+    def test_float_of_traced_fires(self):
+        fs = lint("""\
+            import jax.numpy as jnp
+            def step(x):
+                return float(jnp.sum(x))
+        """)
+        assert "host-sync" in rules_fired(fs)
+
+    def test_np_asarray_of_traced_fires(self):
+        fs = lint("""\
+            import numpy as np
+            import jax.numpy as jnp
+            def step(x):
+                return np.asarray(jnp.sum(x))
+        """)
+        assert "host-sync" in rules_fired(fs)
+
+    def test_host_side_numpy_is_clean(self):
+        # float()/np.asarray() over plain-python/numpy values: no finding
+        fs = lint("""\
+            import numpy as np
+            def bookkeeping(xs):
+                a = float(np.mean(xs))
+                return np.asarray(xs, dtype=np.int32), a
+        """)
+        assert fs == []
+
+    def test_cold_path_ignored(self):
+        fs = lint("def f(loss):\n    return loss.item()\n",
+                  relpath="src/repro/configs.py")
+        assert fs == []
+
+
+# ------------------------------------------------------- pallas/interpret
+
+
+class TestPallasAndInterpret:
+    def test_pallas_call_outside_kernels_fires(self):
+        fs = lint("""\
+            from jax.experimental import pallas as pl
+            def f(kernel, x):
+                return pl.pallas_call(kernel, out_shape=x)(x)
+        """, relpath="src/repro/core/c.py")
+        assert "pallas-call-outside-kernels" in rules_fired(fs)
+
+    def test_pallas_call_inside_kernels_is_clean(self):
+        fs = lint("""\
+            from jax.experimental import pallas as pl
+            def f(kernel, x):
+                return pl.pallas_call(kernel, out_shape=x)(x)
+        """, relpath="src/repro/kernels/lrc_deer/kernel.py")
+        assert fs == []
+
+    def test_hardcoded_interpret_true_fires(self):
+        fs = lint("""\
+            def f(call):
+                return call(interpret=True)
+        """, relpath="src/repro/kernels/k.py")
+        assert "hardcoded-interpret" in rules_fired(fs)
+
+    def test_plumbed_interpret_is_clean(self):
+        fs = lint("""\
+            def f(call, interpret):
+                return call(interpret=interpret)
+        """, relpath="src/repro/kernels/k.py")
+        assert fs == []
+
+
+# ------------------------------------------------------------ suppression
+
+
+class TestSuppression:
+    def test_same_line_suppression(self):
+        fs = lint("""\
+            def step(loss):
+                return loss.item()  # repro-lint: disable=host-sync
+        """)
+        assert fs == []
+
+    def test_line_above_suppression(self):
+        fs = lint("""\
+            def step(loss):
+                # repro-lint: disable=host-sync
+                return loss.item()
+        """)
+        assert fs == []
+
+    def test_file_level_suppression(self):
+        fs = lint("""\
+            # repro-lint: disable-file=host-sync
+            def step(loss):
+                return loss.item()
+        """)
+        assert fs == []
+
+    def test_suppression_is_rule_specific(self):
+        # suppressing one rule must not silence a different one
+        fs = lint("""\
+            def step(loss):
+                return loss.item()  # repro-lint: disable=compat-collective
+        """)
+        assert "host-sync" in rules_fired(fs)
+
+    def test_syntax_error_reported_not_raised(self):
+        fs = lint("def broken(:\n")
+        assert [f.rule for f in fs] == ["syntax-error"]
+
+
+# ----------------------------------------------------------- end-to-end
+
+
+class TestTree:
+    def test_repo_tree_is_clean(self):
+        # the acceptance bar: zero findings on the actual tree with every
+        # rule enabled (while the fixtures above prove each rule fires)
+        findings, n_files = run_lint(root=REPO)
+        assert n_files > 50
+        assert findings == [], "\n".join(f.human() for f in findings)
+
+    def test_cli_module_exit_zero_on_tree(self):
+        r = subprocess.run([sys.executable, "-m", "tools.repro_lint"],
+                           cwd=REPO, capture_output=True, text=True,
+                           timeout=120)
+        assert r.returncode == 0, r.stdout + r.stderr
+
+    def test_wrapper_script_passes(self):
+        # satellite: lint_compat.sh is now a thin wrapper over the engine
+        r = subprocess.run(["bash", "tools/lint_compat.sh"], cwd=REPO,
+                           capture_output=True, text=True, timeout=120)
+        assert r.returncode == 0, r.stdout + r.stderr
+
+    def test_cli_catches_planted_violation(self, tmp_path):
+        # a planted tree with a parenthesized multi-line import (the
+        # grep-era miss) must exit 1 through the same CLI CI invokes
+        pkg = tmp_path / "src"
+        pkg.mkdir()
+        (pkg / "bad.py").write_text(
+            "from jax.lax import (\n    psum,\n)\n")
+        r = subprocess.run(
+            [sys.executable, "-m", "tools.repro_lint", "--root",
+             str(tmp_path), "--format", "json"],
+            cwd=REPO, capture_output=True, text=True, timeout=120)
+        assert r.returncode == 1
+        assert "compat-collective" in r.stdout

@@ -256,15 +256,19 @@ def test_slot_budget_and_recycling(mamba_model):
 
 def test_prefill_parallel_lowering(mamba_model):
     """The prefill jaxpr contains NO sequential loop of prompt length — the
-    chunk lowers through parallel solver paths (acceptance criterion)."""
+    chunk lowers through parallel solver paths (acceptance criterion),
+    asserted through the declarative contract API (repro.contracts); the
+    CI contract suite (tools/contract_suite.py) checks the same clause."""
     arch, model, params = mamba_model
-    from repro.roofline import sequential_loop_lengths
+    from repro.contracts import check_lowering
     T = 32
     cache = model.init_cache(params, 1, 2 * T)
-    lens = sequential_loop_lengths(
-        lambda p, t, c: model.prefill(p, t, c, T), params,
-        jnp.zeros((1, T), jnp.int32), cache)
-    assert T not in lens and -1 not in lens, sorted(lens)
+    report = check_lowering(
+        lambda p, t, c: model.prefill(p, t, c, T),
+        (params, jnp.zeros((1, T), jnp.int32), cache),
+        forbid_sequential_loop_over=T)
+    assert report.ok, report.to_json()
+    assert report.loop_lengths is not None and T not in report.loop_lengths
 
 
 # ---------------------------------------------------------------------------

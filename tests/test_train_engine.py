@@ -193,13 +193,15 @@ def test_compressed_explicit_hlo_has_no_fp32_pod_allreduce(run_sub):
     the lowered HLO contains NO gradient-sized fp32 cross-pod collective —
     the only payload-sized collectives are int8 all-gathers (+ tiny fp32
     per-block scales) — while the gspmd baseline on the same mesh lowers
-    gradient-sized fp32 all-reduces."""
+    gradient-sized fp32 all-reduces. Asserted through the declarative
+    contract API (repro.contracts.check_hlo_collectives) — the same clause
+    the CI contract suite (tools/contract_suite.py) evaluates per commit."""
     out = run_sub("""
         from repro.configs import get_reduced
         from repro.models import build_model
         from repro.launch.specs import make_batch
         from repro.config import ShapeConfig, TrainConfig
-        from repro.roofline import collective_ops_from_hlo
+        from repro.contracts import check_hlo_collectives
         from repro.train.state import train_state_init
         from repro.train.step import jit_train_step
         from repro.distributed import sharding as shd
@@ -213,6 +215,7 @@ def test_compressed_explicit_hlo_has_no_fp32_pod_allreduce(run_sub):
                            jax.random.PRNGKey(1))
         mesh = jax.make_mesh((8,), ("pod",))   # every collective is cross-pod
         THRESH = 16384   # >> per-block scales (n/256), << any grad leaf
+        NO_BIG_F32 = [{"dtype": "f32", "min_elems": THRESH}]
 
         def collectives(mode, comp):
             tcfg = TrainConfig(warmup_steps=0, grad_reduce=mode,
@@ -222,18 +225,17 @@ def test_compressed_explicit_hlo_has_no_fp32_pod_allreduce(run_sub):
                 jstep = jit_train_step(model, tcfg, mesh, state, batch,
                                        donate=False)
                 txt = jstep.lower(state, batch).compile().as_text()
-            return collective_ops_from_hlo(txt)
+            return check_hlo_collectives(txt, forbid=NO_BIG_F32)
 
-        comp_ops = collectives("explicit", "int8")
-        base_ops = collectives("gspmd", "none")
-        big_f32_comp = [o for o in comp_ops
-                        if o["dtype"] == "f32" and o["elems"] > THRESH]
-        big_f32_base = [o for o in base_ops
-                        if o["dtype"] == "f32" and o["elems"] > THRESH]
+        comp_ops, comp_violations = collectives("explicit", "int8")
+        base_ops, base_violations = collectives("gspmd", "none")
         int8_payload = [o for o in comp_ops if o["dtype"] == "s8"]
-        print(json.dumps({"big_f32_compressed": len(big_f32_comp),
-                          "big_f32_gspmd": len(big_f32_base),
-                          "int8_gathers": len(int8_payload)}))
+        print(json.dumps({
+            "big_f32_compressed": len(comp_violations),
+            "compressed_violations": [v.to_json()["message"]
+                                      for v in comp_violations],
+            "big_f32_gspmd": len(base_violations),
+            "int8_gathers": len(int8_payload)}))
     """)
     assert out["big_f32_compressed"] == 0, out
     assert out["big_f32_gspmd"] > 0, out       # the baseline DOES all-reduce fp32

@@ -1,0 +1,3 @@
+"""Repo tooling: static analysis (repro_lint), contract suite, doc
+coverage. Package marker so ``python -m tools.repro_lint`` works from the
+repo root."""

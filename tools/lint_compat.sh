@@ -2,43 +2,24 @@
 # ROADMAP distributed-layer contract lint (enforced by CI, runnable locally):
 #
 #   ALL shard_map and collective call sites must resolve through
-#   src/repro/distributed/compat.py — never either jax spelling directly
-#   (jax.shard_map moved modules and renamed its kwarg across the supported
-#   0.4.30 -> current range), and never the raw jax.lax.* collectives the
-#   shard_map bodies compose with (one distribution API surface to patch).
+#   src/repro/distributed/compat.py — never either jax spelling directly —
+#   and src/repro/kernels must never spell shard_map except through
+#   compat.shard_map.
+#
+# This script is now a THIN WRAPPER over the AST rule engine
+# (tools/repro_lint), which replaced the old grep: alias resolution makes
+# the check spelling-complete — `import jax.lax as jl; jl.psum(...)` and
+# the parenthesized multi-line `from jax.lax import (\n    psum, ...)`
+# form the line-regex grep missed both resolve to the same qualified name.
+# Stdlib-only: runs on a bare runner before any dependency install.
 #
 # Usage: bash tools/lint_compat.sh   (exits non-zero on any violation)
+# Full rule set + JSON reports: python -m tools.repro_lint --help
+# (see docs/static_analysis.md for the rule catalog)
 set -u
 cd "$(dirname "$0")/.."
 
-pattern='jax\.shard_map|jax\.experimental\.shard_map|from jax\.experimental import shard_map|jax\.lax\.(psum|pmax|pmin|pmean|all_gather|ppermute|psum_scatter|axis_index)\b'
-hits=$(grep -rn --include='*.py' -E "$pattern" src tests benchmarks examples 2>/dev/null \
-         | grep -v 'src/repro/distributed/compat\.py' || true)
-
-# ALSO reject the aliased spellings of the psum-family collectives that the
-# jax.lax.* pattern above misses: `from jax import lax; lax.psum(...)` and
-# `from jax.lax import psum`. The pod-local gradient engine (train/step.py)
-# made the explicit-collective surface much larger, so the grep has to be
-# spelling-complete — any of these bypasses the single-patch-point contract.
-alias_pattern='(^|[^.[:alnum:]_])lax\.(psum|pmax|pmin|pmean|all_gather|ppermute|psum_scatter|axis_index)[[:space:]]*\(|from jax\.lax import[^#]*(psum|pmax|pmin|pmean|all_gather|ppermute|psum_scatter|axis_index)'
-alias_hits=$(grep -rn --include='*.py' -E "$alias_pattern" src tests benchmarks examples 2>/dev/null \
-         | grep -v 'src/repro/distributed/compat\.py' || true)
-
-# Kernel-layer guard: src/repro/kernels must never spell shard_map except
-# through compat.shard_map — Pallas kernels are the lowest layer and any
-# direct jax shard_map import there would dodge both the version-portability
-# shim AND the solver-level seam (sharded composition belongs to the ops
-# wrappers via core.scan.sharded_scan_fixup, not inside kernel bodies).
-kernel_pattern='(^|[^.[:alnum:]_])shard_map[[:space:]]*\(|import[^#]*[[:space:]]shard_map'
-kernel_hits=$(grep -rnE --include='*.py' "$kernel_pattern" src/repro/kernels 2>/dev/null \
-         | grep -v 'compat\.shard_map' || true)
-
-if [ -n "$hits" ] || [ -n "$alias_hits" ] || [ -n "$kernel_hits" ]; then
-  echo "compat-contract violation: shard_map / raw collectives referenced" >&2
-  echo "outside src/repro/distributed/compat.py (route through compat.*):" >&2
-  [ -n "$hits" ] && echo "$hits" >&2
-  [ -n "$alias_hits" ] && echo "$alias_hits" >&2
-  [ -n "$kernel_hits" ] && { echo "kernels/ shard_map guard:" >&2; echo "$kernel_hits" >&2; }
-  exit 1
-fi
-echo "compat lint OK: all shard_map/collective call sites route through distributed/compat.py"
+PY=$(command -v python3 || command -v python) || {
+  echo "lint_compat: no python interpreter found" >&2; exit 2; }
+exec "$PY" -m tools.repro_lint \
+  --rules compat-collective,kernels-shard-map "$@"

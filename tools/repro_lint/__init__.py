@@ -1,0 +1,12 @@
+"""repro-lint: AST rule engine enforcing the repo's source-level
+contracts (compat-collective routing, kernels-shard_map isolation,
+no-host-sync hot paths, pallas-call containment, no hardcoded
+interpret=True).
+
+Run ``python -m tools.repro_lint`` from the repo root; the companion
+lowered-artifact layer is ``repro.contracts`` + ``tools/contract_suite.py``.
+See docs/static_analysis.md for the rule catalog and suppression syntax.
+"""
+from tools.repro_lint.engine import (Finding, lint_source,  # noqa: F401
+                                     report_json, run_lint)
+from tools.repro_lint.rules import ALL_RULES  # noqa: F401

@@ -1,0 +1,7 @@
+"""``python -m tools.repro_lint`` entry point."""
+import sys
+
+from tools.repro_lint.engine import main
+
+if __name__ == "__main__":
+    sys.exit(main())

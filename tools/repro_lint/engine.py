@@ -1,0 +1,266 @@
+"""repro-lint engine: file walking, import-alias resolution, suppression
+handling, and JSON/human reporting.
+
+Pure stdlib (ast + re) by design: the ``lint-compat`` CI entry point runs
+before any dependency install, and ``tools/lint_compat.sh`` execs into
+this engine. Rules live in :mod:`tools.repro_lint.rules`.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+#: directories linted when no paths are given (mirrors the old grep lint)
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w\-, ]+)")
+_FILE_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable-file=([\w\-, ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation: ``rule`` at ``path:line:col`` with a message."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def to_json(self) -> Dict[str, object]:
+        """Plain-dict form for the JSON report."""
+        return dataclasses.asdict(self)
+
+    def human(self) -> str:
+        """One ``path:line:col: rule: message`` diagnostic line."""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule sees for one file: the parsed AST, the
+    import-alias table (local name -> fully-qualified dotted path), the
+    repo-relative posix path, and the raw source lines."""
+    relpath: str
+    tree: ast.AST
+    aliases: Dict[str, str]
+    lines: List[str]
+
+
+def build_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map every imported local name to its fully-qualified dotted path,
+    walking ALL import statements (module- and function-level):
+
+      import jax                  -> {"jax": "jax"}
+      import jax.lax as jl        -> {"jl": "jax.lax"}
+      from jax import lax         -> {"lax": "jax.lax"}
+      from jax.lax import (psum,
+                           pmax)  -> {"psum": "jax.lax.psum", ...}
+
+    The parenthesized multi-line form resolves identically to the single
+    line form — the false negative the old line-regex grep had.
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.asname:
+                    aliases[alias.asname] = alias.name
+                else:
+                    # `import a.b.c` binds only the root name `a`
+                    root = alias.name.split(".")[0]
+                    aliases[root] = root
+        elif isinstance(node, ast.ImportFrom):
+            mod = ("." * node.level) + (node.module or "")
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                aliases[alias.asname or alias.name] = f"{mod}.{alias.name}"
+    return aliases
+
+
+def _suppressions(lines: Sequence[str]) -> "tuple[Dict[int, Set[str]], Set[str]]":
+    """Parse suppression comments: per-line ``# repro-lint: disable=a,b``
+    (applies to its own line and the line below it, so long flagged
+    expressions can carry the comment above) and file-level
+    ``# repro-lint: disable-file=a,b``."""
+    per_line: Dict[int, Set[str]] = {}
+    whole_file: Set[str] = set()
+    for i, line in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            names = {s.strip() for s in m.group(1).split(",") if s.strip()}
+            per_line.setdefault(i, set()).update(names)
+            per_line.setdefault(i + 1, set()).update(names)
+        m = _FILE_SUPPRESS_RE.search(line)
+        if m:
+            whole_file.update(
+                s.strip() for s in m.group(1).split(",") if s.strip())
+    return per_line, whole_file
+
+
+def lint_source(source: str, relpath: str,
+                rules: Optional[Sequence] = None) -> List[Finding]:
+    """Lint one file's source text; returns unsuppressed findings."""
+    if rules is None:
+        from tools.repro_lint.rules import ALL_RULES
+        rules = ALL_RULES
+    lines = source.splitlines()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="syntax-error", path=relpath,
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=f"file does not parse: {e.msg}")]
+    ctx = FileContext(relpath=relpath, tree=tree,
+                      aliases=build_aliases(tree), lines=lines)
+    per_line, whole_file = _suppressions(lines)
+    findings: List[Finding] = []
+    seen = set()
+    for rule in rules:
+        if not rule.applies(relpath):
+            continue
+        if rule.name in whole_file:
+            continue
+        for f in rule.check(ctx):
+            key = (f.rule, f.line, f.col, f.message)
+            if key in seen:
+                continue
+            seen.add(key)
+            if f.rule in per_line.get(f.line, ()):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return findings
+
+
+def iter_py_files(root: str, paths: Iterable[str]) -> Iterable[str]:
+    """Yield repo-relative posix paths of every .py under ``paths``
+    (files or directories, relative to ``root``); skips __pycache__ and
+    hidden directories. Missing paths are ignored (a repo without
+    examples/ still lints)."""
+    for p in paths:
+        full = os.path.join(root, p)
+        if os.path.isfile(full) and p.endswith(".py"):
+            yield p.replace(os.sep, "/")
+        elif os.path.isdir(full):
+            for dirpath, dirnames, filenames in os.walk(full):
+                dirnames[:] = [d for d in sorted(dirnames)
+                               if d != "__pycache__"
+                               and not d.startswith(".")]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        rel = os.path.relpath(os.path.join(dirpath, fn),
+                                              root)
+                        yield rel.replace(os.sep, "/")
+
+
+def default_root() -> str:
+    """The repo root (two levels above this package)."""
+    return os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+
+
+def run_lint(paths: Optional[Sequence[str]] = None,
+             root: Optional[str] = None,
+             rules: Optional[Sequence] = None,
+             ) -> "tuple[List[Finding], int]":
+    """Lint ``paths`` (repo-relative; default :data:`DEFAULT_PATHS`)
+    under ``root`` (default: this repo). Returns ``(findings, n_files)``.
+    """
+    if root is None:
+        root = default_root()
+    if paths is None:
+        paths = DEFAULT_PATHS
+    findings: List[Finding] = []
+    n_files = 0
+    for rel in iter_py_files(root, paths):
+        n_files += 1
+        with open(os.path.join(root, rel), encoding="utf-8") as f:
+            source = f.read()
+        findings.extend(lint_source(source, rel, rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, n_files
+
+
+def report_json(findings: Sequence[Finding], n_files: int,
+                rules: Sequence) -> Dict[str, object]:
+    """The machine-readable report uploaded as a CI artifact."""
+    counts: Dict[str, int] = {}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "tool": "repro-lint",
+        "ok": not findings,
+        "n_files": n_files,
+        "n_findings": len(findings),
+        "counts_by_rule": counts,
+        "rules": [{"name": r.name, "description": r.description}
+                  for r in rules],
+        "findings": [f.to_json() for f in findings],
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry (``python -m tools.repro_lint``): exit 1 on violations."""
+    import argparse
+
+    from tools.repro_lint.rules import ALL_RULES
+
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="AST contract linter for the solver/train/serve stack "
+                    "(see docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs relative to --root "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset to run")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="write the JSON report to FILE")
+    ap.add_argument("--format", choices=("human", "json"), default="human",
+                    help="stdout format")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    rules = list(ALL_RULES)
+    if args.rules:
+        wanted = {s.strip() for s in args.rules.split(",") if s.strip()}
+        known = {r.name for r in rules}
+        unknown = wanted - known
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(sorted(unknown))}; "
+                     f"known: {', '.join(sorted(known))}")
+        rules = [r for r in rules if r.name in wanted]
+
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.name}: {r.description}")
+        return 0
+
+    findings, n_files = run_lint(paths=args.paths or None, root=args.root,
+                                 rules=rules)
+    report = report_json(findings, n_files, rules)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for f in findings:
+            print(f.human())
+        names = ",".join(r.name for r in rules)
+        if findings:
+            print(f"repro-lint: {len(findings)} violation(s) over "
+                  f"{n_files} files (rules: {names})")
+        else:
+            print(f"repro-lint OK: 0 violations over {n_files} files "
+                  f"(rules: {names})")
+    return 1 if findings else 0

@@ -1,0 +1,316 @@
+"""repro-lint rule catalog (stdlib-ast only — no jax import, so the rules
+run on a bare CI runner before any dependency install).
+
+Every rule sees a :class:`tools.repro_lint.engine.FileContext` — the
+parsed AST, the import-alias table (local name -> fully-qualified dotted
+path, so ``import jax.lax as jl; jl.psum`` and multi-line parenthesized
+``from jax.lax import (psum, ...)`` resolve identically), and the
+repo-relative posix path that scopes the rule.
+
+Suppression: append ``# repro-lint: disable=<rule>[,<rule>...]`` to the
+flagged line (or the line directly above it); ``# repro-lint:
+disable-file=<rule>`` anywhere in the file disables a rule for the whole
+file. docs/static_analysis.md is the user-facing catalog.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+from tools.repro_lint.engine import FileContext, Finding
+
+#: the psum-family collectives whose only sanctioned spelling is
+#: ``repro.distributed.compat.<name>`` (ROADMAP distributed-layer contract)
+COLLECTIVES = frozenset({
+    "psum", "pmax", "pmin", "pmean", "all_gather", "ppermute",
+    "psum_scatter", "axis_index",
+})
+
+COMPAT_PATH = "src/repro/distributed/compat.py"
+HOT_PATHS = ("src/repro/train/", "src/repro/serve/", "src/repro/core/",
+             "src/repro/kernels/")
+
+
+def _resolve(node: ast.AST, aliases: dict) -> Optional[str]:
+    """Fully-qualified dotted path of a Name/Attribute chain, via the
+    file's import aliases; None when the root is not an imported name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        base = aliases.get(node.id)
+        if base is None:
+            return None
+        return ".".join([base] + parts[::-1])
+    return None
+
+
+def _mentions_jax(node: ast.AST, aliases: dict) -> bool:
+    """True when any sub-expression resolves into the ``jax`` package —
+    the syntactic evidence that an expression holds a traced/device
+    value (``jnp`` resolves to ``jax.numpy``)."""
+    for sub in ast.walk(node):
+        q = _resolve(sub, aliases)
+        if q is not None and (q == "jax" or q.startswith("jax.")):
+            return True
+    return False
+
+
+def _usages(tree: ast.AST) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            yield node
+
+
+class Rule:
+    """Base rule: ``name`` is the suppression/selection key, ``check``
+    yields findings for one file."""
+
+    name: str = ""
+    description: str = ""
+
+    def applies(self, relpath: str) -> bool:
+        """Whether this rule scopes over ``relpath`` (posix, repo-root
+        relative)."""
+        return True
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        """Yield findings for one parsed file."""
+        raise NotImplementedError
+
+    def _finding(self, ctx: FileContext, node: ast.AST, msg: str) -> Finding:
+        return Finding(rule=self.name, path=ctx.relpath,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), message=msg)
+
+
+class CompatCollectiveRule(Rule):
+    """ALL shard_map and psum-family collective call sites must resolve
+    through ``repro.distributed.compat`` — never ``jax.shard_map`` /
+    ``jax.experimental.shard_map`` / ``jax.lax.psum``-family directly
+    (the jax spelling drifted across the supported 0.4.30 -> current
+    range; one distribution API surface to patch). Replaces the
+    tools/lint_compat.sh grep, closing its false negatives: aliased
+    module imports (``import jax.lax as jl``) and parenthesized
+    multi-line ``from jax.lax import (...)`` imports resolve through the
+    alias table instead of a line regex."""
+
+    name = "compat-collective"
+    description = ("shard_map / raw jax.lax collectives outside "
+                   "distributed/compat.py (route through compat.*)")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath != COMPAT_PATH
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and not node.level:
+                mod = node.module or ""
+                for alias in node.names:
+                    if mod == "jax.lax" and (alias.name in COLLECTIVES
+                                             or alias.name == "*"):
+                        yield self._finding(
+                            ctx, node,
+                            f"import of jax.lax.{alias.name}: use "
+                            f"repro.distributed.compat.{alias.name}")
+                    elif (mod, alias.name) == ("jax", "shard_map") or \
+                            (mod, alias.name) == ("jax.experimental",
+                                                  "shard_map") or \
+                            mod.startswith("jax.experimental.shard_map"):
+                        yield self._finding(
+                            ctx, node,
+                            "direct shard_map import: use "
+                            "repro.distributed.compat.shard_map")
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith("jax.experimental.shard_map"):
+                        yield self._finding(
+                            ctx, node,
+                            "direct shard_map import: use "
+                            "repro.distributed.compat.shard_map")
+        for node in _usages(ctx.tree):
+            q = _resolve(node, ctx.aliases)
+            if q is None:
+                continue
+            if q == "jax.shard_map" or q.startswith(
+                    "jax.experimental.shard_map"):
+                yield self._finding(
+                    ctx, node, f"direct {q} reference: use "
+                    "repro.distributed.compat.shard_map")
+            else:
+                parts = q.split(".")
+                if (len(parts) == 3 and parts[:2] == ["jax", "lax"]
+                        and parts[2] in COLLECTIVES):
+                    yield self._finding(
+                        ctx, node, f"raw collective {q}: use "
+                        f"repro.distributed.compat.{parts[2]}")
+
+
+class KernelsShardMapRule(Rule):
+    """``src/repro/kernels`` must never spell shard_map except through
+    ``compat.shard_map`` — Pallas kernels are the lowest layer; sharded
+    composition belongs to the ops wrappers via
+    ``core.scan.sharded_scan_fixup``, not inside kernel bodies."""
+
+    name = "kernels-shard-map"
+    description = ("shard_map spelled inside src/repro/kernels/ "
+                   "(only compat.shard_map is allowed there)")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("src/repro/kernels/")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if "shard_map" in ((node.module or "") + alias.name):
+                        yield self._finding(
+                            ctx, node, "kernels/ imports shard_map: spell "
+                            "compat.shard_map in the ops wrapper instead")
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if "shard_map" in alias.name:
+                        yield self._finding(
+                            ctx, node, "kernels/ imports shard_map: spell "
+                            "compat.shard_map in the ops wrapper instead")
+            elif isinstance(node, ast.Name) and node.id == "shard_map":
+                yield self._finding(
+                    ctx, node, "bare shard_map in kernels/: only "
+                    "compat.shard_map is allowed")
+            elif isinstance(node, ast.Attribute) and \
+                    node.attr == "shard_map":
+                base = _resolve(node.value, ctx.aliases)
+                base_name = (node.value.id
+                             if isinstance(node.value, ast.Name) else "")
+                if not ((base or "").endswith("compat")
+                        or base_name == "compat"):
+                    yield self._finding(
+                        ctx, node, "non-compat shard_map attribute in "
+                        "kernels/: only compat.shard_map is allowed")
+
+
+class HostSyncRule(Rule):
+    """No per-step host synchronisation in the hot paths (train/, serve/,
+    core/, kernels/) — the PR-3 "loss stays device-side" win regresses
+    silently the moment someone writes ``float(loss)`` in step code.
+    Flags the syntactically-evident device->host pulls: ``.item()``,
+    ``jax.device_get(...)``, ``float()/int()/bool()`` over an expression
+    rooted in jax/jnp, and ``np.asarray()/np.array()`` over such an
+    expression. Deliberate host boundaries (log-cadence syncs, the serve
+    engine's token readout) carry a suppression comment naming the rule —
+    making every sanctioned sync point grep-able."""
+
+    name = "host-sync"
+    description = ("host-sync (.item()/device_get/float()/np.asarray on "
+                   "jax values) inside train/serve/core/kernels hot paths")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(HOT_PATHS)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Attribute) and func.attr == "item" \
+                    and not node.args and not node.keywords:
+                yield self._finding(
+                    ctx, node, ".item() forces a device->host sync")
+                continue
+            q = _resolve(func, ctx.aliases)
+            if q == "jax.device_get":
+                yield self._finding(
+                    ctx, node, "jax.device_get forces a device->host sync")
+                continue
+            if isinstance(func, ast.Name) \
+                    and func.id in ("float", "int", "bool") \
+                    and func.id not in ctx.aliases \
+                    and len(node.args) == 1 and not node.keywords \
+                    and _mentions_jax(node.args[0], ctx.aliases):
+                yield self._finding(
+                    ctx, node, f"{func.id}() over a jax expression blocks "
+                    "on the device (host sync)")
+                continue
+            if q in ("numpy.asarray", "numpy.array") and node.args \
+                    and _mentions_jax(node.args[0], ctx.aliases):
+                yield self._finding(
+                    ctx, node, f"{q.replace('numpy', 'np')} over a jax "
+                    "expression copies device->host (host sync)")
+
+
+class PallasCallRule(Rule):
+    """Pallas stays in ``src/repro/kernels/``: no direct
+    ``pallas_call`` / ``jax.experimental.pallas`` import elsewhere in
+    src/repro — every kernel launch goes through the kernels/ ops
+    wrappers (which own tiling/autotune, interpret auto-detection and the
+    sharded composition seam)."""
+
+    name = "pallas-call-outside-kernels"
+    description = ("pallas_call / jax.experimental.pallas referenced "
+                   "outside src/repro/kernels/")
+
+    def applies(self, relpath: str) -> bool:
+        return (relpath.startswith("src/repro/")
+                and not relpath.startswith("src/repro/kernels/"))
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and not node.level:
+                mod = node.module or ""
+                if mod.startswith("jax.experimental.pallas") or (
+                        mod == "jax.experimental"
+                        and any(a.name == "pallas" for a in node.names)):
+                    yield self._finding(
+                        ctx, node, "pallas imported outside kernels/: "
+                        "kernel launches live in src/repro/kernels ops")
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith("jax.experimental.pallas"):
+                        yield self._finding(
+                            ctx, node, "pallas imported outside kernels/: "
+                            "kernel launches live in src/repro/kernels ops")
+        for node in _usages(ctx.tree):
+            q = _resolve(node, ctx.aliases)
+            if q and q.startswith("jax.experimental.pallas") \
+                    and q.endswith("pallas_call"):
+                yield self._finding(
+                    ctx, node, f"direct {q} outside kernels/: use the "
+                    "src/repro/kernels ops wrappers")
+
+
+class HardcodedInterpretRule(Rule):
+    """No literal ``interpret=True`` in library code: Pallas execution
+    mode is auto-detected per backend (``LrcSSMConfig.kernel_interpret``,
+    PR-5 contract — a hardcoded True silently runs the interpreter on
+    TPU). Thread ``interpret=interpret`` / ``interpret=None`` instead."""
+
+    name = "hardcoded-interpret"
+    description = ("literal interpret=True in src/repro (breaks backend "
+                   "auto-detection; thread the config value)")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("src/repro/")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg == "interpret" \
+                        and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value is True:
+                    yield self._finding(
+                        ctx, kw.value, "hardcoded interpret=True: thread "
+                        "the auto-detected value (kernel_interpret) "
+                        "instead")
+
+
+#: registry, in reporting order
+ALL_RULES: Tuple[Rule, ...] = (
+    CompatCollectiveRule(),
+    KernelsShardMapRule(),
+    HostSyncRule(),
+    PallasCallRule(),
+    HardcodedInterpretRule(),
+)
