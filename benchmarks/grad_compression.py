@@ -89,7 +89,7 @@ def _inner() -> None:
                 state, m = jax.block_until_ready(jstep(state, batch))
                 ts.append(time.perf_counter() - t0)
         us = float(np.median(ts) * 1e6)
-        wire_mode = ("int8_allgather" if comp == "int8"
+        wire_mode = ("int8_rsag" if comp == "int8"
                      else "fp32_allreduce")
         wire = reduction_wire_bytes(params, N_POD, wire_mode)
         ops = collective_ops_from_hlo(compiled.as_text())

@@ -158,10 +158,20 @@ class TrainConfig:
     #              then ONE explicit cross-pod reduction (fp32 psum, or
     #              compressed_psum with the error-feedback residual threaded
     #              through TrainState). No implicit fp32 pod all-reduce
-    #              appears in the lowered HLO. Contract: pure-DP params
-    #              (replicated w.r.t. the mesh) — TP/FSDP composition via
-    #              partially-manual shard_map is a ROADMAP item.
+    #              appears in the lowered HLO. Parameter layout inside the
+    #              seam is selected by ``param_sharding`` below.
     grad_reduce: str = "gspmd"       # gspmd | explicit
+    # explicit-seam parameter layout (ignored on the gspmd path):
+    #   replicated — pure DP, every device holds full params;
+    #   fsdp       — params/opt-state sharded over the ("data", "model")
+    #                grid; the seam all-gathers params ONCE before the
+    #                microbatch loop and reduce-scatters grads back;
+    #   tp         — "model"-axis tensor parallelism with manual megatron
+    #                seams in the model code (fully-manual shard_map);
+    #   tp_fsdp    — megatron table: "model" entries TP-local, "data"
+    #                entries gathered/scattered on the seam (3D parallel).
+    # Prefer setting this through distributed.sharding.ShardingPolicy.
+    param_sharding: str = "replicated"  # replicated | fsdp | tp | tp_fsdp
     # error-feedback residual (int8 path): accumulated quantisation error,
     # carried across steps in TrainState. "float32" | "bfloat16".
     residual_dtype: str = "float32"

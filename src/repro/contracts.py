@@ -151,6 +151,46 @@ _COLLECTIVE_RE = re.compile(
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 
+#: HLO computation header — '%name (args) -> type {' (optionally ENTRY;
+#: the arg list may nest parens for tuple-shaped params)
+_COMPUTATION_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->[^{\n]*\{",
+    re.MULTILINE)
+
+
+def _hlo_regions(hlo_text: str) -> Dict[str, "tuple[int, int]"]:
+    """Computation name -> (start, end) text span, in file order."""
+    headers = list(_COMPUTATION_RE.finditer(hlo_text))
+    regions: Dict[str, "tuple[int, int]"] = {}
+    for i, m in enumerate(headers):
+        end = headers[i + 1].start() if i + 1 < len(headers) \
+            else len(hlo_text)
+        regions[m.group(1)] = (m.start(), end)
+    return regions
+
+
+def while_loop_computations(hlo_text: str) -> Set[str]:
+    """Names of every computation reachable from a ``while`` op's body or
+    condition (transitively through ``to_apply=`` / ``calls=``) — the HLO
+    regions that execute once PER LOOP ITERATION. The FSDP seam contract
+    asserts its full-parameter all-gathers are NOT in here: gather once
+    before the microbatch loop, not once per microbatch."""
+    regions = _hlo_regions(hlo_text)
+    roots = {m.group(1) for m in
+             re.finditer(r"(?:body|condition)=%?([\w.\-]+)", hlo_text)}
+    seen: Set[str] = set()
+    stack = list(roots)
+    while stack:
+        name = stack.pop()
+        span = regions.get(name)
+        if name in seen or span is None:
+            continue
+        seen.add(name)
+        for m in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                             hlo_text[span[0]:span[1]]):
+            stack.append(m.group(1))
+    return seen
+
 
 def _group_size(line_rest: str) -> int:
     m = _GROUPS_IOTA_RE.search(line_rest)
@@ -188,12 +228,31 @@ def collective_ops_from_hlo(hlo_text: str):
     "the compressed explicit path lowers NO fp32 all-reduce/all-gather
     larger than N elements" (tests/test_train_engine.py) — and what
     benchmarks/grad_compression.py reports next to the analytic
-    ``reduction_wire_bytes`` accounting."""
+    ``reduction_wire_bytes`` accounting.
+
+    Each record also carries its HLO computation ``region`` and an
+    ``in_loop`` flag (the region is reachable from a ``while`` body —
+    i.e. the op executes once per loop iteration), so contracts can
+    forbid collectives specifically inside loop bodies."""
+    regions = _hlo_regions(hlo_text)
+    loop_comps = while_loop_computations(hlo_text)
+    spans = sorted((s, e, name) for name, (s, e) in regions.items())
+
+    def region_at(pos: int) -> Optional[str]:
+        name = None
+        for s, _e, n in spans:
+            if s <= pos:
+                name = n
+            else:
+                break
+        return name
+
     ops = []
     for m in _COLLECTIVE_RE.finditer(hlo_text):
         shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
         kind = kind.replace("-start", "")
         g = max(_group_size(rest), 1)
+        region = region_at(m.start())
         for sm in _SHAPE_RE.finditer(shape_str):
             dt, dims = sm.group(1), sm.group(2)
             if dt not in _DTYPE_BYTES:
@@ -204,7 +263,9 @@ def collective_ops_from_hlo(hlo_text: str):
                     if d:
                         n *= int(d)
             ops.append({"kind": kind, "dtype": dt, "elems": n,
-                        "bytes": n * _DTYPE_BYTES[dt], "group": g})
+                        "bytes": n * _DTYPE_BYTES[dt], "group": g,
+                        "region": region,
+                        "in_loop": region in loop_comps})
     return ops
 
 
@@ -279,8 +340,10 @@ def check_jaxpr_loops(fn, args: Sequence[Any], *,
 def _op_matches(op: Dict[str, Any], spec: Dict[str, Any]) -> bool:
     """True when ``op`` (a collective_ops_from_hlo record) matches every
     constraint in ``spec``: {kind?, dtype?, min_elems?, min_bytes?,
-    min_group?}."""
+    min_group?, in_loop?}."""
     if "kind" in spec and op["kind"] != spec["kind"]:
+        return False
+    if "in_loop" in spec and bool(op.get("in_loop")) != bool(spec["in_loop"]):
         return False
     if "dtype" in spec and op["dtype"] != spec["dtype"]:
         return False

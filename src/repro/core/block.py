@@ -182,12 +182,29 @@ def _solve_cell(cfg: LrcSSMConfig, cell_p: Params, h: jax.Array
     return states, iters
 
 
+def _with_policy_seq_axis(cfg: LrcSSMConfig) -> LrcSSMConfig:
+    """``cfg.seq_axis`` (the legacy per-block spelling) wins when set;
+    otherwise the ambient ShardingPolicy's ``seq_axis`` applies — the one
+    policy object configures sequence parallelism for every block."""
+    if cfg.seq_axis is not None:
+        return cfg
+    from repro.distributed.sharding import current_policy
+    policy = current_policy()
+    if policy is None or policy.seq_axis is None:
+        return cfg
+    return dataclasses.replace(cfg, seq_axis=policy.seq_axis)
+
+
 def _seq_shard_mesh(cfg: LrcSSMConfig, T: int):
     """The active mesh when the sequence-parallel solve applies, else None."""
     if cfg.seq_axis is None or cfg.solver not in ("deer", "elk"):
         return None
     from repro.core.deer_sharded import n_seq_shards
-    from repro.distributed.sharding import current_mesh
+    from repro.distributed.sharding import current_mesh, in_manual_body
+    if in_manual_body():
+        # inside the fully-manual explicit seam: already per-device, the
+        # solver must not open a nested shard_map
+        return None
     mesh = current_mesh()
     if mesh is None:
         return None
@@ -311,6 +328,7 @@ def _solve_block(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
     scalar). Tier order: sharded-fused > fused (replicated megakernel) >
     sharded-lax > replicated — a tier whose preconditions fail falls to
     the NEXT tier."""
+    cfg = _with_policy_seq_axis(cfg)
     mesh = _seq_shard_mesh(cfg, hn.shape[1])
     if _fused_applicable(cfg):
         if mesh is not None:

@@ -49,7 +49,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from repro.distributed.sharding import make_spec as P
 
 from repro.core.deer import DeerConfig, StepFn, deer_solve
 from repro.core.scan import residual_init, sharded_scan_local

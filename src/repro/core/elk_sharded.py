@@ -59,6 +59,7 @@ from repro.core.elk import (ElkConfig, _filter_combine, _smooth_combine,
 from repro.core.deer import StepFn
 from repro.core.scan import residual_init
 from repro.distributed import compat
+from repro.distributed.sharding import make_spec
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +263,7 @@ def _elk_shmapped(step_fn, feats, params, x0, init_guess, cfg: ElkConfig,
     return compat.shard_map(
         local, mesh=mesh,
         in_specs=(feats_specs, params_specs, x0_spec, t_spec),
-        out_specs=(t_spec, jax.sharding.PartitionSpec()),
+        out_specs=(t_spec, make_spec()),
         check_vma=False,
     )(feats, params, x0, init_guess)
 

@@ -40,7 +40,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from repro.distributed.sharding import make_spec as P
 
 from repro.distributed import compat
 

@@ -23,11 +23,18 @@ The collectives re-exported below (``psum``, ``pmax``, ``pmean``,
 here so the repo has exactly ONE distribution API surface — if a future jax
 moves or renames any of them, this module is the single place to patch.
 
+The partially-manual entry point (``shard_map(..., auto_axes=...)``) papers
+over the second API drift: jax <= 0.5 spells "leave these axes to GSPMD" as
+``auto=frozenset({...})`` while jax >= 0.6 inverts the parameter to
+``axis_names={...}`` (the axes that ARE manual). Callers name the auto axes;
+the shim translates by inspecting the installed signature.
+
 Supported jax range: 0.4.30 — current (feature-detected at import time;
 ``HAS_NATIVE_SHARD_MAP`` records which branch was taken).
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Callable
 
 import jax
@@ -36,10 +43,27 @@ HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
 
 if not HAS_NATIVE_SHARD_MAP:
     from jax.experimental.shard_map import shard_map as _experimental_shard_map
+    _shard_map_impl = _experimental_shard_map
+else:
+    _shard_map_impl = jax.shard_map
+
+_SHARD_MAP_PARAMS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+# Whether partially-manual bodies may issue DATA-MOVING collectives
+# (all_gather / psum_scatter / all_to_all) over their *manual* axes. On the
+# 0.4.x line the XLA partitioner aborts on that mix ("Check failed:
+# target.IsManualSubgroup() == sharding().IsManualSubgroup()"); elementwise
+# collectives (psum/pmean/pmax) are fine. The explicit gradient seam
+# therefore runs FULLY manual on every supported version — the partial-auto
+# entry point below exists for read-mostly cells (and becomes fully usable
+# on jax >= 0.6, where this flag flips to True).
+PARTIAL_AUTO_DATA_COLLECTIVES_OK = HAS_NATIVE_SHARD_MAP
 
 
 def shard_map(f: Callable, *, mesh, in_specs, out_specs,
-              check_vma: bool = True, **kwargs: Any) -> Callable:
+              check_vma: bool = True, auto_axes=None,
+              **kwargs: Any) -> Callable:
     """Map ``f`` over shards of the mesh — portable across jax versions.
 
     Args:
@@ -49,6 +73,11 @@ def shard_map(f: Callable, *, mesh, in_specs, out_specs,
       check_vma: enable replication/varying-axes checking (maps to
         ``check_rep`` on jax < 0.6). Pass False for bodies with data-dependent
         collectives inside lax control flow, where the checker is too strict.
+      auto_axes: optional iterable of mesh-axis names the body does NOT
+        handle manually — GSPMD keeps partitioning over them. Translated to
+        ``auto=frozenset`` (jax <= 0.5) or the complementary ``axis_names=``
+        set (jax >= 0.6). See ``PARTIAL_AUTO_DATA_COLLECTIVES_OK`` before
+        issuing data-moving collectives from a partially-manual body.
     """
     # accept legacy spelling so downstream code written against either jax
     # API keeps working through this shim
@@ -56,11 +85,30 @@ def shard_map(f: Callable, *, mesh, in_specs, out_specs,
         check_vma = kwargs.pop("check_rep")
     if kwargs:
         raise TypeError(f"unsupported shard_map kwargs: {sorted(kwargs)}")
+    extra: dict[str, Any] = {}
+    if auto_axes:
+        auto = frozenset(auto_axes)
+        unknown = auto - set(mesh.axis_names)
+        if unknown:
+            raise ValueError(
+                f"auto_axes {sorted(unknown)} not in mesh axes "
+                f"{mesh.axis_names}")
+        if "auto" in _SHARD_MAP_PARAMS:
+            extra["auto"] = auto
+        elif "axis_names" in _SHARD_MAP_PARAMS:
+            # new API names the MANUAL axes instead — pass the complement
+            extra["axis_names"] = set(mesh.axis_names) - auto
+        else:  # pragma: no cover - no partial-manual support at all
+            raise NotImplementedError(
+                "installed jax shard_map supports neither auto= nor "
+                "axis_names=; partially-manual lowering unavailable")
     if HAS_NATIVE_SHARD_MAP:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_vma)
-    return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
-                                   out_specs=out_specs, check_rep=check_vma)
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=check_vma,
+                               **extra)
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=check_vma,
+                           **extra)
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +122,7 @@ pmean = jax.lax.pmean
 all_gather = jax.lax.all_gather
 ppermute = jax.lax.ppermute
 psum_scatter = jax.lax.psum_scatter
+all_to_all = jax.lax.all_to_all
 axis_index = jax.lax.axis_index
 
 
@@ -84,6 +133,17 @@ def axis_size(mesh, axis) -> int:
     for a in axes:
         n *= mesh.shape[a]
     return n
+
+
+def axis_env_size(axis_name: str) -> int:
+    """STATIC size of a bound mesh axis, queryable while tracing inside a
+    shard_map body (no mesh object needed). jax >= 0.5 exposes
+    ``jax.lax.axis_size``; the 0.4.x line only has the trace-time axis
+    env."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis_name))
+    from jax._src import core as _core  # 0.4.x fallback
+    return int(_core.get_axis_env().axis_size(axis_name))
 
 
 # ---------------------------------------------------------------------------

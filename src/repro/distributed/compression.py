@@ -68,38 +68,83 @@ def zeros_residual(tree, dtype=jnp.float32):
 
 
 def compressed_psum(tree, axis_name: str, error_state=None,
-                    error_feedback: bool = True):
+                    error_feedback: bool = True,
+                    axis_size: int = 0):
     """int8-compressed all-reduce(mean) over ``axis_name`` with error
     feedback. Returns (reduced tree, new error_state).
+
+    Wire format: quantised REDUCE-SCATTER + ALL-GATHER (two int8 stages).
+    Each rank splits its gradient into P chunks, quantises them, and
+    exchanges chunk j with rank j over one ``all_to_all`` (the
+    reduce-scatter stage, (P-1)/P of the payload on the wire); every rank
+    dequantises and sums the P copies of its own chunk, REQUANTISES the
+    sum, and an int8 all-gather of the summed chunks (another (P-1)/P)
+    reconstructs the total. Per-device wire is therefore
+    ~2·(P-1)/P·(1+4/BLOCK) bytes per element — a ~3.9x saving over the
+    fp32 ring all-reduce at ANY pod count, where the previous
+    full-payload all-gather format degraded past P ≈ 8 (see
+    ``reduction_wire_bytes``).
+
+    Error feedback is EXACT for the two-stage format: each rank keeps its
+    own stage-1 quantisation error on all P chunks, plus the stage-2
+    requantisation error on the one chunk it owns — summed over ranks,
+    the residuals account for every bit the wire dropped.
 
     ``error_state`` leaves may be any float dtype (fp32 default, bf16 to
     halve residual HBM); accumulation happens in fp32 and the new residual
     is cast back to the incoming dtype. With ``error_feedback=False`` the
     incoming residual is ignored and the returned one is all zeros —
     per-step round-to-nearest, the ablation baseline.
+
+    ``axis_size`` is the static size of ``axis_name`` (the chunk split
+    needs it at trace time); pass it when known (train/step.py does),
+    otherwise it is read from the ambient shard_map axis env.
+
+    Leaves smaller than ``P * BLOCK`` use a shrunk block size
+    ``ceil(n/P)`` so every chunk carries real payload with its own scale
+    (per-element scale overhead is higher there, but only for leaves
+    whose wire cost is negligible anyway — ``reduction_wire_bytes``
+    keeps the 4/BLOCK figure).
     """
     if error_state is None:
         error_state = zeros_residual(tree)
+    P = int(axis_size) or compat.axis_env_size(axis_name)
 
     def one(g, err):
         g32 = g.astype(jnp.float32)
         if error_feedback:
             g32 = g32 + err.astype(jnp.float32)
-        q, s = _quantize_int8(g32)
-        deq = _dequantize_int8(q, s, g32.shape, g32.size)
-        # error feedback residual (zeroed in the round-to-nearest ablation)
-        new_err = (g32 - deq if error_feedback
-                   else jnp.zeros_like(g32)).astype(err.dtype)
-        # WIRE FORMAT: int8 payload + per-block fp32 scales (1/256 overhead).
-        # all_gather keeps the transferred bytes at ~1/4 of an fp32 psum at
-        # the production pod count (see reduction_wire_bytes); each pod
-        # dequantises and reduces locally.
-        q_all = compat.all_gather(q, axis_name)           # (P, blocks, BLOCK) int8
-        s_all = compat.all_gather(s, axis_name)           # (P, blocks, 1) f32
-        P = q_all.shape[0]
-        deq_sum = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
-        flat = deq_sum.reshape(-1)[:g32.size].reshape(g32.shape)
-        return (flat / P).astype(g.dtype), new_err
+        n = g32.size
+        # block size shrinks for leaves smaller than P*BLOCK so every
+        # chunk holds real payload with its own scale — otherwise a tiny
+        # leaf lands entirely in chunk 0 as ONE block and a single
+        # outlier coordinate sets the scale for the whole leaf
+        bs = min(BLOCK, max(1, -(-n // P)))
+        flat = jnp.pad(g32.reshape(-1), (0, (-n) % (P * bs)))
+        blocks = flat.reshape(P, -1, bs)             # (P, nb, bs)
+        s1 = jnp.max(jnp.abs(blocks), axis=2, keepdims=True) / 127.0
+        q1 = jnp.round(blocks / jnp.maximum(s1, 1e-12)).astype(jnp.int8)
+        # stage 1 (reduce-scatter): chunk j of every rank -> rank j
+        q1_x = compat.all_to_all(q1, axis_name, split_axis=0, concat_axis=0)
+        s1_x = compat.all_to_all(s1, axis_name, split_axis=0, concat_axis=0)
+        chunk_sum = jnp.sum(q1_x.astype(jnp.float32) * s1_x, axis=0)
+        # stage 2 (all-gather): requantise the summed chunk, share it
+        s2 = jnp.max(jnp.abs(chunk_sum), axis=1, keepdims=True) / 127.0
+        q2 = jnp.round(chunk_sum / jnp.maximum(s2, 1e-12)).astype(jnp.int8)
+        q2_all = compat.all_gather(q2, axis_name)    # (P, nb, BLOCK) int8
+        s2_all = compat.all_gather(s2, axis_name)    # (P, nb, 1) f32
+        total = (q2_all.astype(jnp.float32) * s2_all).reshape(-1)[:n]
+        out = (total / P).reshape(g32.shape).astype(g.dtype)
+        if not error_feedback:
+            return out, jnp.zeros(g32.shape, err.dtype)
+        # exact residual: own stage-1 error on all chunks + stage-2 error
+        # on the chunk this rank owns
+        err1 = blocks - q1.astype(jnp.float32) * s1
+        err2 = chunk_sum - q2.astype(jnp.float32) * s2
+        owner = (jnp.arange(P) == compat.axis_index(axis_name))
+        r_blocks = err1 + owner.astype(jnp.float32)[:, None, None] * err2
+        new_err = r_blocks.reshape(-1)[:n].reshape(g32.shape)
+        return out, new_err.astype(err.dtype)
 
     flat, treedef = jax.tree_util.tree_flatten(tree)
     flat_err = treedef.flatten_up_to(error_state)
@@ -120,17 +165,19 @@ def reduction_wire_bytes(tree, axis_size: int, mode: str) -> int:
     """Per-device bytes RECEIVED over the reduced axis for ONE gradient
     reduction of ``tree`` across ``axis_size`` participants.
 
-    Modes (matching what the two train-step paths actually lower to):
+    Modes:
       * ``"fp32_allreduce"``  — GSPMD's ring all-reduce: each device
         receives 2·(P-1)/P · 4 bytes per element (reduce-scatter +
         all-gather halves).
-      * ``"int8_allgather"``  — the compressed path: each device receives
-        the (P-1) other pods' full int8 payload + fp32 per-block scales,
-        i.e. (P-1) · (1 + 4/BLOCK) bytes per element.
-
-    The all-gather format wins below P ≈ 8 (at the production pod count
-    P=2 it is ~3.9x fewer bytes); beyond that a quantised
-    reduce-scatter+all-gather is needed — ROADMAP item.
+      * ``"int8_rsag"``       — what ``compressed_psum`` lowers to:
+        quantised reduce-scatter (all_to_all, (P-1)/P of the int8 payload
+        + fp32 per-block scales) + int8 all-gather of the requantised
+        chunk sums (another (P-1)/P), i.e. 2·(P-1)/P · (1 + 4/BLOCK)
+        bytes per element — the ~3.9x saving over fp32 holds at ANY P.
+      * ``"int8_allgather"``  — the RETIRED full-payload format, kept for
+        the accounting comparison: (P-1) · (1 + 4/BLOCK) bytes per
+        element, which loses to fp32 beyond P ≈ 8 (the bug the rsag
+        format fixes).
     """
     n = tree_elems(tree)
     P = int(axis_size)
@@ -138,6 +185,8 @@ def reduction_wire_bytes(tree, axis_size: int, mode: str) -> int:
         return 0
     if mode == "fp32_allreduce":
         return int(round(2 * (P - 1) / P * 4 * n))
+    if mode == "int8_rsag":
+        return int(round(2 * (P - 1) / P * (1.0 + _SCALE_OVERHEAD) * n))
     if mode == "int8_allgather":
         return int(round((P - 1) * (1.0 + _SCALE_OVERHEAD) * n))
     raise ValueError(f"unknown wire mode: {mode!r}")

@@ -24,12 +24,16 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import dataclasses
+import functools
 import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import compat
 
 _MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
     "repro_mesh", default=None)
@@ -58,6 +62,143 @@ def manual_body():
 def in_manual_body() -> bool:
     """True while tracing inside a fully-manual shard_map body."""
     return _MANUAL.get()
+
+
+# ---------------------------------------------------------------------------
+# manual tensor parallelism (the explicit gradient seam, train/step.py)
+# ---------------------------------------------------------------------------
+# Inside the fully-manual explicit-seam shard_map, GSPMD never sees the
+# "model" axis — model code does its own tensor parallelism. The contract:
+#
+#   * the step body activates ``tp_region("model")`` when
+#     TrainConfig.param_sharding selects a TP mode and the mesh has a
+#     model axis of size > 1;
+#   * each layer decides per parameter leaf whether it is actually split by
+#     a SHAPE TEST (local_dim * tp_size == global_dim) — non-divisible or
+#     overridden leaves fall back to replicated compute automatically;
+#   * TP compute regions are bracketed by the megatron f/g seams below:
+#     ``tp_region_in`` where a replicated activation enters column-parallel
+#     compute, ``tp_region_out`` after the row-parallel matmul that closes
+#     the region. ``tp_psum`` is the mid-region all-reduce whose cotangents
+#     are rank-varying (row-parallel matmuls whose output is consumed
+#     shard-wise, full-channel RMS statistics).
+#
+# The seams are custom_vjp so backward collectives are placed explicitly —
+# native psum AD under ``check_rep=False`` does not account for
+# rank-varying cotangents.
+
+_TP_AXIS: contextvars.ContextVar[Optional[Tuple[str, int]]] = (
+    contextvars.ContextVar("repro_tp_axis", default=None))
+
+
+@contextlib.contextmanager
+def tp_region(axis: Optional[str], size: int = 0):
+    """Activate manual tensor-parallel compute over mesh axis ``axis`` for
+    model code traced under this context (None = deactivate). ``size`` is
+    the static TP degree; pass it when known (train/step.py does),
+    otherwise it is read from the ambient mesh at ``tp_info`` time."""
+    token = _TP_AXIS.set(None if axis is None else (axis, int(size)))
+    try:
+        yield
+    finally:
+        _TP_AXIS.reset(token)
+
+
+def tp_info() -> Tuple[Optional[str], int]:
+    """(axis_name, size) of the active manual-TP region, or (None, 1)
+    outside one / when neither the region nor the ambient mesh can say
+    how many shards the axis has."""
+    got = _TP_AXIS.get()
+    if got is None:
+        return None, 1
+    axis, size = got
+    if size > 1:
+        return axis, size
+    mesh = current_mesh()
+    if mesh is None or axis not in mesh.axis_names or mesh.shape[axis] <= 1:
+        return None, 1
+    return axis, mesh.shape[axis]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_region_in(x, axis):
+    """Megatron "f" seam: identity forward, psum(axis) backward. Place
+    where a REPLICATED activation enters a TP region — the backward psum
+    folds each rank's partial input-gradient into the replicated total."""
+    return x
+
+
+def _tp_in_fwd(x, axis):
+    """Forward of the "f" seam: identity, no residuals."""
+    return x, None
+
+
+def _tp_in_bwd(axis, _, g):
+    """Backward of the "f" seam: psum the rank-partial input grads."""
+    return (compat.psum(g, axis),)
+
+
+tp_region_in.defvjp(_tp_in_fwd, _tp_in_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_region_out(x, axis):
+    """Megatron "g" seam: psum(axis) forward, identity backward. Place on
+    the partial output of the row-parallel matmul that CLOSES a TP region —
+    every rank then re-enters replicated compute with the full activation
+    and its unchanged (replicated) cotangent."""
+    return compat.psum(x, axis)
+
+
+def _tp_out_fwd(x, axis):
+    """Forward of the "g" seam: psum the row-parallel partial output."""
+    return compat.psum(x, axis), None
+
+
+def _tp_out_bwd(axis, _, g):
+    """Backward of the "g" seam: identity (cotangent is replicated)."""
+    return (g,)
+
+
+tp_region_out.defvjp(_tp_out_fwd, _tp_out_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_psum(x, axis):
+    """Mid-region all-reduce: psum forward AND backward. For sums whose
+    replicated result is consumed SHARD-WISE downstream (x_proj-style
+    row-parallel matmuls feeding per-channel compute, full-width RMS
+    statistics) — the cotangents are rank-varying, so the backward must
+    fold them back into the replicated total."""
+    return compat.psum(x, axis)
+
+
+def _tp_psum_fwd(x, axis):
+    """Forward of the mid-region all-reduce: psum."""
+    return compat.psum(x, axis), None
+
+
+def _tp_psum_bwd(axis, _, g):
+    """Backward of the mid-region all-reduce: psum the rank-varying
+    cotangents back into the replicated total."""
+    return (compat.psum(g, axis),)
+
+
+tp_psum.defvjp(_tp_psum_fwd, _tp_psum_bwd)
+
+
+def tp_gather_weight(w, axis, dim):
+    """All-gather a TP-sharded weight along ``dim`` for the packed-layout
+    pattern (wqkv / mixer in_proj): gather the full matrix, then
+    ``dynamic_slice`` the rank's segments at ``tp_index``-dependent
+    offsets. The gather transposes to psum_scatter, so gradients for
+    overlapping (shared) segments sum across ranks exactly."""
+    return compat.all_gather(w, axis, axis=dim, tiled=True)
+
+
+def tp_index(axis):
+    """This rank's position along the TP mesh axis (traced scalar)."""
+    return compat.axis_index(axis)
 
 
 @contextlib.contextmanager
@@ -135,6 +276,7 @@ def pod_local_batch_specs(batch, mesh: Mesh) -> Any:
         n_dp *= mesh.shape[a]
 
     def leaf_spec(path, leaf):
+        """Pod-local batch spec for one leaf (batch dim over DP axes)."""
         nd = getattr(leaf, "ndim", 0)
         shape = getattr(leaf, "shape", ())
         if nd == 0 or ba is None:
@@ -309,6 +451,14 @@ def fit_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
     return P(*out)
 
 
+def make_spec(*entries) -> P:
+    """The sanctioned ``PartitionSpec`` constructor for call sites outside
+    this module and train/step.py. tools/repro_lint enforces that every
+    other module builds specs through here (or the higher-level helpers),
+    so the axis-name vocabulary stays reviewable in one place."""
+    return P(*entries)
+
+
 def _path_str(path) -> str:
     """Flatten a tree_util key path to the '/'-joined rule-lookup key."""
     parts = []
@@ -380,6 +530,7 @@ def param_specs(params, mesh: Optional[Mesh] = None) -> Any:
     by rank mismatch with the rule's spec length. With ``mesh``, specs are
     shape-fitted (divisibility fallback)."""
     def leaf_spec(path, leaf):
+        """Strategy-table spec for one parameter leaf."""
         spec = spec_for_param(_path_str(path), getattr(leaf, "ndim", 0))
         return fit_spec(spec, getattr(leaf, "shape", ()), mesh)
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
@@ -389,6 +540,85 @@ def param_shardings(mesh: Mesh, params) -> Any:
     """``param_specs`` materialised as NamedShardings on ``mesh``."""
     specs = param_specs(params, mesh)
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# explicit-seam parameter sharding (TrainConfig.param_sharding)
+# ---------------------------------------------------------------------------
+# The explicit gradient path keeps every TrainState leaf at its GLOBAL
+# logical shape; only these specs change per mode, and the step's shard_map
+# in_specs do the slicing. That is what makes checkpoints elastic across
+# mesh shape AND TP degree: a restore never depends on how the previous run
+# was sharded.
+
+# Vocab-parallel embedding / lm_head, expert-parallel MoE and the VLM
+# frontend projector have no manual compute path inside the explicit seam —
+# force them replicated under the TP modes (their grads come out replicated
+# across "model" for free, since every model rank traces the identical
+# compute on them).
+_TP_REPLICATED_OVERRIDES = (r"embed$", r"lm_head$", r"(^|/)moe/",
+                            r"(^|/)projector/")
+
+_EXPLICIT_MODES = ("replicated", "fsdp", "tp", "tp_fsdp")
+
+# param_sharding mode -> the _apply_strategy transform that yields its base
+# spec table: "fsdp" shards the last divisible dim over the whole
+# ("data", "model") grid; "tp" (via the weight-stationary "serve"
+# transform) keeps only the "model" entries; "tp_fsdp" uses the megatron
+# table as-is — its "data" entries become FSDP gather axes on the seam, its
+# "model" entries stay TP-local.
+_MODE_STRATEGY = {"fsdp": "fsdp", "tp": "serve", "tp_fsdp": "megatron"}
+
+
+def explicit_param_specs(params, mesh: Mesh, mode: str,
+                         replicate: Tuple[str, ...] = ()) -> Any:
+    """Per-leaf PartitionSpecs for the explicit seam's parameter sharding.
+
+    Args:
+      params: parameter pytree (leaves need .shape/.ndim — abstract ok).
+      mesh: the step mesh (axes fitted/divisibility-checked against it).
+      mode: TrainConfig.param_sharding — "replicated" | "fsdp" | "tp" |
+        "tp_fsdp".
+      replicate: extra regex patterns forced to P() — the step factory
+        passes the model's packed-layout divisibility overrides (e.g. heads
+        not divisible by the TP degree) so specs never promise a layout the
+        model's manual-TP branches cannot compute.
+    """
+    if mode not in _EXPLICIT_MODES:
+        raise ValueError(
+            f"param_sharding={mode!r} not in {_EXPLICIT_MODES}")
+    if mode == "replicated":
+        return replicated_specs(params)
+    strategy = _MODE_STRATEGY[mode]
+    overrides = replicate + (
+        _TP_REPLICATED_OVERRIDES if mode in ("tp", "tp_fsdp") else ())
+
+    def leaf_spec(path, leaf):
+        """Explicit-seam spec for one leaf (mode table + overrides)."""
+        ps = _path_str(path)
+        nd = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", ())
+        for pat in overrides:
+            if re.search(pat, ps):
+                return P()
+        base = spec_for_param(ps, nd, strategy=strategy)
+        return fit_spec(base, shape, mesh)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def spec_gather_axes(spec: P, fsdp_axes: Tuple[str, ...]):
+    """(dim, axes) of the FSDP gather placement a leaf spec encodes: the
+    first dimension whose entry names only axes from ``fsdp_axes``, or
+    (None, ()) for leaves the seam does not gather (TP-local / replicated).
+    The step gathers params over exactly these axes before the microbatch
+    loop and reduce-scatters grads back over them after it."""
+    for dim, entry in enumerate(tuple(spec)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if all(a in fsdp_axes for a in axes):
+            return dim, tuple(axes)
+    return None, ()
 
 
 def cache_specs(cache, mesh: Optional[Mesh] = None) -> Any:
@@ -404,6 +634,7 @@ def cache_specs(cache, mesh: Optional[Mesh] = None) -> Any:
     sizes = dict(mesh.shape) if mesh is not None else {}
 
     def leaf_spec(path, leaf):
+        """Serve-cache spec for one leaf (slots over \"data\")."""
         ps = _path_str(path)
         nd = getattr(leaf, "ndim", 0)
         shape = getattr(leaf, "shape", ())
@@ -427,6 +658,233 @@ def cache_specs(cache, mesh: Optional[Mesh] = None) -> Any:
     return jax.tree_util.tree_map_with_path(leaf_spec, cache)
 
 
+class ShardingRule:
+    """Ordered (regex, PartitionSpec) table applied to a pytree by path —
+    the scalax ``TreePathShardingRule`` shape. First match wins; a rule
+    written for rank-k applies to rank-(k+s) stacked tensors (leading axes
+    replicate); unmatched leaves replicate."""
+
+    def __init__(self, *rules: Tuple[str, P]):
+        self.rules = tuple(rules)
+
+    def spec_for(self, path_str: str, ndim: int) -> P:
+        """First matching rule's spec, left-padded with None to ``ndim``
+        (stacked leading axes replicate); P() when nothing matches."""
+        for pat, spec in self.rules:
+            if re.search(pat, path_str):
+                base = tuple(spec)
+                extra = ndim - len(base)
+                if extra < 0:
+                    return P()
+                return P(*([None] * extra + list(base)))
+        return P()
+
+    def apply(self, tree, mesh: Optional[Mesh] = None) -> Any:
+        """Per-leaf specs for ``tree``, divisibility-fitted to ``mesh``."""
+        def leaf(path, x):
+            s = self.spec_for(_path_str(path), getattr(x, "ndim", 0))
+            return fit_spec(s, getattr(x, "shape", ()), mesh)
+        return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+#: The repo's megatron parameter table as a ShardingRule (read-only view —
+#: strategy transforms still go through ``spec_for_param``).
+DEFAULT_PARAM_RULE = ShardingRule(*_PARAM_RULES)
+
+
+# ---------------------------------------------------------------------------
+# ShardingPolicy — the one public sharding surface
+# ---------------------------------------------------------------------------
+
+_POLICY: contextvars.ContextVar[Optional["ShardingPolicy"]] = (
+    contextvars.ContextVar("repro_policy", default=None))
+
+_CANONICAL_AXES = ("pod", "data", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """One object answering every "how is this run distributed?" question:
+    mesh shape, which axis does DP / FSDP / TP / sequence parallelism,
+    gradient-reduction ownership, and wire compression.
+
+    Replaces the scattered legacy spellings — ``LrcSSMConfig.seq_axis``,
+    ``SSMConfig.seq_shard``, ``TrainConfig.grad_reduce`` /
+    ``grad_compression`` / ``param_sharding``, and the free-form
+    ``--mesh`` / ``--strategy`` CLI strings — all of which keep working as
+    deprecation aliases that construct one of these (``from_legacy``,
+    ``from_train_config``).
+
+    Consumed by ``train/step.py::make_step``, ``train/loop.py::Trainer``,
+    ``serve/engine.py::ServeEngine`` and ``core/block.py`` (ambient
+    ``seq_axis`` fallback via ``current_policy``).
+    """
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    mesh_axes: Optional[Tuple[str, ...]] = None
+    dp_axes: Tuple[str, ...] = ("pod", "data")
+    fsdp_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = None
+    seq_axis: Optional[str] = None
+    strategy: str = "megatron"          # gspmd param-rule strategy
+    grad_reduce: str = "gspmd"          # "gspmd" | "explicit"
+    grad_compression: str = "none"      # "none" | "int8"
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def param_sharding(self) -> str:
+        """The explicit-seam parameter mode the axis assignment encodes."""
+        if self.tp_axis and self.fsdp_axes:
+            return "tp_fsdp"
+        if self.tp_axis:
+            return "tp"
+        if self.fsdp_axes:
+            return "fsdp"
+        return "replicated"
+
+    def build_mesh(self) -> Optional[Mesh]:
+        """Materialise the policy's mesh (None when no shape was given —
+        callers fall back to the ambient mesh)."""
+        if self.mesh_shape is None:
+            return None
+        axes = self.mesh_axes or _CANONICAL_AXES[-len(self.mesh_shape):]
+        return jax.make_mesh(tuple(self.mesh_shape), tuple(axes))
+
+    def with_mesh(self, mesh: Mesh) -> "ShardingPolicy":
+        """Policy with mesh shape/axes recorded from a built Mesh."""
+        return dataclasses.replace(
+            self, mesh_shape=tuple(mesh.shape[a] for a in mesh.axis_names),
+            mesh_axes=tuple(mesh.axis_names))
+
+    def train_overrides(self) -> Dict[str, Any]:
+        """kwargs for ``dataclasses.replace(TrainConfig, ...)`` — the
+        policy fields TrainConfig mirrors."""
+        return {"grad_reduce": self.grad_reduce,
+                "grad_compression": self.grad_compression,
+                "param_sharding": self.param_sharding}
+
+    def apply_to(self, tcfg):
+        """A TrainConfig updated to this policy's training fields."""
+        return dataclasses.replace(tcfg, **self.train_overrides())
+
+    def param_specs(self, params, mesh: Optional[Mesh] = None) -> Any:
+        """Parameter specs under this policy: explicit mode uses the
+        seam's per-mode table, gspmd mode the strategy rules."""
+        if self.grad_reduce == "explicit":
+            if mesh is None:
+                mesh = self.build_mesh() or current_mesh()
+            return explicit_param_specs(params, mesh, self.param_sharding)
+        with use_strategy(self.strategy):
+            return param_specs(params, mesh)
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_train_config(cls, tcfg, mesh: Optional[Mesh] = None,
+                          strategy: Optional[str] = None,
+                          seq_axis: Optional[str] = None
+                          ) -> "ShardingPolicy":
+        """Deprecation alias: lift the legacy TrainConfig spellings
+        (grad_reduce / grad_compression / param_sharding) into a policy."""
+        mode = getattr(tcfg, "param_sharding", "replicated")
+        tp = "model" if mode in ("tp", "tp_fsdp") else None
+        fsdp = {"fsdp": ("data", "model"),
+                "tp_fsdp": ("data",)}.get(mode, ())
+        policy = cls(tp_axis=tp, fsdp_axes=fsdp,
+                     strategy=strategy or current_strategy(),
+                     seq_axis=seq_axis,
+                     grad_reduce=tcfg.grad_reduce,
+                     grad_compression=tcfg.grad_compression)
+        return policy.with_mesh(mesh) if mesh is not None else policy
+
+    @classmethod
+    def from_legacy(cls, *, mesh_shape=None, mesh_axes=None,
+                    strategy: str = "megatron",
+                    grad_reduce: str = "gspmd",
+                    grad_compression: str = "none",
+                    param_sharding: str = "replicated",
+                    seq_shard: bool = False,
+                    seq_axis: Optional[str] = None) -> "ShardingPolicy":
+        """Deprecation alias over ALL the old spellings in one call —
+        ``SSMConfig.seq_shard`` maps to ``seq_axis="data"`` (the axis the
+        sequence-sharded solver always used)."""
+        if param_sharding not in _EXPLICIT_MODES:
+            raise ValueError(
+                f"param_sharding={param_sharding!r} not in {_EXPLICIT_MODES}")
+        tp = "model" if param_sharding in ("tp", "tp_fsdp") else None
+        fsdp = {"fsdp": ("data", "model"),
+                "tp_fsdp": ("data",)}.get(param_sharding, ())
+        return cls(mesh_shape=tuple(mesh_shape) if mesh_shape else None,
+                   mesh_axes=tuple(mesh_axes) if mesh_axes else None,
+                   tp_axis=tp, fsdp_axes=fsdp, strategy=strategy,
+                   seq_axis=seq_axis or ("data" if seq_shard else None),
+                   grad_reduce=grad_reduce,
+                   grad_compression=grad_compression)
+
+    @classmethod
+    def from_string(cls, s: Optional[str]) -> "ShardingPolicy":
+        """Parse the ``--policy`` CLI flag: comma-separated key=value
+        pairs. Keys: ``params`` (replicated|fsdp|tp|tp_fsdp — sets the
+        tp/fsdp axis assignment in one word), ``grad_reduce`` (or
+        ``reduce``), ``compression``, ``strategy``, ``seq`` (axis name or
+        "none"), ``tp`` / ``fsdp`` / ``dp`` (explicit axis assignment,
+        "+"-joined for multi-axis). Empty/None -> default policy."""
+        policy = cls()
+        if not s:
+            return policy
+        fields: Dict[str, Any] = {}
+        for pair in s.split(","):
+            pair = pair.strip()
+            if not pair:
+                continue
+            if "=" not in pair:
+                raise ValueError(f"--policy entry {pair!r} is not key=value")
+            key, val = (t.strip() for t in pair.split("=", 1))
+            if key in ("params", "param_sharding"):
+                legacy = cls.from_legacy(param_sharding=val)
+                fields["tp_axis"] = legacy.tp_axis
+                fields["fsdp_axes"] = legacy.fsdp_axes
+            elif key in ("grad_reduce", "reduce"):
+                fields["grad_reduce"] = val
+            elif key in ("compression", "grad_compression"):
+                fields["grad_compression"] = val
+            elif key == "strategy":
+                fields["strategy"] = val
+            elif key in ("seq", "seq_axis"):
+                fields["seq_axis"] = None if val == "none" else val
+            elif key == "tp":
+                fields["tp_axis"] = None if val == "none" else val
+            elif key == "fsdp":
+                fields["fsdp_axes"] = tuple(
+                    a for a in val.split("+") if a and a != "none")
+            elif key == "dp":
+                fields["dp_axes"] = tuple(a for a in val.split("+") if a)
+            else:
+                raise ValueError(f"unknown --policy key {key!r}")
+        return dataclasses.replace(policy, **fields)
+
+
+@contextlib.contextmanager
+def use_policy(policy: ShardingPolicy):
+    """Install ``policy`` as the ambient sharding policy (and its mesh,
+    when it carries one) for code in this context."""
+    token = _POLICY.set(policy)
+    try:
+        mesh = policy.build_mesh()
+        if mesh is not None:
+            with use_mesh(mesh), use_strategy(policy.strategy):
+                yield policy
+        else:
+            with use_strategy(policy.strategy):
+                yield policy
+    finally:
+        _POLICY.reset(token)
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    """The ambient ShardingPolicy installed by ``use_policy`` (None
+    outside one)."""
+    return _POLICY.get()
+
+
 def batch_specs(batch, mesh: Mesh, seq_sharded: bool = False) -> Any:
     """Input batch: leading batch dim over DP axes (strategy-aware: fsdp
     spreads over the full chip grid; ring also shards the time dim over
@@ -435,6 +893,7 @@ def batch_specs(batch, mesh: Mesh, seq_sharded: bool = False) -> Any:
     strategy = current_strategy()
 
     def leaf_spec(path, leaf):
+        """Global-batch spec for one leaf (batch dim over DP axes)."""
         nd = getattr(leaf, "ndim", 0)
         shape = getattr(leaf, "shape", ())
         if nd == 0:

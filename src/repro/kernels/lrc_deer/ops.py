@@ -46,7 +46,7 @@ from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from repro.distributed.sharding import make_spec as P
 
 from repro.core.deer_sharded import (_left_boundary, _right_jac_first,
                                      n_seq_shards)

@@ -35,7 +35,8 @@ from repro.config import SHAPES, TrainConfig
 from repro.configs import get_config, list_archs
 from repro.distributed import sharding as shd
 from repro.launch import specs as specs_lib
-from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.mesh import (make_production_mesh, mesh_chip_count,
+                               parse_mesh_spec)
 from repro.models import build_model
 from repro.roofline import analyze_compiled   # collective parse + 3 terms
 from repro.train.state import abstract_train_state
@@ -65,8 +66,16 @@ def apply_overrides(arch, ov: Dict[str, Any]):
 
 def lower_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
                arch_overrides: Optional[Dict[str, Any]] = None,
-               tcfg: Optional[TrainConfig] = None) -> Dict[str, Any]:
-    """Lower + compile one cell; return the roofline record."""
+               tcfg: Optional[TrainConfig] = None,
+               mesh_spec: Optional[str] = None,
+               policy: Optional[shd.ShardingPolicy] = None
+               ) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline record.
+
+    ``mesh_spec`` overrides the production mesh with the unified --mesh
+    grammar; ``policy`` routes the cell through a ShardingPolicy (e.g.
+    params=tp_fsdp,reduce=explicit lowers the explicit-seam TP/FSDP
+    train step instead of the gspmd baseline)."""
     arch = get_config(arch_name)
     if arch_overrides:
         arch_overrides = dict(arch_overrides)
@@ -82,15 +91,20 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
         return {"arch": arch.name, "shape": shape_name, "status": "skipped",
                 "reason": why}
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (parse_mesh_spec(mesh_spec) if mesh_spec
+            else make_production_mesh(multi_pod=multi_pod))
     chips = mesh_chip_count(mesh)
     # MoE production dispatch per config (einsum | gather).
     model = build_model(arch,
                         moe_path=arch.moe.dispatch if arch.moe else "dense")
     tcfg = tcfg or TrainConfig(microbatch=0)
+    if policy is not None:
+        tcfg = policy.apply_to(tcfg)
     t0 = time.time()
 
-    with shd.use_mesh(mesh), shd.use_strategy(arch.sharding_strategy):
+    strategy = (policy.strategy if policy is not None
+                and policy.strategy != "megatron" else arch.sharding_strategy)
+    with shd.use_mesh(mesh), shd.use_strategy(strategy):
         params_s = _abstract_params(model)
 
         if shape.kind in ("train", "prefill"):
@@ -117,6 +131,8 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
     record.update({
         "status": "ok", "multi_pod": multi_pod, "chips": chips,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "grad_reduce": tcfg.grad_reduce,
+        "param_sharding": tcfg.param_sharding,
     })
     return record
 
@@ -133,6 +149,13 @@ def main():
                     help="append JSONL records here")
     ap.add_argument("--override", type=str, default=None,
                     help="JSON dict of ArchConfig overrides (perf iterations)")
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="unified mesh grammar (e.g. 2x16x16) overriding "
+                         "the production mesh")
+    ap.add_argument("--policy", type=str, default=None,
+                    help="unified ShardingPolicy spelling — e.g. "
+                         "params=tp_fsdp,reduce=explicit lowers the "
+                         "explicit-seam TP/FSDP cell")
     args = ap.parse_args()
 
     cells = []
@@ -146,11 +169,14 @@ def main():
                       args.multi_pod))
 
     overrides = json.loads(args.override) if args.override else None
+    policy = (shd.ShardingPolicy.from_string(args.policy)
+              if args.policy else None)
     failures = 0
     for arch_name, shape_name, mp in cells:
         try:
             rec = lower_cell(arch_name, shape_name, multi_pod=mp,
-                             arch_overrides=overrides)
+                             arch_overrides=overrides, mesh_spec=args.mesh,
+                             policy=policy)
         except Exception as e:  # a failure here is a bug in the system
             traceback.print_exc()
             rec = {"arch": arch_name, "shape": shape_name, "status": "error",

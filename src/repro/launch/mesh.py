@@ -18,6 +18,28 @@ import jax
 from jax.sharding import Mesh
 
 
+def parse_mesh_spec(spec: str) -> Mesh:
+    """THE ``--mesh`` grammar, shared by every launcher (train / serve /
+    dryrun): "x"-separated dim sizes, axis names assigned right-aligned
+    from the canonical ("pod", "data", "model") order.
+
+        "8"      -> (8,)       ("model",)
+        "1x4"    -> (1, 4)     ("data", "model")
+        "2x16x16"-> (2,16,16)  ("pod", "data", "model")
+
+    The pod axis only exists when three dims are given — exactly the
+    spelling that engages the cross-pod explicit-gradient engine."""
+    try:
+        dims = tuple(int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh {spec!r}: expected INTxINT[xINT]")
+    if not 1 <= len(dims) <= 3 or any(d < 1 for d in dims):
+        raise ValueError(f"--mesh {spec!r}: 1-3 positive dims required "
+                         "(DATAxMODEL or PODxDATAxMODEL)")
+    axes = ("pod", "data", "model")[-len(dims):]
+    return jax.make_mesh(dims, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

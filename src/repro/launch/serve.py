@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.distributed import sharding as shd
+from repro.launch.mesh import parse_mesh_spec
 from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
 
@@ -36,6 +37,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--mesh", default="1x1",
                     help="DxM or PxDxM mesh spelling (e.g. 1x4, 2x8x2)")
+    ap.add_argument("--policy", default=None,
+                    help="unified ShardingPolicy spelling (key=value,"
+                         "comma-separated) — default: strategy=serve")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as the engine streams them")
     args = ap.parse_args()
@@ -44,20 +48,23 @@ def main():
     arch = get_reduced(name) if args.reduced else get_config(name)
     arch = dataclasses.replace(arch, sharding_strategy="serve")
     model = build_model(arch)
-    dims = tuple(int(x) for x in args.mesh.split("x"))
-    axes = ("pod", "data", "model")[-len(dims):]
-    mesh = jax.make_mesh(dims, axes)
+    mesh = parse_mesh_spec(args.mesh)
+    if args.policy:
+        policy = shd.ShardingPolicy.from_string(args.policy).with_mesh(mesh)
+    else:
+        policy = shd.ShardingPolicy(strategy="serve").with_mesh(mesh)
 
     stream = None
     if args.stream:
         stream = lambda uid, tok, done: print(
             f"  [stream] req {uid} -> {tok}{' <done>' if done else ''}")
 
-    with shd.use_mesh(mesh), shd.use_strategy("serve"):
+    with shd.use_policy(policy):
         params = model.init(jax.random.PRNGKey(0))
         engine = ServeEngine(model, params, batch_slots=args.slots,
                              max_seq=args.max_seq,
-                             prefill_chunk=args.prefill_chunk, mesh=mesh)
+                             prefill_chunk=args.prefill_chunk, mesh=mesh,
+                             policy=policy)
         rng = np.random.default_rng(0)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, arch.vocab,

@@ -13,13 +13,12 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-import jax
-
 from repro import nn
 from repro.config import TrainConfig
 from repro.configs import get_config, get_reduced
 from repro.data.pipeline import TokenTaskSource
 from repro.distributed import sharding as shd
+from repro.launch.mesh import parse_mesh_spec
 from repro.models import build_model
 from repro.train.loop import Trainer
 
@@ -51,6 +50,15 @@ def main():
                          "(error-feedback residual carried in TrainState)")
     ap.add_argument("--residual-dtype", default="float32",
                     choices=["float32", "bfloat16"])
+    ap.add_argument("--param-sharding", default="replicated",
+                    choices=["replicated", "fsdp", "tp", "tp_fsdp"],
+                    help="explicit-seam parameter layout (needs "
+                         "--grad-reduce explicit for the sharded modes)")
+    ap.add_argument("--policy", default=None,
+                    help="unified ShardingPolicy spelling (key=value,"
+                         "comma-separated: params=tp_fsdp,reduce=explicit,"
+                         "compression=int8,seq=data,...) — overrides the "
+                         "individual legacy flags above")
     args = ap.parse_args()
 
     name = args.arch.replace("-", "_")
@@ -58,25 +66,29 @@ def main():
     arch = dataclasses.replace(arch, sharding_strategy=args.strategy)
     model = build_model(arch)
 
-    mesh_dims = tuple(int(x) for x in args.mesh.split("x"))
-    # PODxDATAxMODEL engages the pod-local gradient engine; DATAxMODEL is
-    # the single-pod layout.
-    axes = ("pod", "data", "model") if len(mesh_dims) == 3 \
-        else ("data", "model")
-    mesh = jax.make_mesh(mesh_dims, axes)
+    mesh = parse_mesh_spec(args.mesh)
     tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=20,
                        total_steps=args.steps, microbatch=args.microbatch,
                        checkpoint_every=args.ckpt_every,
                        checkpoint_dir=args.ckpt_dir,
                        grad_reduce=args.grad_reduce,
                        grad_compression=args.grad_compression,
+                       param_sharding=args.param_sharding,
                        residual_dtype=args.residual_dtype)
 
-    with shd.use_strategy(args.strategy):
-        trainer = Trainer(model, tcfg, mesh)
+    if args.policy:
+        policy = shd.ShardingPolicy.from_string(args.policy).with_mesh(mesh)
+    else:
+        policy = shd.ShardingPolicy.from_train_config(
+            tcfg, mesh=mesh, strategy=args.strategy)
+    tcfg = policy.apply_to(tcfg)
+
+    with shd.use_policy(policy):
+        trainer = Trainer(model, tcfg, mesh, policy=policy)
         print(f"[launch] {arch.name} params="
               f"{nn.count_params(trainer.params)/1e6:.1f}M "
-              f"mesh={dict(mesh.shape)} strategy={args.strategy}")
+              f"mesh={dict(mesh.shape)} strategy={policy.strategy} "
+              f"params_layout={policy.param_sharding}")
         if args.resume:
             trainer.maybe_resume()
         data = TokenTaskSource(vocab=arch.vocab, seq_len=args.seq,

@@ -189,7 +189,7 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mesh,
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return out.transpose(0, 2, 1, 3).astype(qs.dtype)
 
-    from jax.sharding import PartitionSpec as P_
+    from repro.distributed.sharding import make_spec as P_
     # batch stays sharded over the DP axes INSIDE the shard_map — an
     # in_spec of None there would force an all-gather of the batch (the
     # B2-ring refuted-iteration bug: 16x redundant compute + gathers)
@@ -255,7 +255,7 @@ def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
         out = (o / jnp.maximum(l[..., None], 1e-30))[:, None]
         return out.astype(qs.dtype), kc, vc
 
-    from jax.sharding import PartitionSpec as P_
+    from repro.distributed.sharding import make_spec as P_
     B = q.shape[0]
     ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names
                and a not in axes) or None

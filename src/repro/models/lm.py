@@ -34,11 +34,52 @@ import jax.numpy as jnp
 
 from repro import nn
 from repro.config import ArchConfig
-from repro.distributed.sharding import shard_activation
+from repro.distributed.sharding import (in_manual_body, shard_activation,
+                                        tp_gather_weight, tp_index, tp_info,
+                                        tp_region_in, tp_region_out)
 from repro.models import attention as attn_lib
 from repro.models import mixers, moe as moe_lib
 
 Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# manual tensor parallelism (explicit gradient seam)
+# ---------------------------------------------------------------------------
+
+def tp_unsupported_patterns(arch: ArchConfig, m: int) -> Tuple[str, ...]:
+    """Parameter-path regexes the manual-TP branches cannot shard at TP
+    degree ``m`` — consumed by train/step.py so the explicit-seam specs
+    force those leaves replicated. The model code's shape tests then see
+    full weights and take the replicated path automatically: specs and
+    compute can never disagree.
+
+    Covers packed layouts whose segment structure does not divide by ``m``
+    (attention heads, mamba2 head count / conv channels) and layouts with
+    no TP branch at all (mamba1's (d_inner, N) ``A_log``, which instead
+    stays replicated and is sliced inside the mixer's TP branch; the whole
+    enc-dec audio family)."""
+    if m <= 1:
+        return ()
+    if arch.family == "audio":
+        return (r".*",)
+    pats = []
+    H, K = arch.n_heads, arch.n_kv_heads
+    if H % m or K % m:
+        pats += [r"wqkv$", r"wo$"]
+    if arch.d_ff % m:
+        pats += [r"w_gate$", r"w_up$", r"w_down$", r"fc1/", r"fc2/"]
+    if arch.ssm is not None:
+        d_inner = arch.ssm.expand * arch.d_model
+        bad = d_inner % m != 0
+        if arch.ssm.kind == "mamba2":
+            _, H2, _, N2, _ = mixers.mamba2_dims(arch)
+            bad = bad or H2 % m != 0 or (d_inner + 2 * N2) % m != 0
+        if bad:
+            pats.append(r"mixer/")
+        elif arch.ssm.kind == "mamba1":
+            pats.append(r"mixer/A_log$")
+    return tuple(pats)
 
 
 # ---------------------------------------------------------------------------
@@ -96,8 +137,23 @@ def _ffn(arch: ArchConfig, p: Params, x: jax.Array,
     act = nn.ACTIVATIONS[arch.act]
     if arch.moe is not None:
         return moe_lib.moe_apply(p["moe"], arch, x, path=moe_path)
+    tp_ax, tp_m = tp_info()
     if "w_gate" in p:
+        if (tp_ax is not None
+                and p["w_gate"].shape[1] * tp_m == arch.d_ff
+                and p["w_down"].shape[0] * tp_m == arch.d_ff):
+            # megatron column/row split: gate+up columns, down rows
+            xt = tp_region_in(x, tp_ax)
+            a = act(xt @ p["w_gate"]) * (xt @ p["w_up"])
+            return tp_region_out(a @ p["w_down"], tp_ax)
         return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if (tp_ax is not None
+            and p["fc1"]["w"].shape[1] * tp_m == arch.d_ff
+            and p["fc2"]["w"].shape[0] * tp_m == arch.d_ff):
+        xt = tp_region_in(x, tp_ax)
+        hcol = act(xt @ p["fc1"]["w"] + p["fc1"]["b"])
+        # fc2 bias is replicated: add it AFTER the closing psum, once
+        return tp_region_out(hcol @ p["fc2"]["w"], tp_ax) + p["fc2"]["b"]
     return nn.dense(p["fc2"], act(nn.dense(p["fc1"], x)))
 
 
@@ -111,8 +167,30 @@ def attn_block_apply(arch: ArchConfig, p: Params, h: jax.Array, *,
     B, T, d = h.shape
     H, K, hd = arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
     hn = _norm(arch, p["norm1"], h)
-    qkv = (hn @ p["wqkv"].astype(h.dtype))
-    q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    tp_ax, tp_m = tp_info()
+    tp = (tp_ax is not None
+          and p["wqkv"].shape[1] * tp_m == (H + 2 * K) * hd
+          and p["wo"].shape[0] * tp_m == H * hd
+          and H % tp_m == 0 and K % tp_m == 0)
+    if tp:
+        # column-parallel qkv over heads: the packed [q|k|v] layout does
+        # not slice contiguously per rank, so gather the weight and cut
+        # this rank's head block out of each segment (the gather's
+        # psum_scatter transpose keeps the gradients exact)
+        hn = tp_region_in(hn, tp_ax)
+        wf = tp_gather_weight(p["wqkv"].astype(h.dtype), tp_ax, 1)
+        r = tp_index(tp_ax)
+        H_l, K_l = H // tp_m, K // tp_m
+        q = hn @ jax.lax.dynamic_slice_in_dim(wf, r * H_l * hd,
+                                              H_l * hd, 1)
+        k = hn @ jax.lax.dynamic_slice_in_dim(wf, H * hd + r * K_l * hd,
+                                              K_l * hd, 1)
+        v = hn @ jax.lax.dynamic_slice_in_dim(
+            wf, (H + K) * hd + r * K_l * hd, K_l * hd, 1)
+        H, K = H_l, K_l
+    else:
+        qkv = (hn @ p["wqkv"].astype(h.dtype))
+        q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
     q = q.reshape(B, T, H, hd)
     k = k.reshape(B, T, K, hd)
     v = v.reshape(B, T, K, hd)
@@ -122,13 +200,15 @@ def attn_block_apply(arch: ArchConfig, p: Params, h: jax.Array, *,
     from repro.distributed.sharding import current_mesh
     mesh = current_mesh()
     if (arch.attn_impl == "ring" and window is None and mesh is not None
-            and "model" in mesh.axis_names):
+            and "model" in mesh.axis_names and not in_manual_body()):
         o = attn_lib.ring_attention(q, k, v, mesh=mesh, causal=True)
     else:
         kv_chunk = T if arch.exact_hlo else 1024
         o = attn_lib.attention(q, k, v, causal=True, window=window,
                                kv_chunk=kv_chunk)
     o = o.reshape(B, T, H * hd) @ p["wo"].astype(h.dtype)
+    if tp:
+        o = tp_region_out(o, tp_ax)
     h = h + shard_activation(o, "act")
     hn = _norm(arch, p["norm2"], h)
     h = h + shard_activation(_ffn(arch, p, hn, moe_path), "act")
@@ -399,7 +479,7 @@ def _attn_decode(arch: ArchConfig, lp: Params, h: jax.Array, cache_l: Dict,
     # ring semantics for windowed layers: all S slots valid once pos >= S
     eff_len = jnp.minimum(pos + 1, S) if window else pos + 1
     seq_axes = None
-    if not per_slot:
+    if not per_slot and not in_manual_body():
         from repro.distributed.sharding import current_mesh
         mesh = current_mesh()
         if mesh is not None and "model" in mesh.axis_names:

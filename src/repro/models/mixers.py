@@ -42,8 +42,12 @@ from repro import nn
 from repro.config import ArchConfig, SSMConfig
 from repro.core.deer import DeerConfig, deer_solve
 from repro.core.scan import chunked_diag_scan, diag_linear_scan
+from repro.distributed.sharding import (tp_gather_weight, tp_index, tp_info,
+                                        tp_psum, tp_region_in, tp_region_out)
 
 Params = Dict[str, Any]
+
+_dsl = jax.lax.dynamic_slice_in_dim
 
 
 # ---------------------------------------------------------------------------
@@ -136,8 +140,27 @@ def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
     prefill = state is not None and T > 1
     L = T if prefill_len is None else prefill_len
 
-    xz = nn.dense(p["in_proj"], h)
-    x, z = jnp.split(xz, 2, axis=-1)
+    tp_ax, tp_m = tp_info()
+    tp = (tp_ax is not None
+          and p["in_proj"]["w"].shape[1] * tp_m == 2 * d_inner)
+    if tp:
+        # channel-parallel mixer: gather the packed [x|z] in_proj, slice
+        # this rank's channel block from each segment; per-channel params
+        # (conv, dt_proj cols, D) arrive already sharded by the specs.
+        # A_log is (d_inner, N) and stays replicated — slice it behind a
+        # tp_region_in seam so its gradient is psum'd back to replicated.
+        di_l = d_inner // tp_m
+        r = tp_index(tp_ax)
+        wf = tp_gather_weight(p["in_proj"]["w"], tp_ax, 1)
+        h_t = tp_region_in(h, tp_ax)
+        x = h_t @ _dsl(wf, r * di_l, di_l, 1)
+        z = h_t @ _dsl(wf, d_inner + r * di_l, di_l, 1)
+        A_log = _dsl(tp_region_in(p["A_log"], tp_ax), r * di_l, di_l, 0)
+        d_inner = di_l
+    else:
+        A_log = p["A_log"]
+        xz = nn.dense(p["in_proj"], h)
+        x, z = jnp.split(xz, 2, axis=-1)
 
     if state is None:
         x = causal_conv1d(p["conv_w"], p["conv_b"], x)
@@ -154,9 +177,13 @@ def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
     x = jax.nn.silu(x)
 
     dbc = nn.dense(p["x_proj"], x)
+    if tp:
+        # row-parallel x_proj: the partial (dt, B, C) sums to the full
+        # value and is consumed shard-wise below -> tp_psum seam
+        dbc = tp_psum(dbc, tp_ax)
     dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
     delta = jax.nn.softplus(nn.dense(p["dt_proj"], dt))        # (B,T,di)
-    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di,N)
+    A = -jnp.exp(A_log.astype(jnp.float32))                    # (di,N)
 
     lam = jnp.exp(delta[..., None].astype(jnp.float32) * A)    # (B,T,di,N)
     beta = (delta[..., None] * Bc[..., None, :] * x[..., None]).astype(jnp.float32)
@@ -181,6 +208,8 @@ def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
     y = y.astype(cdt) + p["D"].astype(cdt) * x
     y = y * jax.nn.silu(z)
     out = nn.dense(p["out_proj"], y)
+    if tp:
+        out = tp_region_out(out, tp_ax)
     new_state = None if state is None else {"conv": conv_buf_new, "ssm": ssm_new}
     return out, new_state
 
@@ -233,21 +262,51 @@ def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
     prefill = state is not None and T > 1
     L = T if prefill_len is None else prefill_len
 
-    proj = nn.dense(p["in_proj"], h)
-    x, z, Bc, Cc, dt = jnp.split(
-        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
-        axis=-1)
+    tp_ax, tp_m = tp_info()
+    tp = (tp_ax is not None
+          and p["in_proj"]["w"].shape[1] * tp_m == 2 * d_inner + 2 * N + H)
+    if tp:
+        # head-parallel mixer: gather the packed [x|z|B|C|dt] in_proj and
+        # slice this rank's channel/head blocks; the B and C segments are
+        # SHARED (state dim is per-head-replicated) so every rank keeps
+        # them whole — the gather's psum_scatter transpose sums the
+        # overlapping cotangents, keeping their gradients exact. The conv
+        # weight/bias are packed [x|B|C] the same way.
+        d_full, di_l, H_l = d_inner, d_inner // tp_m, H // tp_m
+        r = tp_index(tp_ax)
+        wf = tp_gather_weight(p["in_proj"]["w"], tp_ax, 1)
+        h_t = tp_region_in(h, tp_ax)
+        x = h_t @ _dsl(wf, r * di_l, di_l, 1)
+        z = h_t @ _dsl(wf, d_full + r * di_l, di_l, 1)
+        Bc = h_t @ _dsl(wf, 2 * d_full, N, 1)
+        Cc = h_t @ _dsl(wf, 2 * d_full + N, N, 1)
+        dt = h_t @ _dsl(wf, 2 * d_full + 2 * N + r * H_l, H_l, 1)
+        cwf = tp_gather_weight(p["conv_w"], tp_ax, 1)
+        conv_w = jnp.concatenate([_dsl(cwf, r * di_l, di_l, 1),
+                                  _dsl(cwf, d_full, 2 * N, 1)], axis=1)
+        cbf = tp_gather_weight(p["conv_b"], tp_ax, 0)
+        conv_b = jnp.concatenate([_dsl(cbf, r * di_l, di_l, 0),
+                                  _dsl(cbf, d_full, 2 * N, 0)], axis=0)
+        d_inner, H = di_l, H_l
+    else:
+        d_full = d_inner
+        conv_w, conv_b = p["conv_w"], p["conv_b"]
+        proj = nn.dense(p["in_proj"], h)
+        x, z, Bc, Cc, dt = jnp.split(
+            proj, [d_inner, 2 * d_inner, 2 * d_inner + N,
+                   2 * d_inner + 2 * N],
+            axis=-1)
     xbc = jnp.concatenate([x, Bc, Cc], axis=-1)
     if state is None:
-        xbc = causal_conv1d(p["conv_w"], p["conv_b"], xbc)
+        xbc = causal_conv1d(conv_w, conv_b, xbc)
         conv_new = None
     elif prefill:
-        xbc, xp = causal_conv1d_prefill(p["conv_w"], p["conv_b"],
+        xbc, xp = causal_conv1d_prefill(conv_w, conv_b,
                                         state["conv"], xbc)
         conv_new = jax.lax.dynamic_slice_in_dim(
             xp, L, W - 1, axis=1).astype(state["conv"].dtype)
     else:
-        conv_new, xs = conv_step(p["conv_w"], p["conv_b"], state["conv"],
+        conv_new, xs = conv_step(conv_w, conv_b, state["conv"],
                                  xbc[:, 0])
         xbc = xs[:, None]
     xbc = jax.nn.silu(xbc)
@@ -281,8 +340,20 @@ def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
     y = jnp.einsum("bthpn,btn->bthp", hs, Cc.astype(jnp.float32))
     y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
     y = y.reshape(B, -1, d_inner).astype(cdt)
-    y = nn.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    g = y * jax.nn.silu(z)
+    if tp:
+        # the internal RMSNorm reduces over the FULL d_inner: local sum of
+        # squares, tp_psum'd across the shards (rank-varying cotangents)
+        gf = g.astype(jnp.float32)
+        ms = tp_psum(jnp.sum(gf * gf, axis=-1, keepdims=True),
+                     tp_ax) / d_full
+        y = ((gf * jax.lax.rsqrt(ms + 1e-6))
+             * p["norm"]["scale"].astype(jnp.float32)).astype(g.dtype)
+    else:
+        y = nn.rmsnorm(p["norm"], g)
     out = nn.dense(p["out_proj"], y)
+    if tp:
+        out = tp_region_out(out, tp_ax)
     new_state = None if state is None else {"conv": conv_new, "ssm": ssm_new}
     return out, new_state
 
@@ -349,8 +420,24 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
     cdt = arch.dtype
     prefill = state is not None and T > 1
 
-    xz = nn.dense(p["in_proj"], h)
-    u, z = jnp.split(xz, 2, axis=-1)
+    tp_ax, tp_m = tp_info()
+    tp = (tp_ax is not None
+          and p["in_proj"]["w"].shape[1] * tp_m == 2 * d_inner)
+    if tp:
+        # channel-parallel mixer: z is sliced per rank, but u stays FULL on
+        # every rank — the full-rank gate matmuls below consume all of u
+        # with column-sharded a_u/w_u, which lands s_u/eps_u on this rank's
+        # channels. Per-channel cell params arrive sharded by the specs.
+        di_l = d_inner // tp_m
+        r = tp_index(tp_ax)
+        wf = tp_gather_weight(p["in_proj"]["w"], tp_ax, 1)
+        h_t = tp_region_in(h, tp_ax)
+        u = h_t @ _dsl(wf, 0, d_inner, 1)
+        z = h_t @ _dsl(wf, d_inner + r * di_l, di_l, 1)
+        d_inner = di_l
+    else:
+        xz = nn.dense(p["in_proj"], h)
+        u, z = jnp.split(xz, 2, axis=-1)
 
     # Newton-invariant input features: two matmuls, computed once.
     s_u = jax.nn.sigmoid(u @ p["a_u"] + p["b_u"]).astype(jnp.float32)
@@ -378,6 +465,8 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
 
     y = states.astype(cdt) * jax.nn.silu(z)
     out = nn.dense(p["out_proj"], y)
+    if tp:
+        out = tp_region_out(out, tp_ax)
     return out, (None if state is None else {"ssm": ssm_new})
 
 
@@ -409,8 +498,11 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
     if arch.ssm.seq_shard:
         from repro.core.deer_sharded import n_seq_shards
         from repro.distributed import compat
-        from repro.distributed.sharding import batch_axes, current_mesh
-        mesh = current_mesh()
+        from repro.distributed.sharding import (batch_axes, current_mesh,
+                                                in_manual_body)
+        # inside a fully-manual shard_map body (the explicit gradient seam)
+        # the solver must not open its own shard_map — run the local tier
+        mesh = None if in_manual_body() else current_mesh()
         if mesh is not None and "model" in mesh.axis_names:
             ba = batch_axes(mesh)
             if ba is not None and B % compat.axis_size(mesh, ba) != 0:

@@ -156,10 +156,13 @@ def moe_apply_local(p: Params, arch: ArchConfig, h: jax.Array) -> jax.Array:
     bytes than the expert weights occupy. §Perf D7.
     """
     from repro.distributed import compat
-    from repro.distributed.sharding import batch_axes, current_mesh
-    from jax.sharding import PartitionSpec as P_
+    from repro.distributed.sharding import (batch_axes, current_mesh,
+                                            in_manual_body)
+    from repro.distributed.sharding import make_spec as P_
     mesh = current_mesh()
-    if mesh is None:
+    if mesh is None or in_manual_body():
+        # already inside a fully-manual shard_map (explicit gradient seam):
+        # tokens are per-device by construction, dispatch locally
         return moe_apply_gather(p, arch, h)
     ba = batch_axes(mesh)
     if ba is None:

@@ -60,18 +60,27 @@ def clip_by_global_norm(grads, max_norm: float):
         lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
 
 
-def adamw_apply(cfg: TrainConfig, grads, step, m, v, master, params
-                ) -> Tuple[Any, Any, Any, Any, dict]:
+def adamw_apply(cfg: TrainConfig, grads, step, m, v, master, params,
+                grad_norm=None) -> Tuple[Any, Any, Any, Any, dict]:
     """Core AdamW on PRE-REDUCED gradients.
 
     ``grads`` must already be the global (cross-replica) mean — this
     function never inserts a collective, so it composes with both gradient
     reduction modes (GSPMD-implicit and the explicit shard_map'd pod
     reduction in train/step.py). ``step`` is the POST-increment step count
-    (TrainState owns the counter). Returns
-    ``(new_params, new_m, new_v, new_master, metrics)``.
+    (TrainState owns the counter). When the caller holds gradient SHARDS
+    (explicit-seam FSDP/TP), the local ``global_norm`` would be wrong — it
+    precomputes the true norm (with its own collective, outside this
+    function) and passes it as ``grad_norm``; clipping then uses that value
+    verbatim. Returns ``(new_params, new_m, new_v, new_master, metrics)``.
     """
-    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    if grad_norm is None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = grad_norm
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
     lr = cosine_schedule(cfg)(step)
     b1, b2 = cfg.b1, cfg.b2
     bc1 = 1.0 - b1 ** step.astype(jnp.float32)

@@ -66,7 +66,11 @@ class ServeEngine:
     tick through ``train/step.jit_step``'s sharded serve wiring."""
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_seq: int = 256, prefill_chunk: int = 32, mesh=None):
+                 max_seq: int = 256, prefill_chunk: int = 32, mesh=None,
+                 policy=None):
+        if policy is not None and mesh is None:
+            mesh = policy.build_mesh()
+        self.policy = policy
         if model.prefill is None:
             raise ValueError(f"model family {model.arch.family!r} has no "
                              "chunked-prefill implementation — the serve "

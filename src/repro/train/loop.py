@@ -49,12 +49,21 @@ class StepStats:
 
 
 class Trainer:
-    def __init__(self, model, tcfg: TrainConfig, mesh, params=None,
+    def __init__(self, model, tcfg: TrainConfig, mesh=None, params=None,
                  straggler_factor: float = 3.0, log_every: int = 10,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 policy: Optional[shd.ShardingPolicy] = None):
+        if policy is not None:
+            tcfg = policy.apply_to(tcfg)
+            if mesh is None:
+                mesh = policy.build_mesh()
+        if mesh is None:
+            raise ValueError("Trainer needs a mesh (directly or via a "
+                             "policy carrying mesh_shape)")
         self.model = model
         self.tcfg = tcfg
         self.mesh = mesh
+        self.policy = policy
         self.log_fn = log_fn
         self.straggler_factor = straggler_factor
         self.log_every = log_every
@@ -81,8 +90,11 @@ class Trainer:
         latest = self.ckpt.latest_step()
         if latest is None:
             return False
-        from repro.train.step import train_state_specs
-        specs = train_state_specs(self.state, self.mesh, self.tcfg)
+        from repro.train.step import _tp_layout_overrides, train_state_specs
+        specs = train_state_specs(
+            self.state, self.mesh, self.tcfg,
+            replicate=_tp_layout_overrides(self.model, self.mesh,
+                                           self.tcfg))
         step, restored, extra = self.ckpt.restore(
             latest, mesh=self.mesh, specs={"state": specs},
             target={"state": self.state})

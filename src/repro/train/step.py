@@ -22,15 +22,35 @@ Gradient-reduction modes (TrainConfig.grad_reduce):
     all-reduce still happens), with the error-feedback residual threaded
     through TrainState.
   * ``"explicit"`` — the POD-LOCAL path: the whole grad+update runs inside
-    one shard_map over the mesh. Gradients are computed per-device,
-    pmean'd over "data" only (intra-pod ICI), then ONE explicit cross-pod
-    reduction: fp32 pmean, or ``compressed_psum`` (int8 payload + fp32
-    per-block scales on the wire) with the per-pod error-feedback residual
-    carried in TrainState. GSPMD's implicit fp32 pod all-reduce does not
-    exist in the lowered HLO — asserted by compiled-text inspection in
-    tests/test_train_engine.py. Contract: pure-DP parameters (replicated);
-    composing explicit reduction with TP/FSDP via partially-manual
-    shard_map is a ROADMAP item.
+    one FULLY-MANUAL shard_map over the mesh. Gradients are computed
+    per-device, reduced over "data" (intra-pod ICI), then ONE explicit
+    cross-pod reduction: fp32 pmean, or ``compressed_psum`` (int8 payload +
+    fp32 per-block scales on the wire) with the per-pod error-feedback
+    residual carried in TrainState. GSPMD's implicit fp32 pod all-reduce
+    does not exist in the lowered HLO — asserted by compiled-text
+    inspection in tests/test_train_engine.py.
+
+    Parameter layout inside the seam (TrainConfig.param_sharding, usually
+    set through ``distributed.sharding.ShardingPolicy``):
+
+      - ``"replicated"`` — pure DP (the original contract);
+      - ``"fsdp"``       — TrainState leaves keep their GLOBAL logical
+        shapes, the shard_map in_specs slice them over the
+        ("data", "model") grid; the body all-gathers each sharded leaf
+        ONCE (before the microbatch scan) and folds the gradient
+        reduce-scatter into the same seam that already owns the data
+        reduction — so checkpoints stay elastic across mesh shape;
+      - ``"tp"``         — "model"-axis tensor parallelism: megatron
+        f/g seams live in the MODEL code (sharding.tp_region_in/_out),
+        selected per leaf by shape test under ``sharding.tp_region``;
+      - ``"tp_fsdp"``    — both: megatron-table "data" entries are FSDP
+        gather axes on the seam, "model" entries stay TP-local (3D
+        parallelism: pod DP x data FSDP x model TP).
+
+    Every mode runs fully-manual: on the jax 0.4.x line the XLA partitioner
+    rejects data-moving collectives (all_gather/psum_scatter) over manual
+    axes of a PARTIALLY-manual shard_map — see
+    ``compat.PARTIAL_AUTO_DATA_COLLECTIVES_OK``.
 
 Microbatch gradient accumulation (lax.scan over microbatches) applies in
 both modes; a batch that does not divide evenly is a hard factory/trace
@@ -125,7 +145,8 @@ def _compressed_pod_allreduce(grads, residual, mesh: Mesh,
 
     def local(g, r):
         red, new_r = compressed_psum(
-            g, "pod", _squeeze_pod(r), error_feedback=tcfg.error_feedback)
+            g, "pod", _squeeze_pod(r), error_feedback=tcfg.error_feedback,
+            axis_size=dict(mesh.shape).get("pod", 1))
         return red, _unsqueeze_pod(new_r)
 
     return compat.shard_map(local, mesh=mesh, in_specs=(pspecs, rspecs),
@@ -138,11 +159,20 @@ def _compressed_pod_allreduce(grads, residual, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def make_step(model: Model, mode: str, tcfg: Optional[TrainConfig] = None,
-              mesh: Optional[Mesh] = None) -> Callable:
+              mesh: Optional[Mesh] = None,
+              policy: Optional[shd.ShardingPolicy] = None) -> Callable:
     """Build the pure step function for ``mode`` in
     ``("train", "eval", "serve")``. ``tcfg`` is required for train;
     ``mesh`` is required for the explicit-reduction train path (the
-    shard_map is constructed at factory time)."""
+    shard_map is constructed at factory time). ``policy`` (a
+    ``distributed.sharding.ShardingPolicy``) overrides the legacy
+    TrainConfig sharding fields and supplies the mesh when it carries
+    one."""
+    if policy is not None:
+        if mesh is None:
+            mesh = policy.build_mesh() or shd.current_mesh()
+        if tcfg is not None:
+            tcfg = policy.apply_to(tcfg)
     if mode == "eval":
         def eval_step(params, batch):
             return model.loss(params, batch)
@@ -197,61 +227,177 @@ def _make_gspmd_train_step(model: Model, tcfg: TrainConfig,
     return train_step
 
 
-def _make_explicit_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
-    """Pod-local gradient engine: the WHOLE step under one shard_map.
+def _tp_layout_overrides(model: Model, mesh: Mesh,
+                         tcfg: TrainConfig) -> Tuple[str, ...]:
+    """Regex patterns of parameters that CANNOT be TP-sharded for this
+    model (packed layouts whose segment structure does not divide by the
+    TP degree) — forced replicated so the specs never promise a layout the
+    model's manual-TP branches cannot compute."""
+    mode = getattr(tcfg, "param_sharding", "replicated")
+    if mode not in ("tp", "tp_fsdp"):
+        return ()
+    m = mesh.shape.get("model", 1)
+    if m <= 1:
+        return ()
+    from repro.models.lm import tp_unsupported_patterns
+    return tp_unsupported_patterns(model.arch, m)
 
-    Per-device body: local grads -> pmean over "data" (intra-pod) -> ONE
-    cross-pod reduction (fp32 pmean or int8 compressed_psum with
-    error-feedback residual) -> replicated AdamW update. Any "model" axis
-    in the mesh carries redundant replicas (pure-DP contract)."""
+
+def _explicit_state_specs(state_like: TrainState, mesh: Mesh,
+                          tcfg: TrainConfig,
+                          replicate: Tuple[str, ...] = ()) -> TrainState:
+    """Per-leaf TrainState specs for the explicit seam under
+    ``tcfg.param_sharding`` — params/m/v/master share the parameter specs
+    (ZeRO for the sharded modes comes free: the optimizer runs leaf-wise
+    on whatever shard the in_specs carve out), the residual keeps its
+    leading pod dim over the param layout."""
+    mode = getattr(tcfg, "param_sharding", "replicated")
+    pspecs = shd.explicit_param_specs(state_like.params, mesh, mode,
+                                      replicate=replicate)
+    if jax.tree_util.tree_leaves(state_like.residual):
+        rspecs = shd.residual_specs(
+            state_like.residual, mesh,
+            param_specs=None if mode == "replicated" else pspecs)
+    else:
+        rspecs = state_like.residual      # {} — no residual state
+    return TrainState(step=P(), params=pspecs, m=pspecs, v=pspecs,
+                      master=pspecs, residual=rspecs)
+
+
+def _make_explicit_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
+    """Pod-local gradient engine: the WHOLE step under one fully-manual
+    shard_map.
+
+    Per-device body: (FSDP modes) all-gather the sharded parameter leaves
+    ONCE — before the microbatch loop — then local grads under
+    ``manual_body`` (+ ``tp_region`` for the TP modes), gradient reduction
+    over "data" (reduce-scatter back onto the FSDP shards, pmean for
+    everything else), then ONE cross-pod reduction (fp32 pmean or int8
+    compressed_psum with error-feedback residual), then the leaf-wise
+    AdamW update on whatever shard this device owns."""
     from repro.distributed.compression import compressed_psum
     has_pod = "pod" in mesh.axis_names
     has_data = "data" in mesh.axis_names
-    ba = shd.batch_axes(mesh)
     int8 = tcfg.grad_compression == "int8" and has_pod
+    n_pod = dict(mesh.shape).get("pod", 1)
+    mode = getattr(tcfg, "param_sharding", "replicated")
+    if mode not in shd._EXPLICIT_MODES:
+        raise ValueError(f"unknown param_sharding mode: {mode!r}")
+    sizes = dict(mesh.shape)
+    tp_m = sizes.get("model", 1)
+    tp_ax = "model" if (mode in ("tp", "tp_fsdp") and tp_m > 1) else None
+    fsdp_axes = {"fsdp": ("data", "model"),
+                 "tp_fsdp": ("data",)}.get(mode, ())
+    fsdp_axes = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+    # grad-norm reduction axes: every manual non-pod axis (grads are
+    # already pod-replicated when the norm is taken)
+    norm_axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    replicate = _tp_layout_overrides(model, mesh, tcfg)
 
-    def body(state: TrainState, batch):
-        # every mesh axis is manual here: GSPMD activation constraints in
-        # the model are meaningless and must not be staged
-        with shd.manual_body():
-            loss, grads = _compute_grads(model, tcfg, state.params, batch)
-        if has_data:
-            loss = compat.pmean(loss, "data")
-            grads = compat.pmean(grads, "data")
-        new_residual = state.residual
-        if has_pod:
-            loss = compat.pmean(loss, "pod")
-            if int8:
-                if not jax.tree_util.tree_leaves(state.residual):
-                    raise ValueError(
-                        "grad_compression='int8' with grad_reduce="
-                        "'explicit' needs the error-feedback residual in "
-                        "TrainState — build it with train_state_init("
-                        "params, tcfg, mesh) so the mesh's pod axis is "
-                        "known at init time")
-                grads, new_res = compressed_psum(
-                    grads, "pod", _squeeze_pod(state.residual),
-                    error_feedback=tcfg.error_feedback)
-                new_residual = _unsqueeze_pod(new_res)
+    def step(state: TrainState, batch):
+        pspecs = shd.explicit_param_specs(state.params, mesh, mode,
+                                          replicate=replicate)
+        sspecs = _explicit_state_specs(state, mesh, tcfg,
+                                       replicate=replicate)
+        bspecs = shd.pod_local_batch_specs(batch, mesh)
+        flat_specs, _ = jax.tree_util.tree_flatten(
+            pspecs, is_leaf=lambda x: isinstance(x, P))
+        # (dim, axes) FSDP gather placement per leaf — static python data
+        ginfo = [shd.spec_gather_axes(s, fsdp_axes) for s in flat_specs]
+
+        def body(state: TrainState, batch):
+            flat_p, tdef = jax.tree_util.tree_flatten(state.params)
+            # FSDP: gather sharded leaves ONCE, outside the microbatch
+            # scan — the contract suite asserts no gather re-appears in
+            # any HLO loop body
+            full = [compat.all_gather(p, axes, axis=dim, tiled=True)
+                    if axes else p
+                    for p, (dim, axes) in zip(flat_p, ginfo)]
+            params_full = tdef.unflatten(full)
+            # every mesh axis is manual here: GSPMD activation constraints
+            # in the model are meaningless and must not be staged
+            with shd.manual_body(), shd.tp_region(tp_ax, tp_m):
+                loss, grads = _compute_grads(model, tcfg, params_full,
+                                             batch)
+            if has_data:
+                loss = compat.pmean(loss, "data")
+            flat_g = tdef.flatten_up_to(grads)
+            red = []
+            for g, (dim, axes) in zip(flat_g, ginfo):
+                if axes:
+                    # reduce-scatter IS the data reduction for this leaf:
+                    # sum over the gather group, shard, normalise by the
+                    # group size (replicated-model copies in "fsdp" mode
+                    # fold into the same factor)
+                    gsz = 1
+                    for a in axes:
+                        gsz *= sizes[a]
+                    red.append(compat.psum_scatter(
+                        g, axes, scatter_dimension=dim, tiled=True) / gsz)
+                elif has_data:
+                    red.append(compat.pmean(g, "data"))
+                else:
+                    red.append(g)
+            grads = tdef.unflatten(red)
+            new_residual = state.residual
+            if has_pod:
+                loss = compat.pmean(loss, "pod")
+                if int8:
+                    if not jax.tree_util.tree_leaves(state.residual):
+                        raise ValueError(
+                            "grad_compression='int8' with grad_reduce="
+                            "'explicit' needs the error-feedback residual "
+                            "in TrainState — build it with train_state_"
+                            "init(params, tcfg, mesh) so the mesh's pod "
+                            "axis is known at init time")
+                    grads, new_res = compressed_psum(
+                        grads, "pod", _squeeze_pod(state.residual),
+                        error_feedback=tcfg.error_feedback,
+                        axis_size=n_pod)
+                    new_residual = _unsqueeze_pod(new_res)
+                else:
+                    grads = compat.pmean(grads, "pod")
+            step_no = state.step + 1
+            if mode == "replicated":
+                new_params, new_m, new_v, new_master, metrics = adamw_apply(
+                    tcfg, grads, step_no, state.m, state.v, state.master,
+                    state.params)
             else:
-                grads = compat.pmean(grads, "pod")
-        step = state.step + 1
-        new_params, new_m, new_v, new_master, metrics = adamw_apply(
-            tcfg, grads, step, state.m, state.v, state.master, state.params)
-        metrics["loss"] = loss
-        return TrainState(step, new_params, new_m, new_v, new_master,
-                          new_residual), metrics
+                # grads are SHARDS here — the local sq-norm misses other
+                # ranks' shards and over-counts replicated leaves. Exact
+                # global norm: per-leaf local sq / replication factor,
+                # psum'd over the manual non-pod axes.
+                contrib = jnp.float32(0)
+                for g, s in zip(tdef.flatten_up_to(grads), flat_specs):
+                    leaf_axes = set()
+                    for entry in tuple(s):
+                        if entry is None:
+                            continue
+                        leaf_axes.update(
+                            entry if isinstance(entry, tuple) else (entry,))
+                    rf = 1
+                    for a in norm_axes:
+                        if a not in leaf_axes:
+                            rf *= sizes[a]
+                    contrib = contrib + jnp.sum(
+                        jnp.square(g.astype(jnp.float32))) / rf
+                if norm_axes:
+                    contrib = compat.psum(contrib, norm_axes)
+                gnorm = jnp.sqrt(contrib)
+                new_params, new_m, new_v, new_master, metrics = adamw_apply(
+                    tcfg, grads, step_no, state.m, state.v, state.master,
+                    state.params, grad_norm=gnorm)
+            metrics["loss"] = loss
+            return TrainState(step_no, new_params, new_m, new_v,
+                              new_master, new_residual), metrics
 
-    # prefix specs: replicated state except the pod-sharded residual;
-    # batch over the DP axes on the leading dim; replicated metrics.
-    state_specs = TrainState(step=P(), params=P(), m=P(), v=P(),
-                             master=P(), residual=P("pod"))
-    batch_spec = P(ba) if ba else P()
-    return compat.shard_map(
-        body, mesh=mesh,
-        in_specs=(state_specs, batch_spec),
-        out_specs=(state_specs, P()),
-        check_vma=False)
+        return compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(sspecs, bspecs),
+            out_specs=(sspecs, P()),
+            check_vma=False)(state, batch)
+
+    return step
 
 
 # ---------------------------------------------------------------------------
@@ -259,19 +405,21 @@ def _make_explicit_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
 # ---------------------------------------------------------------------------
 
 def train_state_specs(state_like: TrainState, mesh: Mesh,
-                      tcfg: TrainConfig) -> TrainState:
+                      tcfg: TrainConfig,
+                      replicate: Tuple[str, ...] = ()) -> TrainState:
     """PartitionSpec pytree for a TrainState under ``tcfg.grad_reduce``.
 
     gspmd    : params/moments/master inherit the parameter sharding rules
                (ZeRO comes free), residual = P("pod", *param_spec).
-    explicit : pure DP — everything replicated except the residual's
-               leading pod dim (the shard_map body owns the collectives).
+    explicit : per-leaf specs from ``tcfg.param_sharding`` — replicated
+               (pure DP), fsdp, tp or tp_fsdp; leaves keep GLOBAL logical
+               shapes in all modes, so checkpoints restore elastically
+               across mesh shape and TP degree. ``replicate`` carries the
+               model's packed-layout overrides (``_tp_layout_overrides``).
     """
     if tcfg.grad_reduce == "explicit":
-        rep = shd.replicated_specs(state_like.params)
-        return TrainState(
-            step=P(), params=rep, m=rep, v=rep, master=rep,
-            residual=shd.residual_specs(state_like.residual, mesh))
+        return _explicit_state_specs(state_like, mesh, tcfg,
+                                     replicate=replicate)
     pspecs = shd.param_specs(state_like.params, mesh)
     if jax.tree_util.tree_leaves(state_like.residual):
         rspecs = shd.residual_specs(state_like.residual, mesh,
@@ -286,14 +434,18 @@ def jit_step(model: Model, mode: str, mesh: Mesh, *,
              tcfg: Optional[TrainConfig] = None,
              state_like: Optional[TrainState] = None,
              batch_like=None, cache_like=None, params_like=None,
-             batch_size: int = 0, donate: bool = True):
+             batch_size: int = 0, donate: bool = True,
+             policy: Optional[shd.ShardingPolicy] = None):
     """jit wiring with explicit shardings for all three step modes."""
     ns = lambda tree: jax.tree_util.tree_map(
-        lambda s: NamedSharding(mesh, s), tree)
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
 
     if mode == "train":
         assert tcfg is not None and state_like is not None \
             and batch_like is not None
+        if policy is not None:
+            tcfg = policy.apply_to(tcfg)
         # factory-time microbatch guard (satellite: no silent truncation)
         B = batch_like["tokens"].shape[0]
         if tcfg.grad_reduce == "explicit":
@@ -307,7 +459,9 @@ def jit_step(model: Model, mode: str, mesh: Mesh, *,
             _check_microbatch(B, tcfg)
             bspecs = shd.batch_specs(batch_like, mesh)
         step = make_step(model, "train", tcfg, mesh)
-        sspecs = train_state_specs(state_like, mesh, tcfg)
+        sspecs = train_state_specs(
+            state_like, mesh, tcfg,
+            replicate=_tp_layout_overrides(model, mesh, tcfg))
         mshard = NamedSharding(mesh, P())
         return jax.jit(
             step,

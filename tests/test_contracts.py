@@ -5,6 +5,7 @@ violation) and a clean variant (MUST pass) — the same must-fire /
 must-stay-silent discipline as the AST-linter fixtures, one level down
 the stack (jaxpr / optimized HLO instead of source text).
 """
+import textwrap
 import jax
 import jax.numpy as jnp
 import pytest
@@ -171,11 +172,44 @@ class TestHloParsing:
         by_kind = {o["kind"]: o for o in ops}
         assert by_kind["all-reduce"] == {
             "kind": "all-reduce", "dtype": "f32", "elems": 65536,
-            "bytes": 262144, "group": 4}
+            "bytes": 262144, "group": 4, "region": None, "in_loop": False}
         assert by_kind["all-gather"]["dtype"] == "s8"
         assert by_kind["all-gather"]["elems"] == 1024 * 64
         assert by_kind["all-gather"]["group"] == 4
         assert by_kind["collective-permute"]["bytes"] == 256
+
+    def test_while_loop_region_tagging(self):
+        """Ops inside a while body/condition computation (transitively,
+        through to_apply= calls) are tagged in_loop; tuple-shaped
+        computation params (nested parens in the header) must parse."""
+        hlo = textwrap.dedent("""\
+            HloModule loopy
+            %inner.5 (p: f32[64]) -> f32[64] {
+              %g = f32[64]{0} all-gather(f32[16]{0} %p), replica_groups=[2,4]<=[8]
+            }
+            %body.9 (tup: (s32[], f32[64])) -> (s32[], f32[64]) {
+              %c = f32[64]{0} fusion(f32[64]{0} %x), calls=%inner.5
+            }
+            %cond.3 (tup.1: (s32[], f32[64])) -> pred[] {
+              %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+            }
+            ENTRY %main (p0: f32[64]) -> f32[64] {
+              %w = (s32[], f32[64]) while((s32[], f32[64]) %init), condition=%cond.3, body=%body.9
+              %ar = f32[65536]{0} all-reduce(f32[65536]{0} %q), replica_groups={{0,1}}
+            }
+            """)
+        ops = collective_ops_from_hlo(hlo)
+        by_kind = {o["kind"]: o for o in ops}
+        assert by_kind["all-gather"]["in_loop"] is True
+        assert by_kind["all-gather"]["region"] == "inner.5"
+        assert by_kind["all-reduce"]["in_loop"] is False
+        # an in_loop forbid spec catches exactly the loop-resident gather
+        _, v = check_hlo_collectives(
+            hlo, forbid=[{"kind": "all-gather", "in_loop": True}])
+        assert len(v) == 1
+        _, v = check_hlo_collectives(
+            hlo, forbid=[{"kind": "all-reduce", "in_loop": True}])
+        assert v == []
 
     def test_forbid_spec_matches_all_keys(self):
         _, v = check_hlo_collectives(

@@ -1,0 +1,149 @@
+"""ShardingPolicy — the one public sharding surface (distributed/sharding.py)
+and the unified launcher mesh grammar (launch/mesh.py::parse_mesh_spec).
+
+Covers the deprecation aliases: every legacy spelling (TrainConfig fields,
+SSMConfig.seq_shard, --mesh/--strategy strings) must construct the same
+policy the native API spells directly.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.config import TrainConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import parse_mesh_spec
+
+
+def test_param_sharding_axis_assignment():
+    """param_sharding is DERIVED from the axis assignment (one source of
+    truth), and matches the explicit-seam mode table."""
+    assert shd.ShardingPolicy().param_sharding == "replicated"
+    assert shd.ShardingPolicy(
+        fsdp_axes=("data", "model")).param_sharding == "fsdp"
+    assert shd.ShardingPolicy(tp_axis="model").param_sharding == "tp"
+    assert shd.ShardingPolicy(
+        tp_axis="model", fsdp_axes=("data",)).param_sharding == "tp_fsdp"
+
+
+@pytest.mark.parametrize("mode", ["replicated", "fsdp", "tp", "tp_fsdp"])
+def test_train_config_round_trip(mode):
+    """TrainConfig -> from_train_config -> apply_to reproduces the same
+    TrainConfig fields (the deprecation alias is lossless)."""
+    tcfg = TrainConfig(grad_reduce="explicit", grad_compression="int8",
+                       param_sharding=mode)
+    policy = shd.ShardingPolicy.from_train_config(tcfg)
+    assert policy.param_sharding == mode
+    assert policy.grad_reduce == "explicit"
+    assert policy.grad_compression == "int8"
+    tcfg2 = policy.apply_to(TrainConfig())
+    assert tcfg2.grad_reduce == tcfg.grad_reduce
+    assert tcfg2.grad_compression == tcfg.grad_compression
+    assert tcfg2.param_sharding == tcfg.param_sharding
+
+
+def test_from_legacy_covers_all_spellings():
+    policy = shd.ShardingPolicy.from_legacy(
+        mesh_shape=(2, 2, 2), strategy="fsdp", grad_reduce="explicit",
+        grad_compression="int8", param_sharding="tp_fsdp", seq_shard=True)
+    assert policy.mesh_shape == (2, 2, 2)
+    assert policy.mesh_axes is None            # canonical right-aligned
+    assert policy.tp_axis == "model"
+    assert policy.fsdp_axes == ("data",)
+    assert policy.seq_axis == "data"           # seq_shard=True -> "data"
+    assert policy.strategy == "fsdp"
+    with pytest.raises(ValueError, match="param_sharding"):
+        shd.ShardingPolicy.from_legacy(param_sharding="zero3")
+
+
+def test_from_string_grammar():
+    """--policy grammar: key=value pairs; params= sets the axis assignment
+    in one word; explicit tp=/fsdp=/dp= spell axes directly."""
+    p = shd.ShardingPolicy.from_string(
+        "params=tp_fsdp,reduce=explicit,compression=int8,seq=data")
+    assert p.param_sharding == "tp_fsdp"
+    assert p.grad_reduce == "explicit"
+    assert p.grad_compression == "int8"
+    assert p.seq_axis == "data"
+    # explicit axis spelling, "+"-joined multi-axis
+    p2 = shd.ShardingPolicy.from_string("tp=model,fsdp=data+model,dp=pod")
+    assert p2.tp_axis == "model"
+    assert p2.fsdp_axes == ("data", "model")
+    assert p2.dp_axes == ("pod",)
+    assert shd.ShardingPolicy.from_string(None) == shd.ShardingPolicy()
+    assert shd.ShardingPolicy.from_string("") == shd.ShardingPolicy()
+    with pytest.raises(ValueError, match="key=value"):
+        shd.ShardingPolicy.from_string("tp_fsdp")
+    with pytest.raises(ValueError, match="unknown --policy key"):
+        shd.ShardingPolicy.from_string("zero=3")
+
+
+def test_with_mesh_and_use_policy():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    policy = shd.ShardingPolicy.from_string("params=tp").with_mesh(mesh)
+    assert policy.mesh_shape == (1, 1)
+    assert policy.mesh_axes == ("data", "model")
+    built = policy.build_mesh()
+    assert built.axis_names == ("data", "model")
+    assert shd.current_policy() is None
+    with shd.use_policy(policy) as p:
+        assert shd.current_policy() is p
+        assert shd.current_mesh() is not None  # policy mesh installed
+        assert shd.current_strategy() == p.strategy
+    assert shd.current_policy() is None
+
+
+def test_seq_axis_policy_fallback():
+    """core/block.py blocks with no per-block seq_axis inherit the ambient
+    policy's (the legacy LrcSSMConfig.seq_axis spelling wins when set)."""
+    from repro.core.block import LrcSSMConfig, _with_policy_seq_axis
+
+    cfg = LrcSSMConfig(d_input=4, d_state=4, d_hidden=8, n_classes=2)
+    assert _with_policy_seq_axis(cfg).seq_axis is None
+    with shd.use_policy(shd.ShardingPolicy(seq_axis="data")):
+        assert _with_policy_seq_axis(cfg).seq_axis == "data"
+        legacy = dataclasses.replace(cfg, seq_axis=("pod", "data"))
+        assert _with_policy_seq_axis(legacy).seq_axis == ("pod", "data")
+
+
+def test_parse_mesh_spec_grammar():
+    """One --mesh grammar for every launcher: right-aligned canonical
+    axis names, 1-3 dims."""
+    m1 = parse_mesh_spec("1")
+    assert m1.axis_names == ("model",)
+    m2 = parse_mesh_spec("1x1")
+    assert m2.axis_names == ("data", "model")
+    assert dict(m2.shape) == {"data": 1, "model": 1}
+    m3 = parse_mesh_spec("1x1x1")
+    assert m3.axis_names == ("pod", "data", "model")
+    for bad in ("", "2q", "1x1x1x1", "0x4", "-1x2"):
+        with pytest.raises(ValueError):
+            parse_mesh_spec(bad)
+
+
+def test_policy_param_specs_modes():
+    """policy.param_specs routes explicit modes through the seam's
+    per-mode table and gspmd through the strategy rules."""
+    from jax.sharding import PartitionSpec as P
+    params = {"layers": {"attn": {"wqkv": jax.numpy.zeros((8, 24)),
+                                  "wo": jax.numpy.zeros((8, 8))},
+                         "norm": {"scale": jax.numpy.zeros((8,))}}}
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tp = shd.ShardingPolicy.from_legacy(param_sharding="tp",
+                                        grad_reduce="explicit")
+    specs = tp.param_specs(params, mesh)
+    assert specs["layers"]["attn"]["wqkv"] == P(None, "model")
+    # norms replicated (no mesh axis in the spec)
+    assert not any(a for a in tuple(specs["layers"]["norm"]["scale"]))
+    fsdp = shd.ShardingPolicy.from_legacy(param_sharding="fsdp",
+                                          grad_reduce="explicit")
+    fspecs = fsdp.param_specs(params, mesh)
+    # fsdp shards exactly one dim of each big leaf over the full chip grid
+    assert tuple(fspecs["layers"]["attn"]["wqkv"]).count(
+        ("data", "model")) == 1
+
+
+def test_trainer_requires_mesh_or_policy_mesh():
+    from repro.train.loop import Trainer
+    with pytest.raises(ValueError, match="mesh"):
+        Trainer(None, TrainConfig(), mesh=None)

@@ -142,6 +142,12 @@ def test_wire_bytes_accounting():
     # all-gather scaling loses at high P — the documented crossover
     assert (reduction_wire_bytes(tree, 16, "int8_allgather")
             > reduction_wire_bytes(tree, 16, "fp32_allreduce"))
+    # the rsag (reduce-scatter + all-gather) format holds ~3.9x at ANY P:
+    # same 2*(P-1)/P payload factor as the fp32 ring, int8+scale payload
+    for P in (2, 8, 16, 64):
+        fp32_p = reduction_wire_bytes(tree, P, "fp32_allreduce")
+        rsag_p = reduction_wire_bytes(tree, P, "int8_rsag")
+        assert fp32_p / rsag_p > 3.9, (P, fp32_p, rsag_p)
     with pytest.raises(ValueError):
         reduction_wire_bytes(tree, 2, "fp8_magic")
 
@@ -243,7 +249,9 @@ def test_compressed_explicit_hlo_has_no_fp32_pod_allreduce(run_sub):
 
 
 def test_error_feedback_convergence(run_sub):
-    """int8 + error feedback tracks the fp32 loss within 1% after 50 steps;
+    """int8 + error feedback tracks the fp32 loss within 2% after 50 steps
+    (the two-stage reduce-scatter+all-gather format quantises twice, so
+    the per-step noise is ~2x the retired single-stage format's);
     per-step round-to-nearest (residual off) visibly drifts."""
     out = run_sub(_TOY + """
         mesh = jax.make_mesh((8,), ("pod",))
@@ -258,7 +266,8 @@ def test_error_feedback_convergence(run_sub):
     """)
     rel_ef = abs(out["ef"] - out["fp32"]) / out["fp32"]
     rel_rtn = (out["rtn"] - out["fp32"]) / out["fp32"]
-    assert rel_ef < 0.01, out                  # acceptance: within 1%
+    assert rel_ef < 0.02, out                  # acceptance: within 2%
+    assert rel_rtn > 2 * rel_ef, out           # EF clearly beats rtn
     assert rel_rtn > 0.03, out                 # round-to-nearest drifts
     assert out["rtn"] > out["ef"], out
     assert out["residual_nonzero"], out        # EF state actually carries error
@@ -315,4 +324,161 @@ def test_trainstate_checkpoint_elastic_residual_restart(run_sub, tmp_path):
     assert out["residual_nonzero"], out        # restored residual is real EF state
     assert all(s[0] == 2 for s in out["residual_shapes"]), out  # per-pod dim
     assert out["n_devices_after"] == 4, out    # genuinely elastic: 8 -> 4
+    assert out["loss_after"] == out["loss_after"], out  # finite, step ran
+
+
+def test_tp_fsdp_explicit_matches_pure_dp(run_sub):
+    """THE tentpole acceptance: a real explicit-seam step on a PxDxM mesh
+    with M>1 under FSDP, TP and TP+FSDP — all three parameter layouts
+    produce the SAME optimisation as pure DP (replicated) on the same
+    mesh. Specs carve the shards; the manual gather/psum seams restore
+    the replicated math exactly (f32)."""
+    out = run_sub("""
+        from repro.configs import get_reduced
+        from repro.models import build_model
+        from repro.launch.specs import make_batch
+        from repro.config import ShapeConfig, TrainConfig
+        from repro.train.state import train_state_init
+        from repro.train.step import jit_train_step
+        from repro.distributed import sharding as shd
+        import dataclasses
+
+        arch = dataclasses.replace(get_reduced("granite_3_8b"),
+                                   dtype=jnp.float32)
+        model = build_model(arch)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = make_batch(arch, ShapeConfig("s", 16, 8, "train"),
+                           jax.random.PRNGKey(1))
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+        final = {}
+        for psh in ("replicated", "fsdp", "tp", "tp_fsdp"):
+            tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0,
+                               grad_clip=1.0, grad_reduce="explicit",
+                               param_sharding=psh)
+            with shd.use_mesh(mesh):
+                state = train_state_init(params, tcfg, mesh)
+                jstep = jit_train_step(model, tcfg, mesh, state, batch,
+                                       donate=False)
+                for _ in range(3):
+                    state, metrics = jstep(state, batch)
+            final[psh] = (float(metrics["loss"]), jax.tree_util.tree_map(
+                lambda a: np.asarray(a, np.float32), state.params))
+        res = {}
+        l0, p0 = final["replicated"]
+        for psh in ("fsdp", "tp", "tp_fsdp"):
+            l, p = final[psh]
+            maxd = max(float(np.max(np.abs(a - b))) for a, b in zip(
+                jax.tree_util.tree_leaves(p0),
+                jax.tree_util.tree_leaves(p)))
+            res[psh] = {"loss_diff": abs(l - l0), "max_param_diff": maxd}
+        print(json.dumps(res))
+    """)
+    for psh in ("fsdp", "tp", "tp_fsdp"):
+        assert out[psh]["loss_diff"] < 1e-4, out
+        assert out[psh]["max_param_diff"] < 1e-4, out
+
+
+def test_tp_parity_hybrid_ssm(run_sub):
+    """Same parity property for the hybrid SSM stack (zamba2: mamba2
+    mixers + shared attention blocks) — exercises the packed in_proj
+    gather/slice TP layout, the SHARED B/C segments, and the psum'd
+    full-width RMSNorm."""
+    out = run_sub("""
+        from repro.configs import get_reduced
+        from repro.models import build_model
+        from repro.launch.specs import make_batch
+        from repro.config import ShapeConfig, TrainConfig
+        from repro.train.state import train_state_init
+        from repro.train.step import jit_train_step
+        from repro.distributed import sharding as shd
+        import dataclasses
+
+        arch = dataclasses.replace(get_reduced("zamba2_7b"),
+                                   dtype=jnp.float32)
+        model = build_model(arch)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = make_batch(arch, ShapeConfig("s", 16, 8, "train"),
+                           jax.random.PRNGKey(1))
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+        final = {}
+        for psh in ("replicated", "tp_fsdp"):
+            tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0,
+                               grad_clip=1.0, grad_reduce="explicit",
+                               param_sharding=psh)
+            with shd.use_mesh(mesh):
+                state = train_state_init(params, tcfg, mesh)
+                jstep = jit_train_step(model, tcfg, mesh, state, batch,
+                                       donate=False)
+                for _ in range(3):
+                    state, metrics = jstep(state, batch)
+            final[psh] = (float(metrics["loss"]), jax.tree_util.tree_map(
+                lambda a: np.asarray(a, np.float32), state.params))
+        l0, p0 = final["replicated"]; l1, p1 = final["tp_fsdp"]
+        maxd = max(float(np.max(np.abs(a - b))) for a, b in zip(
+            jax.tree_util.tree_leaves(p0), jax.tree_util.tree_leaves(p1)))
+        print(json.dumps({"loss_diff": abs(l1 - l0),
+                          "max_param_diff": maxd}))
+    """)
+    assert out["loss_diff"] < 1e-4, out
+    assert out["max_param_diff"] < 1e-4, out
+
+
+def test_elastic_restore_across_tp_degree(run_sub, tmp_path):
+    """FSDP+int8 checkpoints are TP-degree elastic: TrainState leaves keep
+    GLOBAL logical shapes in every explicit mode (only the specs change),
+    so a tp_fsdp+int8 run on a (2,2,2) mesh restores bit-exact onto a
+    (2,4,1) fsdp mesh and keeps training."""
+    ckpt = str(tmp_path / "ck")
+    out = run_sub("""
+        from repro.configs import get_reduced
+        from repro.models import build_model
+        from repro.launch.specs import make_batch
+        from repro.config import ShapeConfig, TrainConfig
+        from repro.train.loop import Trainer
+        from repro.distributed import sharding as shd
+        import dataclasses
+
+        arch = dataclasses.replace(get_reduced("granite_3_8b"),
+                                   dtype=jnp.float32)
+        model = build_model(arch)
+        batch = make_batch(arch, ShapeConfig("s", 16, 8, "train"),
+                           jax.random.PRNGKey(1))
+
+        def data():
+            while True:
+                yield batch
+
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0,
+                           grad_clip=1.0, grad_reduce="explicit",
+                           grad_compression="int8",
+                           param_sharding="tp_fsdp",
+                           checkpoint_every=0, checkpoint_dir="__CKPT__",
+                           async_checkpoint=False)
+        mesh_tp = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        tr1 = Trainer(model, tcfg, mesh_tp, log_fn=lambda *_: None)
+        tr1.fit(data(), n_steps=3)
+        tr1.preempt()
+        p1 = [np.asarray(x, np.float32) for x in
+              jax.tree_util.tree_leaves(tr1.state.params)]
+
+        tcfg2 = dataclasses.replace(tcfg, param_sharding="fsdp")
+        mesh_dp = jax.make_mesh((2, 4, 1), ("pod", "data", "model"))
+        tr2 = Trainer(model, tcfg2, mesh_dp, log_fn=lambda *_: None)
+        resumed = tr2.maybe_resume()
+        p2 = [np.asarray(x, np.float32) for x in
+              jax.tree_util.tree_leaves(tr2.state.params)]
+        pdiff = max(float(np.max(np.abs(a - b))) for a, b in zip(p1, p2))
+        res2 = jax.tree_util.tree_leaves(tr2.state.residual)
+        hist = tr2.fit(data(), n_steps=1)
+        print(json.dumps({
+            "resumed": bool(resumed), "step": tr2.step,
+            "param_diff": pdiff,
+            "residual_restored": bool(res2),
+            "loss_after": float(hist[-1].loss)}))
+    """.replace("__CKPT__", ckpt))
+    assert out["resumed"] and out["step"] == 4, out
+    assert out["param_diff"] == 0.0, out       # bit-exact across TP degree
+    assert out["residual_restored"], out
     assert out["loss_after"] == out["loss_after"], out  # finite, step ran

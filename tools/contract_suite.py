@@ -16,6 +16,10 @@ Contracts checked (see docs/static_analysis.md):
     cross-pod collective in its compiled HLO — with the gspmd baseline as
     a positive control that MUST violate the same clause (proving the
     checker has teeth on this jax version);
+  * the FSDP explicit seam gathers parameters ONCE per step: compiled
+    HLO shows reduce-scatter'd gradients and no full-parameter fp32
+    all-gather inside a while-loop body — with a deliberately-naive
+    gather-per-microbatch seam as the must-violate positive control;
   * compat routing: the AST rule engine (tools/repro_lint) reports zero
     violations across all rules.
 
@@ -191,6 +195,105 @@ def explicit_grad_contract():
                     "gspmd_baseline_violations": len(base_violations)})]
 
 
+def tp_fsdp_contract():
+    """The FSDP explicit seam gathers parameters ONCE per step — the
+    compiled HLO shows reduce-scatter'd gradients and NO full-parameter
+    fp32 all-gather inside a loop body (per-microbatch re-gather). The
+    positive control is a deliberately-naive seam that all-gathers inside
+    the microbatch scan and MUST violate the same in-loop clause (proving
+    the while-region HLO parser has teeth on this jax version)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import ShapeConfig, TrainConfig
+    from repro.configs import get_reduced
+    from repro.contracts import LoweringReport, Violation, \
+        check_hlo_collectives
+    from repro.distributed import compat
+    from repro.distributed import sharding as shd
+    from repro.launch.specs import make_batch
+    from repro.models import build_model
+    from repro.train.state import train_state_init
+    from repro.train.step import jit_train_step
+
+    arch = dataclasses.replace(get_reduced("granite_3_8b"),
+                               dtype=jnp.float32)
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(arch, ShapeConfig("s", 16, 8, "train"),
+                       jax.random.PRNGKey(1))
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    THRESH = 16384
+    # the FSDP seam clause: nothing full-parameter-sized is re-gathered
+    # per microbatch iteration
+    NO_LOOP_GATHER = [{"kind": "all-gather", "dtype": "f32",
+                       "min_elems": THRESH, "in_loop": True}]
+
+    def hlo(psh):
+        tcfg = TrainConfig(warmup_steps=0, grad_reduce="explicit",
+                           param_sharding=psh, microbatch=2)
+        with shd.use_mesh(mesh):
+            state = train_state_init(params, tcfg, mesh)
+            jstep = jit_train_step(model, tcfg, mesh, state, batch,
+                                   donate=False)
+            return jstep.lower(state, batch).compile().as_text()
+
+    ops, violations = check_hlo_collectives(hlo("fsdp"),
+                                            forbid=NO_LOOP_GATHER)
+    n_rs = sum(1 for o in ops if o["kind"] == "reduce-scatter")
+    n_gather = sum(1 for o in ops if o["kind"] == "all-gather"
+                   and o["elems"] > THRESH and not o["in_loop"])
+    extra = []
+    if not n_rs:
+        extra.append(Violation(
+            "checker-control",
+            "FSDP HLO shows no reduce-scatter — gradients are not "
+            "scatter-reduced on the explicit seam", {}))
+    if not n_gather:
+        extra.append(Violation(
+            "checker-control",
+            "FSDP HLO shows no out-of-loop parameter all-gather — the "
+            "gather-once seam is missing entirely", {}))
+
+    # positive control: a naive seam whose gather is INSIDE the
+    # microbatch scan (carry-dependent, so XLA cannot hoist it)
+    w_shard = jnp.zeros((256 // 8, 4096), jnp.float32)
+    mb = jnp.zeros((4, 2, 4096), jnp.float32)
+    flat = jax.make_mesh((8,), ("data",))
+
+    def naive(w, b):
+        def micro(carry, x):
+            w_full = compat.all_gather(w + carry * 0, "data", axis=0,
+                                       tiled=True)
+            return carry + jnp.sum(x @ w_full.T), None
+        loss, _ = jax.lax.scan(micro, 0.0, b)
+        return compat.pmean(loss, "data")
+
+    naive_hlo = compat.shard_map(
+        naive, mesh=flat,
+        in_specs=(shd.make_spec("data"), shd.make_spec()),
+        out_specs=shd.make_spec(), check_vma=False)
+    with shd.use_mesh(flat):
+        naive_text = jax.jit(naive_hlo).lower(
+            w_shard, mb).compile().as_text()
+    _, naive_violations = check_hlo_collectives(naive_text,
+                                                forbid=NO_LOOP_GATHER)
+    if not naive_violations:
+        extra.append(Violation(
+            "checker-control",
+            "positive control failed: the naive in-loop all-gather seam "
+            "produced no violation — the while-region parser may not "
+            "match this XLA version's HLO text", {}))
+    report = LoweringReport(violations=list(violations) + extra)
+    return [_entry("train-fsdp-gather-once-reduce-scatter", report,
+                   {"threshold_elems": THRESH,
+                    "reduce_scatters": n_rs,
+                    "out_of_loop_gathers": n_gather,
+                    "naive_control_violations": len(naive_violations)})]
+
+
 def compat_routing_contract():
     """The AST rule engine reports zero violations across all rules (the
     source-level half of the contract surface)."""
@@ -251,7 +354,8 @@ def main(argv=None) -> int:
     import jax
 
     groups = (solver_tier_contracts, serve_prefill_contract,
-              explicit_grad_contract, compat_routing_contract)
+              explicit_grad_contract, tp_fsdp_contract,
+              compat_routing_contract)
     rows = []
     for group in groups:
         for row in group():

@@ -23,8 +23,14 @@ from tools.repro_lint.engine import FileContext, Finding
 #: ``repro.distributed.compat.<name>`` (ROADMAP distributed-layer contract)
 COLLECTIVES = frozenset({
     "psum", "pmax", "pmin", "pmean", "all_gather", "ppermute",
-    "psum_scatter", "axis_index",
+    "psum_scatter", "axis_index", "all_to_all",
 })
+
+#: the only modules allowed to CONSTRUCT a PartitionSpec — every other
+#: call site goes through ``distributed.sharding.make_spec`` (or the
+#: higher-level spec helpers), keeping the axis-name vocabulary reviewable
+#: in one place (ShardingPolicy satellite contract)
+SPEC_PATHS = ("src/repro/distributed/sharding.py", "src/repro/train/step.py")
 
 COMPAT_PATH = "src/repro/distributed/compat.py"
 HOT_PATHS = ("src/repro/train/", "src/repro/serve/", "src/repro/core/",
@@ -306,6 +312,46 @@ class HardcodedInterpretRule(Rule):
                         "instead")
 
 
+class PartitionSpecConfinementRule(Rule):
+    """``PartitionSpec`` is only CONSTRUCTED in ``distributed/sharding.py``
+    and ``train/step.py`` — everywhere else in src/repro specs come from
+    ``sharding.make_spec`` or the higher-level helpers (``param_specs``,
+    ``batch_specs``, ``ShardingPolicy.param_specs``, ...). A stray
+    ``P("model")`` in model/kernel code bypasses the ShardingPolicy
+    surface and silently hardcodes an axis assignment the policy no
+    longer controls. Flags imports of ``jax.sharding.PartitionSpec`` and
+    attribute references resolving to it."""
+
+    name = "partition-spec-confinement"
+    description = ("PartitionSpec constructed outside "
+                   "distributed/sharding.py + train/step.py (use "
+                   "sharding.make_spec / the spec helpers)")
+
+    def applies(self, relpath: str) -> bool:
+        return (relpath.startswith("src/repro/")
+                and relpath not in SPEC_PATHS)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and not node.level:
+                mod = node.module or ""
+                for alias in node.names:
+                    if (mod == "jax.sharding"
+                            and alias.name in ("PartitionSpec", "*")) or \
+                            (mod == "jax" and alias.name == "P"):
+                        yield self._finding(
+                            ctx, node,
+                            "PartitionSpec imported outside the spec "
+                            "modules: use sharding.make_spec or the spec "
+                            "helpers")
+        for node in _usages(ctx.tree):
+            q = _resolve(node, ctx.aliases)
+            if q in ("jax.sharding.PartitionSpec", "jax.P"):
+                yield self._finding(
+                    ctx, node, f"direct {q} reference outside the spec "
+                    "modules: use sharding.make_spec")
+
+
 #: registry, in reporting order
 ALL_RULES: Tuple[Rule, ...] = (
     CompatCollectiveRule(),
@@ -313,4 +359,5 @@ ALL_RULES: Tuple[Rule, ...] = (
     HostSyncRule(),
     PallasCallRule(),
     HardcodedInterpretRule(),
+    PartitionSpecConfinementRule(),
 )
