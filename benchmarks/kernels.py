@@ -162,7 +162,20 @@ def bench_kernels() -> None:
         "stream_ratio_is_analytic": True,
         "stream_contract_violations": [v.to_json()
                                        for v in stream_contract.violations],
-        "meets_1p5x_wall": wall_ratio >= 1.5,
+        # honest wall-clock row: the 1.5x bar is only ENFORCED off
+        # interpret — interpret-mode wall-clock measures the Pallas
+        # interpreter's per-grid-step overhead, not the kernel schedule,
+        # so asserting it there would gate CI on noise. `ok` is None
+        # (not-applicable) on interpret hosts; backend/interpret record
+        # WHERE the number was measured so a reader can tell a TPU
+        # regression from a CPU artefact.
+        "meets_1p5x_wall": {
+            "wall_ratio": wall_ratio,
+            "backend": jax.default_backend(),
+            "interpret": interp,
+            "enforced": not interp,
+            "ok": (wall_ratio >= 1.5) if not interp else None,
+        },
         "meets_2p5x_streams": stream_contract.ok,
         # the stream criterion only substitutes for wall-clock on
         # interpret-mode hosts (the acceptance wording); on a compiled

@@ -41,6 +41,12 @@ class SSMConfig:
     head_dim: int = 64            # mamba2
     chunk: int = 256              # scan chunk (VMEM schedule)
     deer_iters: int = 8           # lrc mixer Newton iterations (fixed mode)
+    # speculative-decoding DRAFT depth: early-exit Newton iteration count
+    # for the cheap draft forward on the verify seam (serve engine /
+    # mixers solver_iters). Must be < deer_iters to be a draft; the
+    # verify pass always runs the full ladder, so truncation here never
+    # affects emitted tokens — only the accept rate.
+    draft_iters: int = 2
     # sequence-parallel DEER for the lrc mixer: shard the Newton solve's
     # time axis over the "model" mesh axis (core/deer_sharded.py) instead
     # of replicating the (T, d_inner) trajectory per device. When the batch

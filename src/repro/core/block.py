@@ -107,6 +107,12 @@ class LrcSSMConfig:
     # Pallas execution mode: None = auto (compiled on TPU, interpreter on
     # CPU hosts); bool forces it. Threaded to every kernel call site.
     kernel_interpret: Optional[bool] = None
+    # speculative-decoding DRAFT depth: when > 0 (and below the solver's
+    # max_iters), ``apply_lrcssm(..., draft=True)`` truncates the Newton /
+    # ELK ladder to this many iterations — a cheap early-exit forward
+    # whose output is only ever used as a draft to be verified by the
+    # full-depth solve, so the truncation is lossless end-to-end.
+    draft_iters: int = 0
 
 
 def _cell_cfg(cfg: LrcSSMConfig):
@@ -346,9 +352,30 @@ def _solve_block(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
     return states, jnp.max(iters)
 
 
+def draft_config(cfg: LrcSSMConfig) -> LrcSSMConfig:
+    """The early-exit DRAFT variant of ``cfg``: Newton/ELK ladders
+    truncated to ``cfg.draft_iters`` (fixed mode — no tol early-outs to
+    keep the draft cost deterministic). Identity when draft_iters is 0 or
+    does not actually truncate."""
+    di = cfg.draft_iters
+    if di <= 0:
+        return cfg
+    reps = {}
+    if di < cfg.deer.max_iters:
+        reps["deer"] = dataclasses.replace(cfg.deer, max_iters=di,
+                                           mode="fixed")
+    if di < cfg.elk.max_iters:
+        reps["elk"] = dataclasses.replace(cfg.elk, max_iters=di,
+                                          mode="fixed")
+    return dataclasses.replace(cfg, **reps) if reps else cfg
+
+
 def apply_lrcssm(cfg: LrcSSMConfig, p: Params, x: jax.Array,
-                 return_iters: bool = False):
-    """Forward pass. x: (B, T, p) -> logits (B, n_classes)."""
+                 return_iters: bool = False, draft: bool = False):
+    """Forward pass. x: (B, T, p) -> logits (B, n_classes).
+    ``draft=True`` runs the ``draft_config`` truncated-solver variant."""
+    if draft:
+        cfg = draft_config(cfg)
     B, T, _ = x.shape
     if cfg.include_time:
         tch = jnp.broadcast_to(jnp.linspace(0.0, 1.0, T)[None, :, None],

@@ -242,6 +242,31 @@ def lrc_deer_solve_tol(s_u: jax.Array, eps_u: jax.Array,
             resid_max)
 
 
+def lrc_deer_draft_solve(s_u: jax.Array, eps_u: jax.Array,
+                         packed_params: jax.Array, x0: jax.Array, *,
+                         draft_iters: int = 2,
+                         chunk: Optional[int] = None,
+                         d_tile: Optional[int] = None, dt: float = 1.0,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Early-exit DRAFT solve for speculative decoding: a K=``draft_iters``
+    truncated-Newton megakernel pass with chunk skipping enabled — a cheap
+    PREDICTOR of the converged trajectory ("predictability enables
+    parallelization"), whose drafted tokens the serve verify seam accepts
+    or rolls back. Losslessness never depends on this output: the
+    full-depth verify pass gates every emitted token, so both the iteration
+    truncation and the approximate ``skip_tol`` early exit are safe here
+    (and only here — the exact-counting caveat on ``lrc_deer_solve_tol``
+    does not apply to a path whose answer is merely a guess).
+
+    Forward-only (inference path: no custom_vjp detour). s_u/eps_u: (T, D);
+    returns states (T, D)."""
+    states, _, _ = lrc_deer_solve_tol(
+        s_u, eps_u, packed_params, x0, max_iters=draft_iters, tol=0.0,
+        chunk=chunk, d_tile=d_tile, dt=dt, interpret=interpret,
+        skip_tol=1e-3)
+    return states
+
+
 # ---------------------------------------------------------------------------
 # shard-composable solve (differentiable)
 # ---------------------------------------------------------------------------

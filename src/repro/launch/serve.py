@@ -21,7 +21,8 @@ from repro.configs import get_config, get_reduced
 from repro.distributed import sharding as shd
 from repro.launch.mesh import parse_mesh_spec
 from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, SpecConfig
+from repro.serve.scheduler import SLOConfig, SLOScheduler
 
 
 def main():
@@ -42,6 +43,20 @@ def main():
                          "comma-separated) — default: strategy=serve")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as the engine streams them")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative verify-window length (0 = plain "
+                         "single-token decode)")
+    ap.add_argument("--draft", default="reuse", choices=["reuse", "solve"],
+                    help="draft source: reuse verified leftovers (free) "
+                         "or an early-exit truncated-Newton forward")
+    ap.add_argument("--draft-iters", type=int, default=0,
+                    help="Newton depth of the solve-draft forward "
+                         "(default: arch.ssm.draft_iters)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="decode p50 SLO in ms — pauses admission while "
+                         "decode is over target (0 = always admit)")
+    ap.add_argument("--prefill-budget", type=int, default=1,
+                    help="max batched admission launches per tick")
     args = ap.parse_args()
 
     name = args.arch.replace("-", "_")
@@ -59,12 +74,20 @@ def main():
         stream = lambda uid, tok, done: print(
             f"  [stream] req {uid} -> {tok}{' <done>' if done else ''}")
 
+    spec = None
+    if args.spec_k:
+        di = args.draft_iters or getattr(arch.ssm, "draft_iters", 2)
+        spec = SpecConfig(k=args.spec_k, draft=args.draft, draft_iters=di)
+
     with shd.use_policy(policy):
         params = model.init(jax.random.PRNGKey(0))
         engine = ServeEngine(model, params, batch_slots=args.slots,
                              max_seq=args.max_seq,
                              prefill_chunk=args.prefill_chunk, mesh=mesh,
-                             policy=policy)
+                             policy=policy, spec=spec)
+        sched = SLOScheduler(engine, SLOConfig(
+            decode_slo_ms=args.slo_ms,
+            prefill_budget=args.prefill_budget))
         rng = np.random.default_rng(0)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, arch.vocab,
@@ -73,22 +96,36 @@ def main():
                         max_new_tokens=args.max_new, on_token=stream)
                 for i in range(args.requests)]
         for r in reqs:
-            engine.submit(r)
+            sched.submit(r)
         t0 = time.perf_counter()
-        engine.run_until_drained()
+        sched.run_until_drained()
         wall = time.perf_counter() - t0
 
     toks = sum(len(r.out_tokens) for r in reqs)
-    lat = engine.latency_percentiles()
+    stats = sched.stats()
     print(f"[serve] {arch.name}: {sum(r.done for r in reqs)}/{len(reqs)} "
           f"requests, {toks} tokens, {toks/max(wall,1e-9):.1f} tok/s, "
           f"{args.slots} slots, chunk={args.prefill_chunk}, "
           f"mesh={dict(mesh.shape)}")
-    if lat:
+    if stats:
         print(f"[serve] per-token latency: "
-              f"p50={lat.get('decode_p50_s', 0)*1e3:.2f}ms "
-              f"p99={lat.get('decode_p99_s', 0)*1e3:.2f}ms "
-              f"(prefill p50={lat.get('prefill_p50_s', 0)*1e3:.2f}ms)")
+              f"p50={stats.get('decode_p50_s', 0)*1e3:.2f}ms "
+              f"p99={stats.get('decode_p99_s', 0)*1e3:.2f}ms "
+              f"(prefill p50={stats.get('prefill_p50_s', 0)*1e3:.2f}ms)")
+    if spec is not None:
+        ss = engine.spec_stats
+        print(f"[serve] speculative k={spec.k} ({spec.draft}): "
+              f"accept_rate={stats.get('accept_rate', 0.0):.2f} "
+              f"draft={ss['draft_tokens']} "
+              f"accepted={ss['accepted_tokens']} "
+              f"verify_calls={ss['verify_calls']} "
+              f"emitted={ss['emitted_tokens']}")
+    print(f"[serve] scheduler: "
+          f"queue_depth p50={stats.get('queue_depth_p50', 0):.0f} "
+          f"max={stats.get('queue_depth_max', 0):.0f}, "
+          f"admit_wait p50={stats.get('admit_wait_p50_s', 0)*1e3:.1f}ms "
+          f"p99={stats.get('admit_wait_p99_s', 0)*1e3:.1f}ms, "
+          f"slo_ms={args.slo_ms or 'off'}")
 
 
 if __name__ == "__main__":

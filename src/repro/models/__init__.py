@@ -28,7 +28,13 @@ from repro.models import encdec, lm
 
 @dataclasses.dataclass(frozen=True)
 class Model:
-    """Uniform functional model surface (see module docstring)."""
+    """Uniform functional model surface (see module docstring).
+
+    ``spec_forward``/``spec_commit`` are the speculative-decoding verify
+    seam (lm.py): a read-only (B, k)-window forward over per-slot
+    positions returning (logits, staged window artifacts), and the masked
+    post-verification commit of the accepted prefix. None for families
+    without the seam (audio enc-dec)."""
     arch: ArchConfig
     init: Callable
     loss: Callable
@@ -36,6 +42,8 @@ class Model:
     decode_step: Callable
     init_cache: Callable
     prefill: Optional[Callable] = None
+    spec_forward: Optional[Callable] = None
+    spec_commit: Optional[Callable] = None
 
 
 def build_model(arch: ArchConfig, moe_path: str = "dense") -> Model:
@@ -68,4 +76,8 @@ def build_model(arch: ArchConfig, moe_path: str = "dense") -> Model:
             lm.init_cache(arch, bsz, max_seq),
         prefill=lambda p, t, c, length=None: lm.prefill(arch, p, t, c,
                                                         length),
+        spec_forward=lambda p, t, c, solver_iters=None:
+            lm.spec_forward(arch, p, t, c, solver_iters),
+        spec_commit=lambda c, staged, acc: lm.spec_commit(arch, c, staged,
+                                                          acc),
     )

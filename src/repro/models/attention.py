@@ -327,6 +327,64 @@ def update_kv_cache_rows(k_cache: jax.Array, v_cache: jax.Array,
     return upd(k_cache, k_new, slots), upd(v_cache, v_new, slots)
 
 
+def spec_window_attention(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, k_new: jax.Array,
+                          v_new: jax.Array, pos: jax.Array, *,
+                          ring: bool = False) -> jax.Array:
+    """Speculative-verify attention for a k-token window per serve slot,
+    READ-ONLY against the cache.
+
+    Query i of row b sits at absolute position ``pos[b] + i`` and attends
+    [the row's committed cache entries] ++ [the window's own k/v up to i].
+    Nothing is written: the accepted prefix length depends on the FINAL
+    logits, so cache commits happen post-hoc (``models/lm.spec_commit``)
+    rather than layer-by-layer.
+
+    ``ring=True`` gives sliding-window semantics over an S-slot ring where
+    absolute position p lives at slot p % S and the effective window is S
+    (the same convention decode/prefill use): slot j of row b holds
+    absolute position ``pos_b - 1 - ((pos_b - 1 - j) mod S)``, masked to
+    >= 0 (written) and > q_abs - S (in window). ``ring=False`` is the
+    full-context cache: slots 0..pos_b-1 are valid (always causal, since
+    every committed position precedes every query).
+
+    q: (B, k, H, hd); caches: (B, S, K, hd); k_new/v_new: (B, k, K, hd);
+    pos: (B,) int32. Requires k <= S. Returns out (B, k, H, hd).
+    """
+    B, T, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    groups = H // K
+    pos = jnp.asarray(pos)
+
+    kh = _repeat_kv(jnp.concatenate([k_cache.astype(k_new.dtype), k_new],
+                                    axis=1), groups).astype(jnp.float32)
+    vh = _repeat_kv(jnp.concatenate([v_cache.astype(v_new.dtype), v_new],
+                                    axis=1), groups).astype(jnp.float32)
+    q32 = q.astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bthd,bshd->bhts", q32, kh)      # (B,H,k,S+k)
+
+    q_abs = pos[:, None] + jnp.arange(T)[None]           # (B,k)
+    j = jnp.arange(S)
+    if ring:
+        a = pos[:, None] - 1 - jnp.mod(pos[:, None] - 1 - j[None, :], S)
+        cache_mask = ((a[:, None, :] >= 0)
+                      & (a[:, None, :] > q_abs[:, :, None] - S))
+    else:
+        cache_mask = jnp.broadcast_to(
+            (j[None, None, :] < pos[:, None, None]), (B, T, S))
+    li, qi = jnp.arange(T)[None, :], jnp.arange(T)[:, None]
+    win_mask = li <= qi
+    if ring:
+        win_mask = win_mask & (li > qi - S)
+    win_mask = jnp.broadcast_to(win_mask[None], (B, T, T))
+    mask = jnp.concatenate([cache_mask, win_mask], axis=-1)
+
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, vh)
+    return out.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # chunked prefill against caches (the serving engine's admission path)
 # ---------------------------------------------------------------------------
@@ -367,7 +425,9 @@ def prefill_ring_attention(q: jax.Array, k_cache: jax.Array,
     valid token count of a right-padded chunk: unlike the full-context
     cache, padding garbage written into the ring would WRAP onto live
     window slots, so only the last min(S, length) valid positions are
-    committed. Returns (out (B,T,H,hd), k_cache, v_cache)."""
+    committed. ``length`` may be a (B,) vector (batched multi-request
+    admission: every row carries its own valid length; the write turns
+    per-row). Returns (out (B,T,H,hd), k_cache, v_cache)."""
     B, T, H, hd = q.shape
     S = k_cache.shape[1]
     K = k_cache.shape[2]
@@ -399,6 +459,22 @@ def prefill_ring_attention(q: jax.Array, k_cache: jax.Array,
     # order-dependent; padded ones would wrap onto live window slots)
     L = T if length is None else jnp.asarray(length)
     n_keep = min(T, S)
+    if getattr(L, "ndim", 0) > 0:
+        # per-row valid lengths: each row picks its own slice of the chunk
+        # and its own ring slots — vmapped single-row writes
+        def row_write(cache_row, new_row, Lb):
+            start_b = jnp.clip(Lb - n_keep, 0, T - n_keep)
+            idx_b = start_b + jnp.arange(n_keep)
+            wslots_b = jnp.mod(pos + idx_b, S)
+            valid_b = (idx_b < Lb)[:, None, None]
+            sel = jax.lax.dynamic_slice_in_dim(new_row, start_b, n_keep,
+                                               axis=0)
+            return cache_row.at[wslots_b].set(
+                jnp.where(valid_b, sel.astype(cache_row.dtype),
+                          jnp.take(cache_row, wslots_b, axis=0)))
+        k_cache = jax.vmap(row_write, in_axes=(0, 0, 0))(k_cache, k_new, L)
+        v_cache = jax.vmap(row_write, in_axes=(0, 0, 0))(v_cache, v_new, L)
+        return out, k_cache, v_cache
     start = jnp.clip(L - n_keep, 0, T - n_keep)
     idx = start + jnp.arange(n_keep)                      # chunk-local
     wslots = jnp.mod(pos + idx, S)                        # unique: contiguous

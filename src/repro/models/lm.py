@@ -34,9 +34,10 @@ import jax.numpy as jnp
 
 from repro import nn
 from repro.config import ArchConfig
-from repro.distributed.sharding import (in_manual_body, shard_activation,
-                                        tp_gather_weight, tp_index, tp_info,
-                                        tp_region_in, tp_region_out)
+from repro.distributed.sharding import (_path_str, in_manual_body,
+                                        shard_activation, tp_gather_weight,
+                                        tp_index, tp_info, tp_region_in,
+                                        tp_region_out)
 from repro.models import attention as attn_lib
 from repro.models import mixers, moe as moe_lib
 
@@ -223,11 +224,14 @@ def mixer_block_init(arch: ArchConfig, key) -> Params:
 
 
 def mixer_block_apply(arch: ArchConfig, p: Params, h: jax.Array,
-                      state: Optional[Dict] = None, prefill_len=None):
+                      state: Optional[Dict] = None, prefill_len=None,
+                      return_traj: bool = False, solver_iters=None):
     kind = arch.ssm.kind
     hn = _norm(arch, p["norm"], h)
     out, new_state = mixers.MIXERS[kind][1](p["mixer"], arch, hn, state,
-                                            prefill_len=prefill_len)
+                                            prefill_len=prefill_len,
+                                            return_traj=return_traj,
+                                            solver_iters=solver_iters)
     return h + shard_activation(out, "act"), new_state
 
 
@@ -664,13 +668,19 @@ def prefill(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
     scan-for-prefill half of the serving engine; decode_step is the
     O(D)-state recurrence half.
 
-    ``length`` (scalar, <= T, default T) is the VALID prompt length inside a
+    ``length`` (<= T, default T) is the VALID prompt length inside a
     right-padded chunk: recurrent states are taken at ``length - 1``, and
     ``new_cache["pos"] = pos + length``, so padding never leaks into the
     carried state (attention garbage beyond ``length`` is masked by
     causality and overwritten by later writes at the same positions).
-    Requires a scalar ``cache["pos"]`` (prefill runs per admitted request —
-    fragments are scattered into the batched serve cache afterwards)."""
+    ``length`` may be a (B,) vector — the BATCHED multi-request admission
+    shape: rows are different requests sharing one parallel prefill call,
+    each with its own valid length. Because a vector length makes the
+    output ``pos`` a vector too, a vector-length call must be the FINAL
+    chunk of its feed (interior chunks of a same-chunk-count admission
+    bucket are fully valid, so they pass scalar length and keep ``pos``
+    scalar). Requires a scalar input ``cache["pos"]`` (fragments are
+    scattered into the batched serve cache afterwards)."""
     p = nn.cast_tree(p, arch.dtype)
     pos = cache["pos"]
     T = tokens.shape[1]
@@ -694,3 +704,167 @@ def prefill(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
     new_cache["pos"] = pos + L
     h = _norm(arch, p["final_norm"], h)
     return logits_fn(arch, p, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: the verify seam (read-only forward + masked commit)
+# ---------------------------------------------------------------------------
+
+def _attn_spec(arch: ArchConfig, lp: Params, h: jax.Array, cache_l: Dict,
+               pos: jax.Array, window: Optional[int]):
+    """k-token speculative-verify pass through an attention layer: attends
+    the resident cache READ-ONLY (``attn_lib.spec_window_attention``) and
+    stages the window's own k/v as the layer artifact — ``spec_commit``
+    writes only the accepted prefix into the ring afterwards. ``pos`` is
+    the per-slot (B,) position vector."""
+    B, T, _ = h.shape
+    H, K, hd = arch.n_heads, arch.n_kv_heads, arch.resolved_head_dim
+    hn = _norm(arch, lp["norm1"], h)
+    qkv = hn @ lp["wqkv"].astype(h.dtype)
+    q, k, v = jnp.split(qkv, [H * hd, (H + K) * hd], axis=-1)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, K, hd)
+    v = v.reshape(B, T, K, hd)
+    positions = pos[:, None] + jnp.arange(T)[None]
+    if arch.rope_theta > 0:
+        q = attn_lib.apply_rope(q, positions, arch.rope_theta)
+        k = attn_lib.apply_rope(k, positions, arch.rope_theta)
+    o = attn_lib.spec_window_attention(q, cache_l["k"], cache_l["v"], k, v,
+                                       pos, ring=window is not None)
+    o = o.reshape(B, T, H * hd) @ lp["wo"].astype(h.dtype)
+    h = h + o
+    hn = _norm(arch, lp["norm2"], h)
+    h = h + _ffn(arch, lp, hn)
+    return h, {"k": k, "v": v}
+
+
+def spec_forward(arch: ArchConfig, p: Params, tokens: jax.Array, cache: Dict,
+                 solver_iters=None) -> Tuple[jax.Array, Dict]:
+    """Speculative-verify forward: a (B, k) token window for EVERY serve
+    slot at its own position (``cache["pos"]``: (B,) vector), run through
+    the SAME parallel paths as ``prefill`` — DEER solve for lrc mixers,
+    associative scans for mamba, window attention against the resident
+    cache — WITHOUT committing any state.
+
+    Returns ``(logits (B, k, V), staged)`` where ``staged`` mirrors the
+    cache topology but carries per-layer WINDOW artifacts instead of
+    committed state: full (B, k, ...) state trajectories for mixer layers
+    (plus the (B, k+W-1, C) conv input stream), and the window's own
+    (B, k, K, hd) k/v for attention layers. The accepted prefix length
+    depends on the FINAL logits, so the commit cannot happen layer by
+    layer — ``spec_commit(cache, staged, acc)`` performs it post-hoc,
+    which is also what makes rollback free (rejected suffixes are simply
+    never written). ``solver_iters`` caps the lrc mixers' Newton depth —
+    the early-exit DRAFT configuration of this same function; the verify
+    pass leaves it None (full depth). Requires k >= 2 (the mixers' T > 1
+    prefill-mode dispatch) and k <= every attention ring size."""
+    p = nn.cast_tree(p, arch.dtype)
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((tokens.shape[0],), pos)
+    h = jnp.take(p["embed"], tokens, axis=0).astype(arch.dtype)
+    shared_p = p.get("shared_attn")
+
+    def apply_spec_layer(kind, lp, h, cl, shared_cache):
+        if kind in ("ssm", "ssm_sh"):
+            h, st = mixer_block_apply(arch, lp, h, cl, return_traj=True,
+                                      solver_iters=solver_iters)
+            if kind == "ssm_sh" and shared_p is not None:
+                h, shared_cache = _attn_spec(arch, shared_p, h,
+                                             shared_cache, pos, None)
+            return h, st, shared_cache
+        h, st = _attn_spec(arch, lp, h, cl, pos, _window_for(arch, kind))
+        return h, st, shared_cache
+
+    h, staged = _walk_cached_layers(arch, p, cache, h, apply_spec_layer)
+    h = _norm(arch, p["final_norm"], h)
+    return logits_fn(arch, p, h), staged
+
+
+def _gather_time_window(new: jax.Array, ba: int, start: jax.Array,
+                        width: int) -> jax.Array:
+    """``new[..., start_b : start_b + width, ...]`` along the time axis
+    ``ba + 1``, with a per-row (B,) ``start`` (batch axis ``ba``)."""
+    ta = ba + 1
+    bshape = [1] * new.ndim
+    bshape[ba] = new.shape[ba]
+    rshape = [1] * new.ndim
+    rshape[ta] = width
+    idx = start.reshape(bshape) + jnp.arange(width).reshape(rshape)
+    idx = jnp.broadcast_to(idx, new.shape[:ta] + (width,) + new.shape[ta + 1:])
+    return jnp.take_along_axis(new, idx, axis=ta)
+
+
+def _commit_kv_rows(old: jax.Array, new: jax.Array, ba: int,
+                    pos: jax.Array, acc: jax.Array) -> jax.Array:
+    """Write window rows ``i < acc[b]`` of ``new`` at ring slots
+    ``(pos[b] + i) % S`` of ``old``; rows at or beyond the accept boundary
+    keep their pre-verify values BIT-EXACTLY (they are never touched) —
+    the rollback guarantee. ``ba``: batch axis (1 under stacked groups)."""
+    S = old.shape[ba + 1]
+    kwin = new.shape[ba + 1]
+    bidx = jnp.arange(old.shape[ba])
+    cur = old
+    for i in range(kwin):
+        slots = jnp.mod(pos + i, S)
+        take = i < acc                                       # (B,) bool
+        if ba == 0:
+            rows = cur[bidx, slots]                          # (B,K,hd)
+            vals = jnp.where(take[:, None, None],
+                             new[:, i].astype(cur.dtype), rows)
+            cur = cur.at[bidx, slots].set(vals)
+        else:
+            rows = cur[:, bidx, slots]                       # (G,B,K,hd)
+            vals = jnp.where(take[None, :, None, None],
+                             new[:, :, i].astype(cur.dtype), rows)
+            cur = cur.at[:, bidx, slots].set(vals)
+    return cur
+
+
+def spec_commit(arch: ArchConfig, cache: Dict, staged: Dict,
+                acc: jax.Array) -> Dict:
+    """Commit a verified window's ACCEPTED prefix into the serve cache and
+    roll back the rejected tail, in place on device.
+
+    ``acc`` (B,) in [1, k] is the per-slot count of consumed window tokens
+    (longest matching draft prefix + 1). Per staged leaf, keyed by its
+    cache-path name:
+
+      * ``ssm``  — the mixer state jumps to trajectory position acc-1;
+      * ``conv`` — the buffer is the input stream's [acc, acc+W-1) slice
+        (the last W-1 raw inputs after consuming acc tokens);
+      * ``k``/``v`` — window rows i < acc land at ring slots (pos+i) % S;
+        rows beyond keep their pre-verify bits (never written).
+
+    Staged leaves whose shape equals the resident leaf are pass-throughs
+    (untouched shared-attention entries the walker copied verbatim).
+    ``cache["pos"]`` advances by acc. Dropping the rejected suffix is the
+    WHOLE rollback: nothing speculative ever reached the cache."""
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    acc = jnp.asarray(acc, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full(acc.shape, pos)
+
+    def leaf(path, old, new):
+        ps = _path_str(path)
+        ba = 1 if ps.startswith("groups") else 0
+        name = ps.rsplit("/", 1)[-1]
+        if new.shape == old.shape:
+            return new                       # untouched pass-through
+        if name == "ssm":
+            got = _gather_time_window(new, ba, acc - 1, 1)
+            return jnp.squeeze(got, axis=ba + 1).astype(old.dtype)
+        if name == "conv":
+            width = old.shape[ba + 1]        # W - 1
+            return _gather_time_window(new, ba, acc, width).astype(old.dtype)
+        if name in ("k", "v"):
+            return _commit_kv_rows(old, new, ba, pos, acc)
+        raise ValueError(f"spec_commit: unrecognised staged leaf {ps!r} "
+                         f"with shape {new.shape} vs cache {old.shape}")
+
+    body = {key: cache[key] for key in staged}
+    committed = jax.tree_util.tree_map_with_path(leaf, body, staged)
+    new_cache = dict(cache)
+    new_cache.update(committed)
+    new_cache["pos"] = pos + acc
+    return new_cache

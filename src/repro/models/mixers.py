@@ -92,9 +92,26 @@ def causal_conv1d_prefill(w: jax.Array, b: jax.Array, buf: jax.Array,
 
 def _state_at(traj: jax.Array, length) -> jax.Array:
     """State at position ``length - 1`` of a (B, T, ...) state trajectory
-    (the last VALID position of a right-padded prefill chunk)."""
-    return jax.lax.dynamic_index_in_dim(traj, length - 1, axis=1,
-                                        keepdims=False)
+    (the last VALID position of a right-padded prefill chunk). ``length``
+    may be a scalar or a (B,) per-row vector (batched multi-request
+    admission prefill: every row has its own valid length)."""
+    length = jnp.asarray(length)
+    if length.ndim == 0:
+        return jax.lax.dynamic_index_in_dim(traj, length - 1, axis=1,
+                                            keepdims=False)
+    idx = (length - 1).reshape((-1,) + (1,) * (traj.ndim - 1))
+    idx = jnp.broadcast_to(idx, traj.shape[:1] + (1,) + traj.shape[2:])
+    return jnp.take_along_axis(traj, idx, axis=1)[:, 0]
+
+
+def _history_slice(xp: jax.Array, start, width: int) -> jax.Array:
+    """``xp[:, start : start + width]`` with a scalar or per-row (B,)
+    ``start`` — the conv-buffer slice at the valid-length boundary."""
+    start = jnp.asarray(start)
+    if start.ndim == 0:
+        return jax.lax.dynamic_slice_in_dim(xp, start, width, axis=1)
+    return jax.vmap(lambda row, s: jax.lax.dynamic_slice_in_dim(
+        row, s, width, axis=0))(xp, start)
 
 
 # ---------------------------------------------------------------------------
@@ -128,12 +145,20 @@ def mamba1_init(arch: ArchConfig, key) -> Params:
 
 
 def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
-                 state: Optional[Dict] = None, prefill_len=None):
+                 state: Optional[Dict] = None, prefill_len=None,
+                 return_traj: bool = False, solver_iters=None):
     """h: (B, T, d). Returns (out, new_state). state holds (ssm (B,di,N),
     conv buffer (B,W-1,di)) for decode/prefill; None => full-sequence mode.
     With state and T > 1 the call is a PREFILL: the selective scan runs in
     parallel from the carried state and ``new_state`` is taken at position
-    ``prefill_len - 1`` (default T)."""
+    ``prefill_len - 1`` (default T; scalar or per-row (B,) vector).
+
+    ``return_traj`` (speculative-verify staging) returns, instead of the
+    boundary state, the FULL window artifacts: {"ssm": (B,T,di,N) state
+    trajectory, "conv": (B,T+W-1,di) history-prepended conv input stream}
+    — ``models/lm.spec_commit`` slices both at the per-slot accept
+    boundary after verification. ``solver_iters`` is accepted for mixer-API
+    uniformity; the linear scan is exact, so it is a no-op here."""
     B, T, _ = h.shape
     d_inner, dt_rank, N, W = mamba1_dims(arch)
     cdt = arch.dtype
@@ -168,8 +193,9 @@ def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
     elif prefill:
         x, xp = causal_conv1d_prefill(p["conv_w"], p["conv_b"],
                                       state["conv"], x)
-        conv_buf_new = jax.lax.dynamic_slice_in_dim(
-            xp, L, W - 1, axis=1).astype(state["conv"].dtype)
+        conv_buf_new = (xp if return_traj else
+                        _history_slice(xp, L, W - 1)
+                        .astype(state["conv"].dtype))
     else:
         conv_buf_new, xs = conv_step(p["conv_w"], p["conv_b"], state["conv"],
                                      x[:, 0])
@@ -198,7 +224,7 @@ def mamba1_apply(p: Params, arch: ArchConfig, h: jax.Array,
             ssm_new = None
         else:
             hs = jax.vmap(scan)(lam, beta, state["ssm"])        # (B,T,di,N)
-            ssm_new = _state_at(hs, L)
+            ssm_new = hs if return_traj else _state_at(hs, L)
     else:
         hs = lam[:, 0] * state["ssm"] + beta[:, 0]              # (B,di,N)
         ssm_new = hs
@@ -252,10 +278,12 @@ def mamba2_init(arch: ArchConfig, key) -> Params:
 
 
 def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
-                 state: Optional[Dict] = None, prefill_len=None):
+                 state: Optional[Dict] = None, prefill_len=None,
+                 return_traj: bool = False, solver_iters=None):
     """SSD-style mixer. Same three-mode dispatch as ``mamba1_apply``:
     full-sequence (state None), one-token decode (T == 1), or parallel
-    prefill from the carried state (T > 1)."""
+    prefill from the carried state (T > 1); ``prefill_len`` scalar or
+    per-row, ``return_traj``/``solver_iters`` as in ``mamba1_apply``."""
     B, T, _ = h.shape
     d_inner, H, P, N, W = mamba2_dims(arch)
     cdt = arch.dtype
@@ -303,8 +331,9 @@ def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
     elif prefill:
         xbc, xp = causal_conv1d_prefill(conv_w, conv_b,
                                         state["conv"], xbc)
-        conv_new = jax.lax.dynamic_slice_in_dim(
-            xp, L, W - 1, axis=1).astype(state["conv"].dtype)
+        conv_new = (xp if return_traj else
+                    _history_slice(xp, L, W - 1)
+                    .astype(state["conv"].dtype))
     else:
         conv_new, xs = conv_step(conv_w, conv_b, state["conv"],
                                  xbc[:, 0])
@@ -331,7 +360,7 @@ def mamba2_apply(p: Params, arch: ArchConfig, h: jax.Array,
             ssm_new = None
         else:
             hs = jax.vmap(scan)(lam_b, beta, state["ssm"])
-            ssm_new = _state_at(hs, L)
+            ssm_new = hs if return_traj else _state_at(hs, L)
     else:
         hs = lam_full[:, 0] * state["ssm"] + beta[:, 0]
         ssm_new = hs
@@ -410,11 +439,20 @@ def _lrc_mixer_step(p: Params, x, s_u, eps_u):
 
 
 def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
-                    state: Optional[Dict] = None, prefill_len=None):
+                    state: Optional[Dict] = None, prefill_len=None,
+                    return_traj: bool = False, solver_iters=None):
     """The paper's nonlinear mixer. Full-sequence and prefill modes run the
     DEER Newton solve (sequence-parallel when ``arch.ssm.seq_shard``);
     decode (T == 1) is ONE exact step of the recurrence — the O(D)
-    state-cache property the serving engine banks on."""
+    state-cache property the serving engine banks on.
+
+    ``solver_iters`` caps the Newton iteration count below
+    ``arch.ssm.deer_iters`` — the speculative-decode DRAFT path (an
+    early-exit K=1–2 solve is a cheap predictor of the converged
+    trajectory; "predictability enables parallelization"). The VERIFY pass
+    always runs at full depth, so truncation never affects emitted tokens.
+    ``return_traj`` returns the full (B,T,di) state trajectory instead of
+    the boundary state (verify staging; prefill mode only)."""
     B, T, _ = h.shape
     d_inner = arch.ssm.expand * arch.d_model
     cdt = arch.dtype
@@ -448,16 +486,30 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
                      "k_max_u", "w_x", "v_x", "g_leak", "e_leak")
         cell_p = {k: p[k].astype(jnp.float32) for k in cell_keys}
         step = lambda x, fs, cp: _lrc_mixer_step(cp, x, *fs)
-        dc = DeerConfig(max_iters=arch.ssm.deer_iters, mode="fixed",
+        n_iters = arch.ssm.deer_iters
+        draft = solver_iters is not None and solver_iters < n_iters
+        if draft:
+            n_iters = solver_iters
+        elif T < n_iters:
+            # exactness cap: a full Newton step fixes at least one more
+            # timestep per iteration, so DEER is EXACT after T iterations
+            # on a length-T window — the k-token verify window never pays
+            # the full ladder
+            n_iters = T
+        dc = DeerConfig(max_iters=n_iters, mode="fixed",
                         grad="implicit",
                         scan_chunk=0 if arch.exact_hlo else arch.ssm.chunk,
                         unroll=arch.exact_hlo)
         x0 = None if state is None else state["ssm"]
         states = _lrc_solve_trajectory(arch, step, cell_p, s_u, eps_u,
-                                       d_inner, dc, x0=x0)   # (B,T,di)
-        ssm_new = (None if state is None
-                   else _state_at(states, T if prefill_len is None
-                                  else prefill_len))
+                                       d_inner, dc, x0=x0,
+                                       draft=draft)          # (B,T,di)
+        if return_traj and state is not None:
+            ssm_new = states
+        else:
+            ssm_new = (None if state is None
+                       else _state_at(states, T if prefill_len is None
+                                      else prefill_len))
     else:
         states = _lrc_mixer_step(p, state["ssm"], s_u[:, 0], eps_u[:, 0])
         ssm_new = states
@@ -472,9 +524,13 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
 
 def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
                           d_inner: int, dc: DeerConfig,
-                          x0: Optional[jax.Array] = None) -> jax.Array:
+                          x0: Optional[jax.Array] = None,
+                          draft: bool = False) -> jax.Array:
     """DEER solve of the lrc-mixer trajectory. s_u/eps_u: (B, T, di).
     ``x0``: (B, di) initial state (chunked-prefill carry) or None for zero.
+    ``draft`` marks the truncated speculative-draft solve (dc.max_iters
+    already capped) — routed through the early-exit kernel entry so the
+    fused tier can also skip converged chunks.
 
     With ``arch.ssm.fused`` the solve routes through the fused Pallas
     tiers (kernels/lrc_deer): the whole-Newton megakernel (replicated) or
@@ -525,7 +581,8 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
     if fused:
         got = _lrc_fused_trajectory(s_u, eps_u, cell_p, xb, dc,
                                     mesh=mesh, seq_axes=seq_axes,
-                                    batch_sharded=ba is not None)
+                                    batch_sharded=ba is not None,
+                                    draft=draft)
         if got is not None:
             return got
 
@@ -546,7 +603,8 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
 
 
 def _lrc_fused_trajectory(s_u, eps_u, cell_p, x0, dc: DeerConfig, *,
-                          mesh, seq_axes, batch_sharded: bool):
+                          mesh, seq_axes, batch_sharded: bool,
+                          draft: bool = False):
     """Fused-kernel route for the lrc mixer: fold the batch into the
     channel axis ((B, T, di) -> (T, B*di); every kernel quantity is
     per-channel elementwise) and run the megakernel (replicated) or the
@@ -556,6 +614,7 @@ def _lrc_fused_trajectory(s_u, eps_u, cell_p, x0, dc: DeerConfig, *,
     through the lax solver must not be silently replicated by the channel
     fold, so that case falls back to the sharded-lax tier."""
     from repro.kernels.lrc_deer.ops import (fold_channel_batch,
+                                            lrc_deer_draft_solve,
                                             lrc_deer_solve,
                                             sharded_fused_viable,
                                             sharded_lrc_deer_solve)
@@ -572,7 +631,11 @@ def _lrc_fused_trajectory(s_u, eps_u, cell_p, x0, dc: DeerConfig, *,
         return None
     if mesh is not None:
         return None
-    states = lrc_deer_solve(suf, euf, pp, x0f, n_iters=dc.max_iters)
+    if draft:
+        states = lrc_deer_draft_solve(suf, euf, pp, x0f,
+                                      draft_iters=dc.max_iters)
+    else:
+        states = lrc_deer_solve(suf, euf, pp, x0f, n_iters=dc.max_iters)
     return jnp.swapaxes(states.reshape(T, B, di), 0, 1)
 
 

@@ -53,6 +53,21 @@ def _scatter(resident: Dict, fragment: Dict, slot: jax.Array) -> Dict:
     return jax.tree_util.tree_map_with_path(leaf, resident, fragment)
 
 
+def _scatter_rows(resident: Dict, fragment: Dict, slots: jax.Array) -> Dict:
+    """Write a batch=n fragment into rows ``slots`` (a (n,) index vector)
+    of the resident cache — the batched-admission scatter: one device op
+    for the whole admission group instead of n single-slot scatters."""
+    def leaf(path, res, frag):
+        ps = _path_str(path)
+        if ps.endswith("pos"):
+            return res.at[slots].set(frag.astype(res.dtype))
+        ax = batch_axis_for(ps)
+        if ax == 0:
+            return res.at[slots].set(frag.astype(res.dtype))
+        return res.at[:, slots].set(frag.astype(res.dtype))
+    return jax.tree_util.tree_map_with_path(leaf, resident, fragment)
+
+
 def _gather(resident: Dict, slot: jax.Array) -> Dict:
     """Read row ``slot`` back out as a batch=1 fragment (scalar pos)."""
     def leaf(path, res):
@@ -80,6 +95,7 @@ class StateCache:
         self.cache: Dict[str, Any] = cache
         self._free: List[int] = list(range(n_slots - 1, -1, -1))
         self._scatter = jax.jit(_scatter, donate_argnums=(0,))
+        self._scatter_rows = jax.jit(_scatter_rows, donate_argnums=(0,))
         self._gather = jax.jit(_gather)
 
     @property
@@ -102,6 +118,13 @@ class StateCache:
         """Scatter a batch=1 prefill fragment into ``slot`` (device-side)."""
         self.cache = self._scatter(self.cache, fragment,
                                    jnp.asarray(slot, jnp.int32))
+
+    def write_slots(self, slots, fragment: Dict) -> None:
+        """Scatter a batch=n prefill fragment into rows ``slots`` — the
+        batched-admission counterpart of ``write_slot`` (vector ``pos`` in
+        the fragment, one donated device scatter for the group)."""
+        self.cache = self._scatter_rows(self.cache, fragment,
+                                        jnp.asarray(slots, jnp.int32))
 
     def read_slot(self, slot: int) -> Dict:
         """Gather ``slot`` as a batch=1 fragment (scalar pos) — the inverse

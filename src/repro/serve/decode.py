@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.models import Model
 from repro.train.step import jit_step, make_step
@@ -37,3 +38,50 @@ def make_decode_step(model: Model, params, cache_like, *,
         return jit_step(model, "serve", mesh, params_like=params,
                         cache_like=cache_like, batch_size=batch_size)
     return jax.jit(make_step(model, "serve"), donate_argnums=(2,))
+
+
+def make_verify_step(model: Model, params, cache_like, *,
+                     mesh=None, batch_size: int = 0, spec_k: int = 2,
+                     draft_iters: Optional[int] = None) -> Callable:
+    """Build the jitted speculative VERIFY tick: ``(params, window (B,k),
+    cache) -> (y (B,k), acc (B,), new_cache)``.
+
+    One prefill-style parallel solve over the k-token window for all
+    active slots; ``acc`` is the per-slot accepted-prefix length (1..k)
+    and ``new_cache`` holds exactly the accepted tokens' state — the
+    rejected tail was never written, so rollback is implicit and
+    bit-exact. Cache donated, same as the decode tick. ``draft_iters``
+    fuses the early-exit draft forward into the same dispatch (the
+    "solve" draft strategy without a second host round-trip).
+    """
+    if mesh is not None:
+        return jit_step(model, "verify", mesh, params_like=params,
+                        cache_like=cache_like, batch_size=batch_size,
+                        spec_k=spec_k, spec_draft_iters=draft_iters)
+    return jax.jit(make_step(model, "verify", draft_iters=draft_iters),
+                   donate_argnums=(2,))
+
+
+def make_draft_step(model: Model, draft_iters: int) -> Callable:
+    """Build the jitted DRAFT tick: ``(params, window (B,k), cache) ->
+    refined window (B,k)``.
+
+    A read-only early-exit forward (``solver_iters=draft_iters`` truncates
+    the lrc Newton ladder; attention/mamba families run the plain window
+    forward) whose greedy argmax refines the draft positions: position 0
+    (the last verified token) is kept, drafts 1..k-1 become the model's
+    own cheap continuation. The cache is NOT donated and NOT updated —
+    drafting must never perturb verified state.
+    """
+    if model.spec_forward is None:
+        raise ValueError(
+            f"model family {model.arch.family!r} has no speculative "
+            "verify seam (spec_forward is None)")
+
+    @jax.jit
+    def draft(params, window, cache):
+        logits, _ = model.spec_forward(params, window, cache,
+                                       solver_iters=draft_iters)
+        y = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.concatenate([window[:, :1], y[:, :-1]], axis=1)
+    return draft

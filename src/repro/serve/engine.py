@@ -24,6 +24,19 @@ into the prompt and is re-prefilled (in parallel) on re-admission.
 Tokens stream to the caller through per-request ``on_token`` callbacks,
 invoked in generation order within a request and in slot order within a
 tick.
+
+**Self-speculative decoding** (``SpecConfig``): instead of one token per
+tick, the engine carries k-1 DRAFT tokens per slot and verifies the whole
+(B, k) window in ONE prefill-style parallel solve (``serve/decode.
+make_verify_step`` over ``models/lm.spec_forward``). The longest draft
+prefix matching the model's own greedy continuation is accepted (always
+>= 1 token — never slower than plain decode in tokens per tick);
+rejected-tail state is simply never committed, so rollback is free and
+bit-exact, and the emitted stream is token-identical to sequential greedy
+decode. Drafts come either from the previous window's verified leftovers
+("reuse" — zero extra compute, the Jacobi warm start) or from an
+early-exit truncated-Newton forward ("solve" — ``draft_iters`` on the
+DEER ladder).
 """
 from __future__ import annotations
 
@@ -36,9 +49,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import _path_str
 from repro.models import Model
-from repro.serve.cache import StateCache
-from repro.serve.decode import make_decode_step
+from repro.serve.cache import StateCache, batch_axis_for
+from repro.serve.decode import make_decode_step, make_verify_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Self-speculative decoding knobs.
+
+    ``k`` is the verify-window length (1 verified anchor + k-1 drafts);
+    ``draft`` picks the draft source: "reuse" recycles the previous
+    window's verified-but-unemitted leftovers (zero extra compute),
+    "solve" runs an extra early-exit forward at ``draft_iters`` Newton
+    iterations (lrc mixers; other families run the plain window forward).
+    Both are LOSSLESS — the full-depth verify pass gates every emitted
+    token."""
+    k: int = 4
+    draft: str = "reuse"          # "reuse" | "solve"
+    draft_iters: int = 2
 
 
 @dataclasses.dataclass
@@ -67,7 +97,7 @@ class ServeEngine:
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_seq: int = 256, prefill_chunk: int = 32, mesh=None,
-                 policy=None):
+                 policy=None, spec: Optional[SpecConfig] = None):
         if policy is not None and mesh is None:
             mesh = policy.build_mesh()
         self.policy = policy
@@ -89,12 +119,64 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, t, c, l: model.prefill(p, t, c, l))
         self._last_tok = np.zeros((batch_slots, 1), np.int32)
+        self.spec = spec
+        self._verify = None
+        self._draft_tok = None
+        self.spec_stats: Dict[str, int] = {
+            "draft_tokens": 0, "accepted_tokens": 0, "emitted_tokens": 0,
+            "verify_calls": 0}
+        if spec is not None:
+            self._check_spec(spec)
+            if spec.draft == "solve":
+                di = spec.draft_iters
+            elif spec.draft == "reuse":
+                di = None
+            else:
+                raise ValueError(f"unknown draft strategy: {spec.draft!r}")
+            # "solve" drafting is FUSED into the verify dispatch — one
+            # device call per tick either way
+            self._verify = make_verify_step(model, params, self.cache.cache,
+                                            mesh=mesh,
+                                            batch_size=batch_slots,
+                                            spec_k=spec.k, draft_iters=di)
+            self._draft_tok = np.zeros((batch_slots, spec.k - 1), np.int32)
         # per-token wall-clock samples: "prefill" covers each request's
         # first token (admission cost), "decode" one batched tick. Bounded
         # (and `finished` too) so a long-running server does not grow
         # host memory linearly with tokens served.
         self.token_lat: Dict[str, deque] = {
             "prefill": deque(maxlen=4096), "decode": deque(maxlen=4096)}
+
+    def _check_spec(self, spec: SpecConfig) -> None:
+        """Reject spec geometries the commit/verify paths cannot serve
+        losslessly: the window must fit strictly inside every attention
+        ring (a k-row masked commit into an S-slot ring needs k < S), and
+        for lrc mixers the verify window must be short enough that the
+        fixed-depth Newton ladder is EXACT on it (DEER converges in <= T
+        iterations on a length-T window)."""
+        if spec.k < 2:
+            raise ValueError(f"spec.k={spec.k}: the window is 1 verified "
+                             "anchor + k-1 drafts, so k must be >= 2")
+        rings: List[int] = []
+
+        def scan_leaf(path, leaf):
+            ps = _path_str(path)
+            if ps.rsplit("/", 1)[-1] in ("k", "v"):
+                rings.append(leaf.shape[batch_axis_for(ps) + 1])
+            return leaf
+        jax.tree_util.tree_map_with_path(scan_leaf, self.cache.cache)
+        if rings and spec.k >= min(rings):
+            raise ValueError(
+                f"spec.k={spec.k} does not fit the smallest attention "
+                f"ring ({min(rings)} slots): the verify window must be "
+                "strictly shorter than every KV ring")
+        ssm = getattr(self.model.arch, "ssm", None)
+        if ssm is not None and ssm.kind == "lrc" and spec.k > ssm.deer_iters:
+            raise ValueError(
+                f"spec.k={spec.k} > deer_iters={ssm.deer_iters}: the "
+                "verify solve would be approximate on the window and "
+                "speculative decode would no longer be lossless; lower k "
+                "or raise deer_iters")
 
     # -- admission ----------------------------------------------------------
 
@@ -112,38 +194,67 @@ class ServeEngine:
         C = self.prefill_chunk
         worst_feed = len(req.prompt) + max(req.max_new_tokens - 1, 0)
         worst_padded = -(-worst_feed // C) * C
-        if need > self.max_seq or worst_padded > self.max_seq:
+        # speculative windows write up to k-1 positions past the last
+        # emitted token before the accept decision truncates them
+        spec_pad = (self.spec.k - 1) if self.spec is not None else 0
+        if need + spec_pad > self.max_seq or worst_padded > self.max_seq:
             raise ValueError(
                 f"request {req.uid}: prompt ({len(req.prompt)}) + "
                 f"max_new_tokens ({req.max_new_tokens}) needs "
-                f"{max(need, worst_padded)} cache positions (incl. "
-                f"prefill_chunk={C} padding) but max_seq={self.max_seq}; "
-                f"raise max_seq or lower prefill_chunk")
+                f"{max(need + spec_pad, worst_padded)} cache positions "
+                f"(incl. prefill_chunk={C} padding"
+                + (f" and spec window k={self.spec.k}" if spec_pad else "")
+                + f") but max_seq={self.max_seq}; raise max_seq or lower "
+                "prefill_chunk")
         self.queue.append(req)
 
-    def _prefill_request(self, req: Request):
-        """Run the request's feed (prompt + any already-generated tokens —
-        the eviction/re-admission path) through chunked parallel prefill.
-        Returns (batch=1 cache fragment, first generated token)."""
-        feed = np.concatenate(
-            [np.asarray(req.prompt, np.int32),
-             np.asarray(req.out_tokens, np.int32)])
-        L = len(feed)
+    def _feed(self, req: Request) -> np.ndarray:
+        """The prefill feed: prompt + any already-generated tokens (the
+        eviction/re-admission path folds generations into the prompt)."""
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.out_tokens, np.int32)])
+
+    def _n_chunks(self, req: Request) -> int:
+        """Number of prefill chunks the request's feed needs — the batched
+        admission grouping key (equal-chunk requests share one launch)."""
+        L = len(req.prompt) + len(req.out_tokens)
+        return max(1, -(-L // self.prefill_chunk))
+
+    def _prefill_group(self, group: List[Request], n_chunks: int):
+        """Run a batch of same-chunk-count requests through chunked
+        parallel prefill in ONE set of launches. Interior chunks are fully
+        valid for every row (the grouping key guarantees L > (n_chunks-1)*C),
+        so per-row lengths only enter the FINAL chunk, which flips the
+        fragment's ``pos`` from scalar to a per-row vector. Returns
+        (batch=n cache fragment with vector pos, (n,) first tokens)."""
         C = self.prefill_chunk
-        n_chunks = max(1, -(-L // C))
-        padded = np.zeros(n_chunks * C, np.int32)
-        padded[:L] = feed
-        frag = self.model.init_cache(self.params, 1, self.max_seq)
-        logits = valid = None
+        Bn = len(group)
+        feeds = [self._feed(r) for r in group]
+        lengths = np.asarray([len(f) for f in feeds], np.int32)
+        padded = np.zeros((Bn, n_chunks * C), np.int32)
+        for j, f in enumerate(feeds):
+            padded[j, :len(f)] = f
+        frag = self.model.init_cache(self.params, Bn, self.max_seq)
+        tail = jnp.asarray(lengths - (n_chunks - 1) * C, jnp.int32)
+        logits = None
         for ci in range(n_chunks):
-            chunk = jnp.asarray(padded[None, ci * C:(ci + 1) * C])
-            valid = min(C, L - ci * C)
-            logits, frag = self._prefill(self.params, chunk, frag,
-                                         jnp.asarray(valid, jnp.int32))
-        # deliberate host boundary: one sync per ADMISSION (not per step) —
-        # the first token feeds host-side slot bookkeeping and callbacks
-        first_tok = int(jnp.argmax(logits[0, valid - 1]))  # repro-lint: disable=host-sync
-        return frag, first_tok
+            chunk = jnp.asarray(padded[:, ci * C:(ci + 1) * C])
+            valid = tail if ci == n_chunks - 1 else jnp.asarray(C, jnp.int32)
+            logits, frag = self._prefill(self.params, chunk, frag, valid)
+        last = jnp.take_along_axis(logits, (tail - 1)[:, None, None],
+                                   axis=1)[:, 0]
+        # deliberate host boundary: one sync per ADMISSION BATCH (not per
+        # step) — first tokens feed host-side slot bookkeeping + callbacks
+        first = np.asarray(jnp.argmax(last, axis=-1), np.int32)  # repro-lint: disable=host-sync
+        return frag, first
+
+    def _prefill_request(self, req: Request):
+        """Single-request admission prefill (batch=1 fragment with scalar
+        semantics preserved through the group path)."""
+        frag, first = self._prefill_group([req], self._n_chunks(req))
+        frag = dict(frag)
+        frag["pos"] = jnp.reshape(frag["pos"], ())   # (1,) -> scalar
+        return frag, int(first[0])
 
     def _emit(self, req: Request, tok: int) -> bool:
         """Record one generated token; fire the stream callback; returns
@@ -158,31 +269,63 @@ class ServeEngine:
             self.finished.append(req)
         return done
 
-    def _admit(self) -> None:
-        """Fill free slots from the queue: prefill + scatter + first token."""
+    def _admit(self, max_prefills: Optional[int] = None,
+               max_batch: Optional[int] = None) -> int:
+        """Fill free slots from the queue with BATCHED admission: pop the
+        longest FIFO prefix of requests that share a prefill chunk count
+        (the compile-shape grouping key), run them through ONE chunked
+        parallel prefill, and scatter the whole group in one device op.
+
+        ``max_prefills`` bounds the number of prefill LAUNCHES this call
+        may issue (the scheduler's prefill/decode interleaving budget);
+        ``max_batch`` caps the admission group size. Returns the number of
+        launches issued."""
+        launches = 0
         while self.queue and self.cache.n_free > 0:
-            req = self.queue.popleft()
-            slot = self.cache.alloc()
+            if max_prefills is not None and launches >= max_prefills:
+                break
+            cap = self.cache.n_free
+            if max_batch:
+                cap = min(cap, max_batch)
+            group = [self.queue.popleft()]
+            nc = self._n_chunks(group[0])
+            while (self.queue and len(group) < cap
+                   and self._n_chunks(self.queue[0]) == nc):
+                group.append(self.queue.popleft())
+            slots = [self.cache.alloc() for _ in group]
             t0 = time.perf_counter()
-            frag, first_tok = self._prefill_request(req)
-            self.cache.write_slot(slot, frag)
-            self.token_lat["prefill"].append(time.perf_counter() - t0)
-            if self._emit(req, first_tok):
-                self.cache.free(slot)          # one-token request
-            else:
-                self.active[slot] = req
-                self._last_tok[slot, 0] = first_tok
+            frag, first = self._prefill_group(group, nc)
+            self.cache.write_slots(np.asarray(slots, np.int32), frag)
+            wall = time.perf_counter() - t0
+            launches += 1
+            for j, (req, slot) in enumerate(zip(group, slots)):
+                self.token_lat["prefill"].append(wall)
+                tok = int(first[j])
+                if self._emit(req, tok):
+                    self.cache.free(slot)      # one-token request
+                else:
+                    self.active[slot] = req
+                    self._last_tok[slot, 0] = tok
+                    if self._draft_tok is not None:
+                        # cold-start drafts: repeat the anchor; the first
+                        # verify tick replaces them with real leftovers
+                        self._draft_tok[slot, :] = tok
+        return launches
 
     # -- the tick -----------------------------------------------------------
 
-    def step(self) -> int:
-        """One engine tick: admit waiting requests, then one batched decode
-        advancing every active slot. Returns the number of slots that were
-        active this tick (0 = fully drained)."""
-        self._admit()
+    def step(self, admit: bool = True) -> int:
+        """One engine tick: admit waiting requests (unless the scheduler
+        already did), then one batched decode — plain single-token or
+        speculative k-window — advancing every active slot. Returns the
+        number of slots that were active this tick (0 = fully drained)."""
+        if admit:
+            self._admit()
         act = [s for s, r in enumerate(self.active) if r is not None]
         if not act:
             return 0
+        if self.spec is not None:
+            return self._spec_tick(act)
         t0 = time.perf_counter()
         next_tok, _, new_cache = self._decode(
             self.params, jnp.asarray(self._last_tok), self.cache.cache)
@@ -198,6 +341,53 @@ class ServeEngine:
                 self.cache.free(s)
             else:
                 self._last_tok[s, 0] = tok
+        return len(act)
+
+    def _spec_tick(self, act: List[int]) -> int:
+        """One speculative tick: (optionally) refine drafts with the
+        early-exit forward, verify the (slots, k) window in one parallel
+        solve, emit each slot's accepted prefix, and refill its drafts
+        from the verified leftovers (the Jacobi warm start). Inactive
+        slots ride along as dead rows — their committed state is garbage
+        but is fully overwritten on the next admission."""
+        spec = self.spec
+        k = spec.k
+        window = np.empty((self.slots, k), np.int32)
+        window[:, 0] = self._last_tok[:, 0]
+        window[:, 1:] = self._draft_tok
+        wdev = jnp.asarray(window)
+        t0 = time.perf_counter()
+        y, acc, new_cache = self._verify(self.params, wdev,
+                                         self.cache.cache)
+        self.cache.cache = new_cache
+        y_h = np.asarray(y)
+        acc_h = np.asarray(acc)
+        wall = time.perf_counter() - t0
+        self.spec_stats["verify_calls"] += 1
+        self.spec_stats["draft_tokens"] += (k - 1) * len(act)
+        for s in act:
+            req = self.active[s]
+            a = int(acc_h[s])
+            self.spec_stats["accepted_tokens"] += a - 1
+            self.token_lat["decode"].append(wall)
+            done = False
+            for i in range(a):
+                self.spec_stats["emitted_tokens"] += 1
+                if self._emit(req, int(y_h[s, i])):
+                    done = True
+                    break
+            if done:
+                self.active[s] = None          # recycle: continuous batching
+                self.cache.free(s)
+                continue
+            self._last_tok[s, 0] = y_h[s, a - 1]
+            # refill drafts from the verified-but-unemitted leftovers;
+            # pad by repeating the last available token
+            left = y_h[s, a:]
+            n = min(len(left), k - 1)
+            self._draft_tok[s, :n] = left[:n]
+            fillv = left[n - 1] if n > 0 else y_h[s, a - 1]
+            self._draft_tok[s, n:] = fillv
         return len(act)
 
     def evict(self, slot: int) -> Request:

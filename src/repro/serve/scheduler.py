@@ -1,0 +1,140 @@
+"""SLO-aware serve scheduler: batched admission + prefill/decode
+interleaving over the continuous-batching engine.
+
+The engine (``serve/engine.py``) knows HOW to admit and decode; this
+module decides WHEN. Each ``tick()``:
+
+  1. spends the PREFILL BUDGET — up to ``prefill_budget`` batched
+     admission launches (``engine._admit(max_prefills=...)``), each one
+     popping the longest FIFO prefix of equal-chunk-count requests and
+     prefilling them in ONE parallel launch;
+  2. runs one batched decode tick (plain or speculative) for every
+     active slot.
+
+The budget is the prefill/decode interleaving knob: prefill launches are
+long (whole prompt chunks through the parallel solvers) and every queued
+admission stalls all active decode streams for that long — the classic
+continuous-batching head-of-line problem. ``decode_slo_ms`` makes the
+budget ADAPTIVE: while the recent decode-tick p50 exceeds the SLO and
+slots are active, admission is paused entirely (budget 0) so decode
+catches up; drained slots always re-open admission (starvation-proof:
+with no active slots there is nothing to protect, so the budget is
+always spent).
+
+All scheduling state is host-side bookkeeping over the engine's public
+surface — the device-side tick shapes are untouched, so the scheduler
+adds zero compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Request, ServeEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Scheduler knobs.
+
+    ``decode_slo_ms``: target per-decode-tick p50 latency; 0 disables the
+    adaptive admission pause. ``prefill_budget``: max batched-admission
+    launches per tick. ``admit_batch``: cap on requests per admission
+    launch (0 = fill all free slots). ``window``: number of recent decode
+    samples the SLO comparison looks at."""
+    decode_slo_ms: float = 0.0
+    prefill_budget: int = 1
+    admit_batch: int = 0
+    window: int = 16
+
+
+class SLOScheduler:
+    """Drives a ``ServeEngine`` tick-by-tick under an ``SLOConfig``,
+    recording queue-depth and admission-wait statistics alongside the
+    engine's latency percentiles."""
+
+    def __init__(self, engine: ServeEngine, cfg: SLOConfig = SLOConfig()):
+        self.engine = engine
+        self.cfg = cfg
+        self.queue_depth: deque = deque(maxlen=65536)
+        self.admit_wait: deque = deque(maxlen=65536)
+        self._submit_t: Dict[int, float] = {}
+        self._queued: Dict[int, Request] = {}
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Queue a request on the engine, stamping its arrival for the
+        admission-wait statistic."""
+        self.engine.submit(req)
+        self._submit_t[req.uid] = time.perf_counter()
+        self._queued[req.uid] = req
+
+    def _note_departures(self) -> None:
+        """Record admission wait for every request that left the engine
+        queue since the last tick (admitted OR completed-at-admission)."""
+        still = {r.uid for r in self.engine.queue}
+        now = time.perf_counter()
+        for uid in list(self._queued):
+            if uid not in still:
+                self.admit_wait.append(now - self._submit_t.pop(uid))
+                del self._queued[uid]
+
+    # -- the tick -----------------------------------------------------------
+
+    def _decode_p50_ms(self) -> Optional[float]:
+        lat = self.engine.token_lat["decode"]
+        if not lat:
+            return None
+        recent = list(lat)[-self.cfg.window:]
+        return float(np.percentile(np.asarray(recent), 50)) * 1e3
+
+    def tick(self) -> int:
+        """One scheduled engine tick; returns active-slot count."""
+        budget = self.cfg.prefill_budget
+        any_active = any(r is not None for r in self.engine.active)
+        if self.cfg.decode_slo_ms > 0 and any_active:
+            p50 = self._decode_p50_ms()
+            if p50 is not None and p50 > self.cfg.decode_slo_ms:
+                budget = 0           # decode is over SLO: pause admission
+        if budget > 0:
+            self.engine._admit(max_prefills=budget,
+                               max_batch=self.cfg.admit_batch or None)
+            self._note_departures()
+        self.queue_depth.append(len(self.engine.queue))
+        return self.engine.step(admit=False)
+
+    def run_until_drained(self, max_ticks: int = 100_000):
+        """Tick until queue and slots drain; returns engine.finished."""
+        for _ in range(max_ticks):
+            self.tick()
+            if (not self.engine.queue
+                    and not any(r is not None for r in self.engine.active)):
+                break
+        return self.engine.finished
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        """Engine latency percentiles + scheduler queue/admission stats +
+        speculative accept rate (when the engine runs speculative)."""
+        out: Dict[str, float] = dict(self.engine.latency_percentiles())
+        if self.queue_depth:
+            q = np.asarray(list(self.queue_depth))
+            out["queue_depth_p50"] = float(np.percentile(q, 50))
+            out["queue_depth_max"] = float(q.max())
+        if self.admit_wait:
+            w = np.asarray(list(self.admit_wait))
+            out["admit_wait_p50_s"] = float(np.percentile(w, 50))
+            out["admit_wait_p99_s"] = float(np.percentile(w, 99))
+        ss = self.engine.spec_stats
+        if ss["draft_tokens"]:
+            out["accept_rate"] = ss["accepted_tokens"] / ss["draft_tokens"]
+            out["draft_tokens"] = float(ss["draft_tokens"])
+            out["accepted_tokens"] = float(ss["accepted_tokens"])
+            out["verify_calls"] = float(ss["verify_calls"])
+        return out

@@ -6,6 +6,7 @@ steps are built, jit-wired, and sharded.
     train : (TrainState, batch) -> (TrainState, metrics)
     eval  : (params, batch)     -> loss
     serve : (params, tokens, cache) -> (next_tok, logits, cache)
+    verify: (params, window, cache) -> (y, acc, cache)   # speculative
 
 ``jit_step`` adds the jit wiring (in/out shardings, donation) for the same
 three modes — sharding rules for the whole engine live in this module and
@@ -160,14 +161,16 @@ def _compressed_pod_allreduce(grads, residual, mesh: Mesh,
 
 def make_step(model: Model, mode: str, tcfg: Optional[TrainConfig] = None,
               mesh: Optional[Mesh] = None,
-              policy: Optional[shd.ShardingPolicy] = None) -> Callable:
+              policy: Optional[shd.ShardingPolicy] = None,
+              draft_iters: Optional[int] = None) -> Callable:
     """Build the pure step function for ``mode`` in
-    ``("train", "eval", "serve")``. ``tcfg`` is required for train;
-    ``mesh`` is required for the explicit-reduction train path (the
+    ``("train", "eval", "serve", "verify")``. ``tcfg`` is required for
+    train; ``mesh`` is required for the explicit-reduction train path (the
     shard_map is constructed at factory time). ``policy`` (a
     ``distributed.sharding.ShardingPolicy``) overrides the legacy
     TrainConfig sharding fields and supplies the mesh when it carries
-    one."""
+    one. ``draft_iters`` (verify mode only) fuses the early-exit DRAFT
+    forward into the verify step — one dispatch drafts then verifies."""
     if policy is not None:
         if mesh is None:
             mesh = policy.build_mesh() or shd.current_mesh()
@@ -184,6 +187,36 @@ def make_step(model: Model, mode: str, tcfg: Optional[TrainConfig] = None,
             next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
             return next_tok, logits, new_cache
         return serve_step
+
+    if mode == "verify":
+        # speculative-decoding verify tick: one parallel (B, k)-window
+        # forward for ALL slots, greedy accept of the longest matching
+        # prefix, masked commit. window[:, 0] is the last verified token,
+        # window[:, 1:] the drafts; y[:, i] is the greedy continuation of
+        # window[:, :i+1], so acc counts 1 (the guaranteed continuation of
+        # the verified prefix) + the run of drafts that match it. Rejected
+        # tail state is never written — rollback is free and bit-exact.
+        if model.spec_forward is None:
+            raise ValueError(
+                f"model family {model.arch.family!r} has no speculative "
+                "verify seam (spec_forward is None)")
+
+        def verify_step(params, window, cache):
+            if draft_iters is not None:
+                # fused draft: refine the window with the truncated-ladder
+                # forward FIRST (read-only), then verify the refined
+                # drafts at full depth — one dispatch for both
+                dlog, _ = model.spec_forward(params, window, cache,
+                                             solver_iters=draft_iters)
+                dy = jnp.argmax(dlog, axis=-1).astype(jnp.int32)
+                window = jnp.concatenate([window[:, :1], dy[:, :-1]],
+                                         axis=1)
+            logits, staged = model.spec_forward(params, window, cache)
+            y = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            match = (window[:, 1:] == y[:, :-1]).astype(jnp.int32)
+            acc = 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+            return y, acc, model.spec_commit(cache, staged, acc)
+        return verify_step
 
     if mode != "train":
         raise ValueError(f"unknown step mode: {mode!r}")
@@ -434,9 +467,13 @@ def jit_step(model: Model, mode: str, mesh: Mesh, *,
              tcfg: Optional[TrainConfig] = None,
              state_like: Optional[TrainState] = None,
              batch_like=None, cache_like=None, params_like=None,
-             batch_size: int = 0, donate: bool = True,
+             batch_size: int = 0, donate: bool = True, spec_k: int = 2,
+             spec_draft_iters: Optional[int] = None,
              policy: Optional[shd.ShardingPolicy] = None):
-    """jit wiring with explicit shardings for all three step modes."""
+    """jit wiring with explicit shardings for all step modes
+    (train/eval/serve/verify — ``spec_k`` is the speculative window
+    length for verify mode, ``spec_draft_iters`` fuses the draft forward
+    into the verify dispatch)."""
     ns = lambda tree: jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree,
         is_leaf=lambda x: isinstance(x, P))
@@ -494,6 +531,24 @@ def jit_step(model: Model, mode: str, mesh: Mesh, *,
             step,
             in_shardings=(pshard, tok_shard, cshard),
             out_shardings=(tok_shard, logit_shard, cshard),
+            donate_argnums=(2,),
+        )
+
+    if mode == "verify":
+        assert params_like is not None and cache_like is not None
+        step = make_step(model, "verify", draft_iters=spec_draft_iters)
+        B = batch_size or 1
+        pshard = ns(shd.param_specs(params_like, mesh))
+        cshard = ns(shd.cache_specs(cache_like, mesh))
+        bshape = (B, spec_k)
+        win_shard = NamedSharding(mesh, shd.fit_spec(
+            P(shd.batch_axes(mesh)), bshape, mesh))
+        acc_shard = NamedSharding(mesh, shd.fit_spec(
+            P(shd.batch_axes(mesh)), (B,), mesh))
+        return jax.jit(
+            step,
+            in_shardings=(pshard, win_shard, cshard),
+            out_shardings=(win_shard, acc_shard, cshard),
             donate_argnums=(2,),
         )
 

@@ -1,0 +1,351 @@
+"""Self-speculative decoding tests: LOSSLESSNESS, bit-exact rollback,
+state-cache pressure, and the SLO scheduler.
+
+The load-bearing invariant is that speculation is an execution strategy,
+not an approximation: the spec-on engine must emit token streams
+IDENTICAL to the spec-off engine (greedy sequential decode) for every
+model family the verify seam serves — lrc (DEER window solve), dense
+attention, and sliding-window(ring) attention. Rollback is free because
+rejected-tail state is never written: the commit masks staged window
+artifacts to the accepted prefix, so the post-verify cache depends only
+on the anchor and the accepted tokens, bit-for-bit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SSMConfig
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine, SpecConfig
+from repro.serve.scheduler import SLOConfig, SLOScheduler
+from repro.train.step import make_step
+
+
+def _f32(name):
+    return dataclasses.replace(get_reduced(name), dtype=jnp.float32)
+
+
+def _lrc_arch():
+    return dataclasses.replace(
+        _f32("falcon_mamba_7b"),
+        ssm=SSMConfig(kind="lrc", expand=2, deer_iters=8, chunk=0))
+
+
+_ARCHS = {
+    "lrc": _lrc_arch,
+    "dense": lambda: _f32("granite_3_8b"),
+    "windowed": lambda: _f32("gemma3_4b"),
+}
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Built (model, params) per family, shared across the module."""
+    out = {}
+    for tag, mk in _ARCHS.items():
+        arch = mk()
+        model = build_model(arch)
+        out[tag] = (arch, model, model.init(jax.random.PRNGKey(0)))
+    return out
+
+
+def _requests(arch, n, rng_seed=0, prompt_len=5, max_new=6):
+    rng = np.random.default_rng(rng_seed)
+    return [(rng.integers(0, arch.vocab, prompt_len).astype(np.int32),
+             max_new) for _ in range(n)]
+
+
+def _run_engine(model, params, reqs_spec, *, slots=2, spec=None,
+                scheduler=False, max_seq=64):
+    eng = ServeEngine(model, params, batch_slots=slots, max_seq=max_seq,
+                      prefill_chunk=8, spec=spec)
+    reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=n)
+            for i, (p, n) in enumerate(reqs_spec)]
+    if scheduler:
+        sched = SLOScheduler(eng, SLOConfig(prefill_budget=1))
+        for r in reqs:
+            sched.submit(r)
+        sched.run_until_drained()
+    else:
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], eng
+
+
+# ---------------------------------------------------------------------------
+# losslessness: spec-on == spec-off, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tag", ["lrc", "dense", "windowed"])
+def test_speculative_engine_is_lossless(built, tag):
+    """The spec-on engine (k=4, draft reuse) emits the SAME greedy token
+    streams as the spec-off engine for all three layer families — the
+    acceptance criterion: speculation changes tokens-per-dispatch, never
+    tokens."""
+    arch, model, params = built[tag]
+    reqs = _requests(arch, 4, rng_seed=hash(tag) % 1000)
+    plain, _ = _run_engine(model, params, reqs)
+    spec, eng = _run_engine(model, params, reqs,
+                            spec=SpecConfig(k=4, draft="reuse"))
+    assert spec == plain
+    ss = eng.spec_stats
+    assert ss["verify_calls"] > 0 and ss["draft_tokens"] > 0
+    # every emitted token was verified: at least 1 per slot per dispatch
+    assert ss["emitted_tokens"] >= ss["verify_calls"]
+
+
+def test_solve_draft_with_scheduler_is_lossless(built):
+    """The fused early-exit-Newton draft ("solve", truncated DEER ladder)
+    driven through the SLO scheduler is still token-identical to plain
+    decode, and the solve draft's guaranteed-accept bound holds: one
+    Newton iteration makes the draft's first position exact, so
+    accept_rate is strictly positive."""
+    arch, model, params = built["lrc"]
+    reqs = _requests(arch, 5, rng_seed=7)
+    plain, _ = _run_engine(model, params, reqs)
+    spec, eng = _run_engine(
+        model, params, reqs, scheduler=True,
+        spec=SpecConfig(k=4, draft="solve", draft_iters=2))
+    assert spec == plain
+    assert eng.spec_stats["accepted_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the verify step: accept rule, pos advance, bit-exact rollback
+# ---------------------------------------------------------------------------
+
+def _prefilled_cache(model, params, arch, B, T, max_seq):
+    """Batch=B cache prefilled with a shared-length prompt, pos flipped to
+    the per-slot vector layout the serve engine uses."""
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0, arch.vocab)
+    cache = model.init_cache(params, B, max_seq)
+    logits, cache = model.prefill(params, toks, cache)
+    cache = dict(cache)
+    cache["pos"] = jnp.full((B,), T, jnp.int32)
+    anchor = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    return cache, anchor
+
+
+def _snap(cache):
+    return jax.tree_util.tree_map(np.asarray, cache)
+
+
+def _assert_trees_bitequal(a, b):
+    fa, _ = jax.tree_util.tree_flatten(a)
+    fb, _ = jax.tree_util.tree_flatten(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("tag", ["lrc", "windowed"])
+def test_verify_rollback_is_bit_exact(built, tag):
+    """Rejected drafts leave ZERO trace: with all-wrong drafts acc==1, pos
+    advances by exactly acc, and the committed cache is bit-identical no
+    matter WHICH wrong drafts were speculated — the rejected tail is
+    never written, so rollback moves no bytes. Repeating the same verify
+    from the same snapshot is deterministic bit-for-bit."""
+    arch, model, params = built[tag]
+    B, T, k, max_seq = 2, 8, 4, 32
+    cache, anchor = _prefilled_cache(model, params, arch, B, T, max_seq)
+    snap = _snap(cache)
+    verify = make_step(model, "verify")
+
+    # the true greedy continuation (sequential decode from a cache copy)
+    seq_cache, t = dict(cache), anchor
+    y_seq = []
+    for _ in range(k):
+        lg, seq_cache = model.decode_step(params, t, seq_cache)
+        t = jnp.argmax(lg, -1).astype(jnp.int32)
+        y_seq.append(np.asarray(t[:, 0]))
+    y_seq = np.stack(y_seq, 1)                       # (B, k)
+
+    def wrong(off):
+        # drafts guaranteed to mismatch the greedy continuation
+        return jnp.asarray((y_seq[:, :k - 1] + off) % arch.vocab, jnp.int32)
+
+    win_a = jnp.concatenate([anchor, wrong(1)], axis=1)
+    win_b = jnp.concatenate([anchor, wrong(2)], axis=1)
+
+    y1, acc1, c1 = verify(params, win_a, dict(cache))
+    assert np.asarray(acc1).tolist() == [1, 1]
+    np.testing.assert_array_equal(np.asarray(c1["pos"]),
+                                  np.asarray(cache["pos"]) + np.asarray(acc1))
+    # position 0 is conditioned only on verified state: exact next token
+    np.testing.assert_array_equal(np.asarray(y1[:, 0]), y_seq[:, 0])
+
+    # different wrong drafts -> bit-identical committed state (only the
+    # accepted prefix — here the anchor's successor — was ever written)
+    _, acc2, c2 = verify(params, win_b, dict(cache))
+    assert np.asarray(acc2).tolist() == [1, 1]
+    _assert_trees_bitequal(c1, c2)
+
+    # deterministic repeat from the untouched snapshot
+    _, _, c3 = verify(params, win_a, dict(cache))
+    _assert_trees_bitequal(c1, c3)
+    _assert_trees_bitequal(snap, _snap(cache))       # inputs never mutated
+
+    # correct drafts -> full acceptance, emitted tokens == sequential greedy
+    win_good = jnp.concatenate([anchor, jnp.asarray(y_seq[:, :k - 1])], 1)
+    y4, acc4, c4 = verify(params, win_good, dict(cache))
+    assert np.asarray(acc4).tolist() == [k, k]
+    np.testing.assert_array_equal(np.asarray(y4), y_seq)
+    np.testing.assert_array_equal(np.asarray(c4["pos"]),
+                                  np.asarray(cache["pos"]) + k)
+
+
+# ---------------------------------------------------------------------------
+# state-cache pressure: eviction under load, fairness, batched scatter
+# ---------------------------------------------------------------------------
+
+def test_eviction_while_queue_full(built):
+    """Evicting a running request while the admission queue is non-empty
+    re-queues it at the FRONT (no starvation by fresh arrivals) and every
+    request still completes with the uninterrupted greedy output."""
+    arch, model, params = built["lrc"]
+    reqs_spec = _requests(arch, 6, rng_seed=11)
+    plain, _ = _run_engine(model, params, reqs_spec)
+
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=64,
+                      prefill_chunk=8)
+    reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=n)
+            for i, (p, n) in enumerate(reqs_spec)]
+    for r in reqs:
+        eng.submit(r)
+    evicted = False
+    for _ in range(200):
+        eng.step()
+        if (not evicted and eng.queue
+                and eng.active[0] is not None
+                and len(eng.active[0].out_tokens) >= 2):
+            victim = eng.evict(0)
+            assert eng.queue[0] is victim        # front of the queue
+            evicted = True
+        if not eng.queue and not any(r is not None for r in eng.active):
+            break
+    assert evicted and all(r.done for r in reqs)
+    assert [r.out_tokens for r in reqs] == plain
+
+
+def test_slot_fairness_under_oversubscription(built):
+    """20 requests over 2 slots: every request completes, and admission is
+    FIFO — first tokens arrive in submission order (no slot starvation:
+    the free-list + FIFO queue cannot skip a waiting request)."""
+    arch, model, params = built["lrc"]
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=64,
+                      prefill_chunk=8)
+    first_seen = []
+
+    def on_tok(uid, tok, done, _seen=set()):
+        if uid not in _seen:
+            _seen.add(uid)
+            first_seen.append(uid)
+
+    rng = np.random.default_rng(13)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, arch.vocab, 5).astype(np.int32),
+                    max_new_tokens=3 + (i % 4), on_token=on_tok)
+            for i in range(20)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert first_seen == list(range(20))
+
+
+def test_write_slots_matches_write_slot(built):
+    """The batched admission scatter (one device op for a batch=n
+    fragment) lands bit-identical rows to n single-slot scatters."""
+    arch, model, params = built["lrc"]
+    from repro.serve.cache import StateCache
+    B, T, max_seq = 2, 8, 32
+    cache, _ = _prefilled_cache(model, params, arch, B, T, max_seq)
+
+    sc_batch = StateCache(model, params, n_slots=3, max_seq=max_seq)
+    sc_batch.write_slots(np.asarray([2, 0], np.int32), cache)
+
+    from repro.distributed.sharding import _path_str
+    from repro.serve.cache import batch_axis_for
+
+    def row_frag(j):
+        def leaf(path, l):
+            ps = _path_str(path)
+            if ps.endswith("pos"):
+                return jnp.reshape(l[j], ())
+            ax = batch_axis_for(ps)
+            return jax.lax.slice_in_dim(l, j, j + 1, axis=ax)
+        return jax.tree_util.tree_map_with_path(leaf, dict(cache))
+
+    sc_one = StateCache(model, params, n_slots=3, max_seq=max_seq)
+    for j, slot in enumerate((2, 0)):
+        sc_one.write_slot(slot, row_frag(j))
+
+    for slot in (0, 2):
+        _assert_trees_bitequal(sc_batch.read_slot(slot),
+                               sc_one.read_slot(slot))
+
+
+# ---------------------------------------------------------------------------
+# scheduler + geometry validation
+# ---------------------------------------------------------------------------
+
+def test_slo_scheduler_drains_and_reports(built):
+    """Budget-1 scheduled serving drains an oversubscribed queue and the
+    stats surface carries the queue/admission/speculation counters."""
+    arch, model, params = built["lrc"]
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=64,
+                      prefill_chunk=8,
+                      spec=SpecConfig(k=4, draft="reuse"))
+    sched = SLOScheduler(eng, SLOConfig(prefill_budget=1, admit_batch=1))
+    rng = np.random.default_rng(17)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, arch.vocab, 5).astype(np.int32),
+                    max_new_tokens=4) for i in range(6)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_drained()
+    assert all(r.done for r in reqs)
+    st = sched.stats()
+    for key in ("decode_p50_s", "queue_depth_max", "admit_wait_p99_s",
+                "accept_rate", "verify_calls"):
+        assert key in st, key
+    assert st["queue_depth_max"] >= 1          # budget 1 really queued work
+    assert 0.0 <= st["accept_rate"] <= 1.0
+
+
+def test_spec_geometry_validation(built):
+    """Engine construction rejects spec geometries the lossless paths
+    cannot serve: k < 2, k > deer_iters (lrc exactness cap), k not
+    strictly inside the smallest attention KV ring, unknown draft."""
+    arch, model, params = built["lrc"]
+    kw = dict(batch_slots=2, max_seq=64, prefill_chunk=8)
+    with pytest.raises(ValueError, match="k must be >= 2"):
+        ServeEngine(model, params, spec=SpecConfig(k=1), **kw)
+    with pytest.raises(ValueError, match="deer_iters"):
+        ServeEngine(model, params,
+                    spec=SpecConfig(k=arch.ssm.deer_iters + 1), **kw)
+    with pytest.raises(ValueError, match="draft strategy"):
+        ServeEngine(model, params, spec=SpecConfig(k=4, draft="banana"),
+                    **kw)
+
+    warch, wmodel, wparams = built["windowed"]
+    from repro.distributed.sharding import _path_str
+    from repro.serve.cache import batch_axis_for
+    probe = ServeEngine(wmodel, wparams, **kw)
+    rings = []
+
+    def scan(path, leaf):
+        ps = _path_str(path)
+        if ps.rsplit("/", 1)[-1] in ("k", "v"):
+            rings.append(leaf.shape[batch_axis_for(ps) + 1])
+        return leaf
+    jax.tree_util.tree_map_with_path(scan, probe.cache.cache)
+    assert rings, "windowed arch must expose KV rings"
+    with pytest.raises(ValueError, match="ring"):
+        ServeEngine(wmodel, wparams, spec=SpecConfig(k=min(rings)), **kw)

@@ -134,6 +134,47 @@ def serve_prefill_contract():
                    {"arch": arch.name, "T": T})]
 
 
+def serve_verify_contract():
+    """The speculative-decoding batched VERIFY step lowers with NO
+    sequential loop of the window length k: the k-token window for all
+    slots is ONE prefill-style parallel solve (DEER ladder / associative
+    scan / window attention), never k decode ticks. k=24 is distinctive —
+    it collides with no reduced-config solver iteration count, conv width
+    or layer count, so a length-24 loop in the jaxpr can only be a
+    sequential walk over the window."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import SSMConfig
+    from repro.configs import get_reduced
+    from repro.contracts import check_lowering
+    from repro.models import build_model
+    from repro.train.step import make_step
+
+    k, slots, max_seq = 24, 4, 96
+    out = []
+    for name, patch in (
+            ("falcon_mamba_7b", {"ssm": SSMConfig(kind="lrc", expand=2,
+                                                  deer_iters=8, chunk=0)}),
+            ("gemma3_4b", {})):
+        arch = dataclasses.replace(get_reduced(name), dtype=jnp.float32,
+                                   **patch)
+        model = build_model(arch)
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(params, slots, max_seq)
+        cache["pos"] = jnp.zeros((slots,), jnp.int32)
+        report = check_lowering(
+            make_step(model, "verify"),
+            (params, jnp.zeros((slots, k), jnp.int32), cache),
+            forbid_sequential_loop_over=k)
+        tag = arch.ssm.kind if name.startswith("falcon") else "windowed"
+        out.append(_entry(f"serve-verify-parallel-{tag}", report,
+                          {"arch": arch.name, "k": k, "slots": slots}))
+    return out
+
+
 def explicit_grad_contract():
     """The explicit-int8 train step compiles with NO gradient-sized fp32
     cross-pod collective; the gspmd baseline is the positive control and
@@ -354,8 +395,8 @@ def main(argv=None) -> int:
     import jax
 
     groups = (solver_tier_contracts, serve_prefill_contract,
-              explicit_grad_contract, tp_fsdp_contract,
-              compat_routing_contract)
+              serve_verify_contract, explicit_grad_contract,
+              tp_fsdp_contract, compat_routing_contract)
     rows = []
     for group in groups:
         for row in group():
