@@ -11,7 +11,11 @@ Records, per solver implementation:
     (``kernels.autotune.solver_hbm_streams``): how many (T, D)-sized HBM
     streams one K-iteration solve moves.  The megakernel's whole point is
     collapsing K x (4..6) streams to ~3 — this ratio is hardware-
-    independent and is what the wall-clock win on a real TPU tracks;
+    independent and is what the wall-clock win on a real TPU tracks.  The
+    ``megakernel_bf16`` row narrows those streams to 2 bytes/element
+    (``io_dtype="bf16"``, fp32 VMEM accumulation) and records the
+    bytes-weighted roofline ratio (``solver_hbm_bytes``) plus its parity
+    error vs the fp32 megakernel;
   * the early-exit iteration histogram: from the megakernel's in-kernel
     per-channel residual reduction, at which Newton iteration each channel
     of the solve converged below tol (plus the ``tol``-mode effective
@@ -122,9 +126,33 @@ def bench_kernels() -> None:
         a, b, c, e, n_iters=K, chunk=chunk, d_tile=d_tile,
         megakernel=True, interpret=interp)
     mega_us = _time(mega_fn, args)
-    err_m = float(jnp.max(jnp.abs(mega_fn(*args) - want)))
+    got_m = mega_fn(*args)
+    err_m = float(jnp.max(jnp.abs(got_m - want)))
     record(f"megakernel_T{t}_K{K}", mega_us,
            solver_hbm_streams(K, "mega"), err_m)
+
+    # bf16 HBM streams: the same whole-Newton megakernel with
+    # io_dtype="bf16" — inputs/outputs cross HBM at 2 bytes/element while
+    # every VMEM accumulation stays fp32 (the PrecisionPolicy kernel_io
+    # leg). The roofline criterion gains a BYTES dimension on top of the
+    # stream-count one: solver_hbm_bytes weighs each (T, D) stream by its
+    # element width, so bf16 mega vs f32 per-iteration is (streams ratio)
+    # x (4/2) — schedule win and wire-width win compound.
+    from repro.kernels.autotune import solver_hbm_bytes
+    mega16_fn = lambda a, b, c, e: lrc_deer_solve(
+        a, b, c, e, n_iters=K, chunk=chunk, d_tile=d_tile,
+        megakernel=True, interpret=interp, io_dtype="bf16")
+    mega16_us = _time(mega16_fn, args)
+    got_16 = mega16_fn(*args)
+    err_16 = float(jnp.max(jnp.abs(got_16 - want)))
+    record(f"megakernel_bf16_T{t}_K{K}", mega16_us,
+           solver_hbm_streams(K, "mega"), err_16)
+    stream_bytes_ratio = (solver_hbm_bytes(K, "fused_iter", 4)
+                          / solver_hbm_bytes(K, "mega", 2))
+    rows[-1].update({
+        "io_dtype": "bf16", "io_bytes_per_elem": 2,
+        "stream_bytes_ratio_vs_fused_iter_f32": stream_bytes_ratio,
+        "max_err_vs_f32_mega": float(jnp.max(jnp.abs(got_16 - got_m)))})
 
     # early-exit accounting from the in-kernel residual reduction
     _, resid = lrc_deer_megakernel_pallas(su, eu, pp, x0, n_iters=K,
@@ -159,6 +187,10 @@ def bench_kernels() -> None:
         # by the per-grid-step interpreter overhead, so ~1x is expected on
         # CPU; the roofline win shows up compiled on TPU).
         "hbm_stream_ratio_mega_vs_iter": stream_ratio,
+        # bytes-weighted variant: bf16 streams halve the per-element width
+        # on top of the schedule's stream-count collapse (analytic, like
+        # the stream ratio — solver_hbm_bytes = streams x bytes/elem)
+        "hbm_stream_bytes_ratio_mega_bf16_vs_iter_f32": stream_bytes_ratio,
         "stream_ratio_is_analytic": True,
         "stream_contract_violations": [v.to_json()
                                        for v in stream_contract.violations],

@@ -1,12 +1,43 @@
 """Benchmark harness: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows.
 
+Every run also APPENDS one JSON line per benchmark to
+``BENCH_history.jsonl`` at the repo root (override via
+``BENCH_HISTORY_OUT``; empty string disables): ``{ts, git_sha, bench,
+wall_s, status}``. The ``BENCH_*.json`` files the individual benchmarks
+write are per-commit SNAPSHOTS — overwritten on every run — so without
+the history file a regression's onset is unrecoverable once the next run
+lands; the append-only log is what trend tooling diffs across commits.
+
     PYTHONPATH=src python -m benchmarks.run [--only substring] [--quick]
 """
 import argparse
+import datetime
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=_ROOT,
+            capture_output=True, text=True, timeout=10).stdout.strip() or "?"
+    except Exception:
+        return "?"
+
+
+def _append_history(path: str, row: dict) -> None:
+    try:
+        with open(path, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    except OSError as e:
+        print(f"# history append failed: {e}", file=sys.stderr, flush=True)
 
 
 def main() -> None:
@@ -14,6 +45,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run benchmarks whose name contains this substring")
     args = ap.parse_args()
+
+    history = os.environ.get("BENCH_HISTORY_OUT",
+                             os.path.join(_ROOT, "BENCH_history.jsonl"))
+    sha = _git_sha()
 
     from benchmarks import (ablations, grad_compression, kernels,
                             paper_tables, seq_parallel, serve)
@@ -39,14 +74,26 @@ def main() -> None:
         if args.only and args.only not in fn.__name__:
             continue
         t0 = time.time()
+        status = "ok"
         try:
             fn()
         except Exception:
             traceback.print_exc()
             print(f"{fn.__name__},0,FAILED")
+            status = "failed"
             failures += 1
-        print(f"# {fn.__name__} done in {time.time()-t0:.1f}s",
+        wall = time.time() - t0
+        print(f"# {fn.__name__} done in {wall:.1f}s",
               file=sys.stderr, flush=True)
+        if history:
+            _append_history(history, {
+                "ts": datetime.datetime.now(datetime.timezone.utc)
+                .isoformat(timespec="seconds"),
+                "git_sha": sha,
+                "bench": fn.__name__,
+                "wall_s": round(wall, 3),
+                "status": status,
+            })
     sys.exit(1 if failures else 0)
 
 

@@ -11,7 +11,12 @@ the O(D)-state family the serving story is about):
 Per row: tokens/s over generated tokens, p50/p99 per-token decode latency,
 p50 admission (prefill) latency. The ``speedup`` row records the
 continuous/one-at-a-time tokens/s ratio and the ``meets_2x`` flag (the PR-4
-acceptance bar). A further ``prefill_parallel`` row asserts — at the jaxpr
+acceptance bar). The ``serve_quantized_cache_{int8,fp8}`` rows run the
+end-to-end quantized engine (``PrecisionPolicy`` presets: int8/fp8 weights
++ state cache + narrowed kernel streams) and record the resident
+slot-state capacity ratio vs fp32 — the fp8 row carries the ``meets_4x``
+acceptance flag (a plain 1-byte cast is exactly 4x; int8 pays f32 block
+scales on top). A further ``prefill_parallel`` row asserts — at the jaxpr
 level, via ``repro.contracts.check_lowering`` — that chunk prefill
 contains NO length-T sequential scan (the parallel-solver-lowering
 acceptance check) and records the loop lengths it does contain.
@@ -38,7 +43,7 @@ TOY = (8, 8, 32, 8, 8)
 
 
 def _run_engine(model, params, slots, max_seq, chunk, reqs_spec,
-                spec=None):
+                spec=None, precision=None):
     """Serve one request trace; returns (tokens/s, latency percentiles,
     tokens, wall, engine) — the engine gives callers ``spec_stats``."""
     import numpy as np
@@ -46,7 +51,8 @@ def _run_engine(model, params, slots, max_seq, chunk, reqs_spec,
     from repro.serve.engine import Request, ServeEngine
 
     engine = ServeEngine(model, params, batch_slots=slots, max_seq=max_seq,
-                         prefill_chunk=chunk, spec=spec)
+                         prefill_chunk=chunk, spec=spec,
+                         precision=precision)
     # warmup: replay the WHOLE trace once outside the measured window so
     # every compile shape (admission group widths included) is covered —
     # the measured run is pure steady-state
@@ -176,6 +182,42 @@ def main() -> None:
           f"accept_rate={accept:.2f};"
           f"tokens_per_verify={tokens_per_verify:.2f};"
           f"enforced={on_accel}", flush=True)
+
+    # ---- quantized state cache: slot capacity + throughput --------------
+    # End-to-end quantized serve on the lrc variant (the engine injects
+    # tick-aligned state quantization — SSMConfig.state_quant — so decode
+    # walks one storage-grid trajectory). Capacity ratio = fp32 resident
+    # float-state bytes over the quantized engine's resident bytes
+    # (QTensor payload + block scales; the int32 pos vector is excluded
+    # from both sides): the factor more slots one HBM budget holds. fp8 is
+    # a plain 1-byte cast (no scales) = exactly 4x and carries the
+    # acceptance flag; int8 pays f32 block scales on top of the 1-byte
+    # payload (~3.9x at block=256 on large rows, less on reduced shapes).
+    from repro.distributed.precision import PrecisionPolicy
+    from repro.serve.engine import ServeEngine as _Eng
+
+    fp32_bytes = _Eng(model_l, params_l, batch_slots=slots,
+                      max_seq=max_seq,
+                      prefill_chunk=chunk).state_cache_bytes()
+    for mode in ("int8", "fp8"):
+        pol = PrecisionPolicy.from_string(mode)
+        tok_s_q, lat_q, toks, wall, eng_q = _run_engine(
+            model_l, params_l, slots, max_seq, chunk, reqs_spec,
+            precision=pol)
+        q_bytes = eng_q.state_cache_bytes()
+        capacity = fp32_bytes / max(q_bytes, 1)
+        record(f"serve_quantized_cache_{mode}", tok_s_q, lat_q, toks, wall)
+        rows[-1].update({"cache_mode": mode,
+                         "weights_mode": pol.weights,
+                         "kernel_io": pol.kernel_io,
+                         "fp32_state_bytes": int(fp32_bytes),
+                         "quantized_state_bytes": int(q_bytes),
+                         "slot_capacity_ratio": capacity})
+        if mode == "fp8":
+            rows[-1]["meets_4x"] = bool(capacity >= 4.0)
+        print(f"serve_quantized_cache_{mode},0,"
+              f"capacity={capacity:.2f}x;"
+              f"bytes={int(q_bytes)}/{int(fp32_bytes)}", flush=True)
 
     # ---- p99 under load: >=128 queued requests, SLO scheduler ----------
     from repro.serve.engine import Request, ServeEngine

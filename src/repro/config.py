@@ -62,6 +62,20 @@ class SSMConfig:
     # sharded over the time axis when seq_shard applies, replicated
     # otherwise. Decode (T == 1) is unaffected. Disabled under exact_hlo.
     fused: bool = False
+    # serve-time state-cache quantisation (distributed/precision.py): when
+    # set ("int8" | "fp8" | "bf16"), the lrc mixer quantize-roundtrips the
+    # recurrent state EVERY tick inside the step function, so decode,
+    # prefill and the speculative-verify DEER window all walk the SAME
+    # storage-grid trajectory — what keeps spec decode token-identical to
+    # quantized greedy. Normally injected by ServeEngine from its
+    # PrecisionPolicy rather than set by hand. None = full-precision state.
+    state_quant: Optional[str] = None
+    state_quant_block: int = 256  # RTN scale granularity (int8 mode)
+    # lrc_deer solver HBM stream dtype ("bf16" | "fp8"): s_u / eps_u inputs
+    # and the trajectory output move through HBM in this dtype while every
+    # VMEM accumulation stays fp32 (kernels read refs through .astype(f32)).
+    # Threaded through kernels/autotune.py VMEM budgeting. None = fp32.
+    kernel_io: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -221,6 +221,42 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+_PARAM_RE = re.compile(
+    r"%?[\w.\-]+\s*=\s*(\w+)\[([\d,]*)\][^=\n]*?\bparameter\((\d+)\)")
+
+
+def hlo_parameter_tensors(hlo_text: str) -> List[Dict[str, Any]]:
+    """Every ``parameter`` declaration of the ENTRY computation: one
+    record per tensor, ``{dtype, elems, bytes, index}``. Tuple-shaped
+    entry parameters expand to one ``parameter`` line per leaf in the
+    lowered text, so this is a per-LEAF inventory of what the compiled
+    function actually TAKES — its resident at-rest buffers — which is
+    what the quantized-decode contract asserts on: an int8-cache decode
+    step must declare NO cache-sized f32 entry parameter (the narrow
+    wire format, not a dequantized shadow, is what crosses the call
+    boundary), while the fp32-cache control MUST declare one. Fusion /
+    while-body computations also spell their operands as ``parameter``
+    lines — those are transient values, not resident buffers, and are
+    excluded by scoping the scan to the ENTRY region."""
+    m_entry = re.search(r"^ENTRY\b.*\{", hlo_text, re.MULTILINE)
+    if m_entry:
+        m_end = re.search(r"^\}", hlo_text[m_entry.end():], re.MULTILINE)
+        end = (m_entry.end() + m_end.start()) if m_end else len(hlo_text)
+        hlo_text = hlo_text[m_entry.start():end]
+    out: List[Dict[str, Any]] = []
+    for m in _PARAM_RE.finditer(hlo_text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out.append({"dtype": dt, "elems": n,
+                    "bytes": n * _DTYPE_BYTES.get(dt, 1),
+                    "index": int(m.group(3))})
+    return out
+
+
 def collective_ops_from_hlo(hlo_text: str):
     """Per-OP collective inventory from optimized HLO text: one record per
     (component of a) collective result, ``{kind, dtype, elems, bytes,

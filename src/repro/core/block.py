@@ -107,6 +107,13 @@ class LrcSSMConfig:
     # Pallas execution mode: None = auto (compiled on TPU, interpreter on
     # CPU hosts); bool forces it. Threaded to every kernel call site.
     kernel_interpret: Optional[bool] = None
+    # HBM stream dtype for the fused tiers ("bf16" | "fp8" | None = fp32):
+    # s_u/eps_u and the trajectory move through HBM narrow while VMEM
+    # accumulation stays fp32 (distributed/precision.py PrecisionPolicy.
+    # kernel_io is the serve-side source of this knob). Only the fused
+    # Pallas tiers honour it — the lax tiers stream whatever dtype the
+    # activations carry.
+    kernel_io: Optional[str] = None
     # speculative-decoding DRAFT depth: when > 0 (and below the solver's
     # max_iters), ``apply_lrcssm(..., draft=True)`` truncates the Newton /
     # ELK ladder to this many iterations — a cheap early-exit forward
@@ -260,7 +267,7 @@ def _solve_cell_fused_sharded(cfg: LrcSSMConfig, cell_p: Params,
     states = sharded_lrc_deer_solve(
         s_u, eps_u, pp, x0, mesh=mesh, seq_axis=cfg.seq_axis,
         n_iters=cfg.deer.max_iters, dt=cfg.dt,
-        interpret=cfg.kernel_interpret)
+        interpret=cfg.kernel_interpret, io_dtype=cfg.kernel_io)
     states = jnp.swapaxes(states.reshape(T, B, S), 0, 1)
     return states, jnp.asarray(cfg.deer.max_iters, jnp.int32)
 
@@ -274,7 +281,7 @@ def _solve_cell_fused(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
     s_u, eps_u, pp, x0, B, T, S = _fold_cell_inputs(cfg, cell_p, hn)
     states = lrc_deer_solve(
         s_u, eps_u, pp, x0, n_iters=cfg.deer.max_iters, dt=cfg.dt,
-        interpret=cfg.kernel_interpret)
+        interpret=cfg.kernel_interpret, io_dtype=cfg.kernel_io)
     states = jnp.swapaxes(states.reshape(T, B, S), 0, 1)
     return states, jnp.asarray(cfg.deer.max_iters, jnp.int32)
 

@@ -39,20 +39,35 @@ BLOCK = 256
 _SCALE_OVERHEAD = 4.0 / BLOCK
 
 
+def rtn_quantize_blocks(blocks: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """The shared RTN core: symmetric round-to-nearest int8 over the LAST
+    axis, one fp32 scale per block row. ``blocks`` (..., bs) float ->
+    (q int8 same shape, scale (..., 1) f32). The amax element of every
+    block lands exactly on ±127, which makes the grid idempotent:
+    re-encoding a dequantised block reproduces the payload bit-for-bit —
+    the property ``distributed/precision.py`` leans on for stable
+    quantize-on-scatter / dequantize-on-gather cache round trips."""
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12))
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8), scale
+
+
+def rtn_dequantize_blocks(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Invert ``rtn_quantize_blocks``: fp32 ``q * scale``."""
+    return q.astype(jnp.float32) * scale
+
+
 def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-block int8. x: any shape -> (q int8, scales f32)."""
     flat = x.astype(jnp.float32).reshape(-1)
     pad = (-flat.size) % BLOCK
     flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
-    return q, scale
+    return rtn_quantize_blocks(flat.reshape(-1, BLOCK))
 
 
 def _dequantize_int8(q: jax.Array, scale: jax.Array, shape, size
                      ) -> jax.Array:
-    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    flat = rtn_dequantize_blocks(q, scale).reshape(-1)[:size]
     return flat.reshape(shape)
 
 
@@ -122,25 +137,23 @@ def compressed_psum(tree, axis_name: str, error_state=None,
         bs = min(BLOCK, max(1, -(-n // P)))
         flat = jnp.pad(g32.reshape(-1), (0, (-n) % (P * bs)))
         blocks = flat.reshape(P, -1, bs)             # (P, nb, bs)
-        s1 = jnp.max(jnp.abs(blocks), axis=2, keepdims=True) / 127.0
-        q1 = jnp.round(blocks / jnp.maximum(s1, 1e-12)).astype(jnp.int8)
+        q1, s1 = rtn_quantize_blocks(blocks)
         # stage 1 (reduce-scatter): chunk j of every rank -> rank j
         q1_x = compat.all_to_all(q1, axis_name, split_axis=0, concat_axis=0)
         s1_x = compat.all_to_all(s1, axis_name, split_axis=0, concat_axis=0)
-        chunk_sum = jnp.sum(q1_x.astype(jnp.float32) * s1_x, axis=0)
+        chunk_sum = jnp.sum(rtn_dequantize_blocks(q1_x, s1_x), axis=0)
         # stage 2 (all-gather): requantise the summed chunk, share it
-        s2 = jnp.max(jnp.abs(chunk_sum), axis=1, keepdims=True) / 127.0
-        q2 = jnp.round(chunk_sum / jnp.maximum(s2, 1e-12)).astype(jnp.int8)
+        q2, s2 = rtn_quantize_blocks(chunk_sum)
         q2_all = compat.all_gather(q2, axis_name)    # (P, nb, BLOCK) int8
         s2_all = compat.all_gather(s2, axis_name)    # (P, nb, 1) f32
-        total = (q2_all.astype(jnp.float32) * s2_all).reshape(-1)[:n]
+        total = rtn_dequantize_blocks(q2_all, s2_all).reshape(-1)[:n]
         out = (total / P).reshape(g32.shape).astype(g.dtype)
         if not error_feedback:
             return out, jnp.zeros(g32.shape, err.dtype)
         # exact residual: own stage-1 error on all chunks + stage-2 error
         # on the chunk this rank owns
-        err1 = blocks - q1.astype(jnp.float32) * s1
-        err2 = chunk_sum - q2.astype(jnp.float32) * s2
+        err1 = blocks - rtn_dequantize_blocks(q1, s1)
+        err2 = chunk_sum - rtn_dequantize_blocks(q2, s2)
         owner = (jnp.arange(P) == compat.axis_index(axis_name))
         r_blocks = err1 + owner.astype(jnp.float32)[:, None, None] * err2
         new_err = r_blocks.reshape(-1)[:n].reshape(g32.shape)

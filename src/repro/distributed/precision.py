@@ -1,0 +1,386 @@
+"""Serve-time precision policy: quantized weights, state cache and kernel
+HBM streams under ONE policy object.
+
+The solver stack is HBM-stream-bound (see ``kernels/autotune.
+solver_hbm_streams``), so bytes-per-element is the next multiplicative
+lever: ``PrecisionPolicy`` carries per-leaf-group dtype rules for the three
+serve-time tensor populations —
+
+  * **weights**   — the resident parameter tree ``ServeEngine`` decodes
+                    with: int8 (RTN, per-channel block scales — the same
+                    symmetric round-to-nearest format ``distributed/
+                    compression.py`` built for gradients), fp8
+                    (e4m3 direct cast), or bf16 (cast).
+  * **cache**     — ``serve/cache.StateCache`` slot state: quantized ON
+                    SCATTER (admission / tick commit) and dequantized ON
+                    GATHER (decode entry / eviction read), inside the same
+                    jitted donated slot ops; the per-slot ``pos`` vector is
+                    never touched.
+  * **kernel_io** — the lrc_deer Pallas solver's HBM streams (``s_u``,
+                    ``eps_u`` in, trajectory out) in bf16/fp8 while every
+                    in-kernel accumulation stays fp32 VMEM (the kernels
+                    already read refs through ``.astype(f32)``).
+
+Accumulation is NEVER quantized: gates, Jacobians, scans and dequantized
+matmuls run in fp32 (or bf16 when ``accum="bf16"`` relaxes the dequantized
+WEIGHT compute dtype); int8/fp8 exist only at rest and on the wire.
+
+Quantized leaves are ``QTensor`` pytree nodes (payload + optional block
+scales), so quantized trees flow through ``jax.jit`` with donation exactly
+like their fp32 counterparts. The int8 grid is IDEMPOTENT: re-encoding a
+dequantized tensor reproduces the same payload bit-for-bit, which is what
+keeps per-tick cache requantization from drifting and makes the
+quantize-on-scatter/dequantize-on-gather round trip self-consistent (the
+differential harness in tests/test_precision.py asserts both).
+
+``quantize_roundtrip_rows`` is the tick-aligned state quantizer the lrc
+mixer injects into its recurrence step when ``SSMConfig.state_quant`` is
+set (serve engines set it for quantized caches): because one DEER Newton
+iteration fixes at least one more timestep REGARDLESS of the Jacobian, the
+k-token verify window stays EXACT under the quantized step function — the
+property that keeps speculative decode token-identical to quantized greedy
+decode (losslessness vs same-precision). The roundtrip carries an identity
+JVP (straight-through estimator) so Newton keeps the true cell Jacobian.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (BLOCK, rtn_dequantize_blocks,
+                                           rtn_quantize_blocks)
+
+# payload dtypes per mode; fp8 is e4m3 (wide dynamic range, no inf encoding)
+_PAYLOAD = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn, "bf16": jnp.bfloat16}
+# e4m3 saturation bound for the direct-cast modes
+_FP8_MAX = 448.0
+
+WEIGHT_MODES = ("fp32", "bf16", "int8", "fp8")
+CACHE_MODES = ("fp32", "bf16", "int8", "fp8")
+KERNEL_IO_MODES = ("fp32", "bf16", "fp8")
+KERNEL_IO_BYTES = {"fp32": 4, "bf16": 2, "fp8": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-leaf-group serve-time dtype rules (see module docstring).
+
+    ``block`` is the RTN scale granularity (one fp32 scale per ``block``
+    int8 payload elements along each row's flattened trailing dims —
+    ``compression.BLOCK`` by default, the gradient wire format).
+    ``min_weight_elems`` keeps tiny leaves (norm scales, biases) in their
+    master dtype: quantizing them saves nothing and costs accuracy.
+    ``accum`` is the dtype dequantized WEIGHTS land in ("fp32" master copy
+    semantics, "bf16" to halve on-chip width); cache leaves always
+    dequantize back to their original dtype — recurrent-state fidelity is
+    what the differential harness bounds. Kernel VMEM accumulation is fp32
+    unconditionally.
+    """
+    weights: str = "fp32"
+    cache: str = "fp32"
+    kernel_io: str = "fp32"
+    accum: str = "fp32"
+    block: int = BLOCK
+    min_weight_elems: int = 1024
+
+    def __post_init__(self):
+        for field, val, allowed in (("weights", self.weights, WEIGHT_MODES),
+                                    ("cache", self.cache, CACHE_MODES),
+                                    ("kernel_io", self.kernel_io,
+                                     KERNEL_IO_MODES),
+                                    ("accum", self.accum, ("fp32", "bf16"))):
+            if val not in allowed:
+                raise ValueError(f"PrecisionPolicy.{field}={val!r}: "
+                                 f"expected one of {allowed}")
+        if self.block < 1:
+            raise ValueError(f"PrecisionPolicy.block={self.block}: must be "
+                             ">= 1")
+
+    # -- grammar ------------------------------------------------------------
+
+    @classmethod
+    def from_string(cls, spec: str) -> "PrecisionPolicy":
+        """Parse the ``--precision`` grammar: a preset name (``fp32`` |
+        ``bf16`` | ``int8`` | ``fp8``) or comma-separated ``key=value``
+        overrides (``weights=int8,cache=fp8,kernel_io=bf16,block=128``).
+        Presets set all three groups coherently — int8 payloads stream the
+        kernels in bf16 (there is no int8 solver stream format)."""
+        spec = spec.strip()
+        presets = {
+            "fp32": {},
+            "bf16": dict(weights="bf16", cache="bf16", kernel_io="bf16"),
+            "int8": dict(weights="int8", cache="int8", kernel_io="bf16"),
+            "fp8": dict(weights="fp8", cache="fp8", kernel_io="fp8"),
+        }
+        if spec in presets:
+            return cls(**presets[spec])
+        kwargs = {}
+        for part in spec.split(","):
+            if not part.strip():
+                continue
+            if "=" not in part:
+                raise ValueError(
+                    f"precision spec {spec!r}: {part!r} is neither a preset "
+                    f"({'|'.join(presets)}) nor a key=value override")
+            k, v = (s.strip() for s in part.split("=", 1))
+            if k in ("block", "min_weight_elems"):
+                kwargs[k] = int(v)
+            elif k in ("weights", "cache", "kernel_io", "accum"):
+                kwargs[k] = v
+            else:
+                raise ValueError(f"precision spec {spec!r}: unknown key "
+                                 f"{k!r}")
+        return cls(**kwargs)
+
+    # -- rule predicates ----------------------------------------------------
+
+    @property
+    def quantizes_weights(self) -> bool:
+        return self.weights != "fp32"
+
+    @property
+    def quantizes_cache(self) -> bool:
+        return self.cache != "fp32"
+
+    @property
+    def kernel_io_dtype(self) -> Optional[str]:
+        """The lrc_deer HBM stream dtype override (None = native fp32)."""
+        return None if self.kernel_io == "fp32" else self.kernel_io
+
+
+# ---------------------------------------------------------------------------
+# QTensor: a quantized leaf as a first-class pytree node
+# ---------------------------------------------------------------------------
+
+class QTensor:
+    """A quantized array leaf: payload ``q`` (int8 / fp8 / bf16, the
+    original logical shape) plus optional RTN block ``scale`` (int8 mode;
+    shape ``q.shape[:lead] + (n_blocks,)`` — the leading ``lead`` axes are
+    preserved so slot-row scatter/gather slices payload and scales with the
+    same index arithmetic). ``mode``/``odtype``/``lead``/``block`` are
+    static aux data (part of the pytree treedef), so jit caches key on
+    them."""
+
+    __slots__ = ("q", "scale", "mode", "odtype", "lead", "block")
+
+    def __init__(self, q, scale, mode: str, odtype: str, lead: int,
+                 block: int):
+        self.q = q
+        self.scale = scale
+        self.mode = mode
+        self.odtype = odtype
+        self.lead = lead
+        self.block = block
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    @property
+    def nbytes(self) -> int:
+        n = self.q.size * self.q.dtype.itemsize
+        if self.scale is not None:
+            n += self.scale.size * self.scale.dtype.itemsize
+        return n
+
+    def __repr__(self):
+        return (f"QTensor({self.mode}, shape={tuple(self.q.shape)}, "
+                f"odtype={self.odtype}, lead={self.lead})")
+
+
+jax.tree_util.register_pytree_with_keys(
+    QTensor,
+    lambda t: (((jax.tree_util.GetAttrKey("q"), t.q),
+                (jax.tree_util.GetAttrKey("scale"), t.scale)),
+               (t.mode, t.odtype, t.lead, t.block)),
+    lambda aux, children: QTensor(children[0], children[1], *aux),
+)
+
+
+def _row_block_geometry(shape, lead: int, block: int) -> Tuple[int, int, int]:
+    """(row elems n, block size bs, n_blocks nb) for flattening
+    ``shape[lead:]`` into scale blocks (block clamps to the row size)."""
+    n = 1
+    for d in shape[lead:]:
+        n *= int(d)
+    bs = max(1, min(block, n))
+    nb = -(-n // bs)
+    return n, bs, nb
+
+
+def quantize_leaf(x: jax.Array, mode: str, block: int = BLOCK,
+                  lead: int = 0) -> QTensor:
+    """Quantize one array leaf to a ``QTensor``.
+
+    ``int8`` is symmetric RTN with one fp32 scale per ``block`` elements of
+    each row's flattened trailing dims (``lead`` leading axes preserved) —
+    the ``compression.py`` gradient wire format generalized to row-wise
+    scales. ``fp8``/``bf16`` are direct casts (e4m3 saturated at ±448);
+    e4m3's 4 exponent bits cover the O(1) state range without per-block
+    scales, which is what makes the fp8 cache land exactly 4x fp32 bytes.
+    """
+    odtype = jnp.dtype(x.dtype).name
+    if mode in ("bf16", "fp8"):
+        xf = x.astype(jnp.float32)
+        if mode == "fp8":
+            xf = jnp.clip(xf, -_FP8_MAX, _FP8_MAX)
+        return QTensor(xf.astype(_PAYLOAD[mode]), None, mode, odtype,
+                       lead, block)
+    if mode != "int8":
+        raise ValueError(f"quantize_leaf: unknown mode {mode!r}")
+    n, bs, nb = _row_block_geometry(x.shape, lead, block)
+    rows = x.astype(jnp.float32).reshape(x.shape[:lead] + (n,))
+    rows = jnp.pad(rows, [(0, 0)] * lead + [(0, nb * bs - n)])
+    blocks = rows.reshape(x.shape[:lead] + (nb, bs))
+    q, scale = rtn_quantize_blocks(blocks)
+    q = q.reshape(x.shape[:lead] + (nb * bs,))[..., :n].reshape(x.shape)
+    return QTensor(q, scale[..., 0], mode, odtype, lead, block)
+
+
+def dequantize_leaf(t: QTensor) -> jax.Array:
+    """Invert ``quantize_leaf`` onto the original dtype (int8 dequant
+    accumulates ``q * scale`` in fp32)."""
+    od = jnp.dtype(t.odtype)
+    if t.scale is None:
+        return t.q.astype(od)
+    n, bs, nb = _row_block_geometry(t.q.shape, t.lead, t.block)
+    rows = t.q.reshape(t.q.shape[:t.lead] + (n,))
+    rows = jnp.pad(rows, [(0, 0)] * t.lead + [(0, nb * bs - n)])
+    blocks = rows.reshape(t.q.shape[:t.lead] + (nb, bs))
+    out = rtn_dequantize_blocks(blocks, t.scale[..., None])
+    out = out.reshape(t.q.shape[:t.lead] + (nb * bs,))[..., :n]
+    return out.reshape(t.q.shape).astype(od)
+
+
+def is_quantized(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+def requantize_like(template: QTensor, x: jax.Array) -> QTensor:
+    """Re-encode ``x`` with ``template``'s static rule (mode/lead/block).
+    On already-grid-aligned values the int8 encode is exact (idempotent
+    RTN), so per-tick cache recommits never drift."""
+    return quantize_leaf(x.astype(jnp.dtype(template.odtype)),
+                         template.mode, template.block, template.lead)
+
+
+# ---------------------------------------------------------------------------
+# tick-aligned state roundtrip (the lrc mixer's in-step quantizer)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1, 2))
+def quantize_roundtrip_rows(x: jax.Array, mode: str,
+                            block: int = BLOCK) -> jax.Array:
+    """Quantize-dequantize ``x`` per leading-axis row (``lead=1`` — the
+    mixer's (B, ...) state layout, matching the cache's per-slot scale
+    rows), returning values ON the storage grid so the subsequent
+    scatter-encode is exact. Identity JVP (straight-through): DEER's
+    Newton linearization sees the underlying cell Jacobian, keeping its
+    convergence behavior; exactness on <= T-step windows holds regardless
+    (one iteration fixes one more timestep for ANY step function)."""
+    return dequantize_leaf(quantize_leaf(x, mode, block,
+                                         lead=1)).astype(x.dtype)
+
+
+@quantize_roundtrip_rows.defjvp
+def _quantize_roundtrip_rows_jvp(mode, block, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return quantize_roundtrip_rows(x, mode, block), dx
+
+
+# ---------------------------------------------------------------------------
+# tree-level rules
+# ---------------------------------------------------------------------------
+
+def _is_float_leaf(x) -> bool:
+    return (hasattr(x, "dtype")
+            and jnp.issubdtype(jnp.dtype(x.dtype), jnp.floating))
+
+
+def quantize_params(params, policy: PrecisionPolicy):
+    """Apply the WEIGHT rule: float leaves with >= 2 dims and >=
+    ``min_weight_elems`` elements become ``QTensor``s (int8: per-channel
+    block scales along the last axis, ``lead = ndim - 1``); small leaves
+    (norm scales, biases, scalars) keep the master dtype. Identity when
+    the policy keeps weights fp32."""
+    if not policy.quantizes_weights:
+        return params
+
+    def leaf(x):
+        if (not _is_float_leaf(x) or x.ndim < 2
+                or x.size < policy.min_weight_elems):
+            return x
+        return quantize_leaf(x, policy.weights, policy.block,
+                             lead=x.ndim - 1)
+    return jax.tree_util.tree_map(leaf, params)
+
+
+def quantize_cache(cache, policy: PrecisionPolicy, batch_axis_fn):
+    """Apply the CACHE rule to a resident slot cache: every float leaf
+    becomes a ``QTensor`` whose scale rows preserve axes up to AND
+    including the slot axis (``batch_axis_fn(path_str)``), so slot
+    scatter/gather slices payload and scales identically. ``pos`` vectors
+    (and any other integer leaf) are untouched."""
+    if not policy.quantizes_cache:
+        return cache
+    from repro.distributed.sharding import _path_str
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        if ps.endswith("pos") or not _is_float_leaf(x):
+            return x
+        return quantize_leaf(x, policy.cache, policy.block,
+                             lead=batch_axis_fn(ps) + 1)
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def dequantize_tree(tree):
+    """Decode every ``QTensor`` leaf back to its original dtype; plain
+    leaves pass through (identity on unquantized trees)."""
+    return jax.tree_util.tree_map(
+        lambda x: dequantize_leaf(x) if is_quantized(x) else x,
+        tree, is_leaf=is_quantized)
+
+
+def dequantize_weights(params, policy: Optional[PrecisionPolicy]):
+    """Weight-tree decode honoring ``accum``: fp32 master semantics by
+    default, bf16 when the policy relaxes the dequantized compute dtype."""
+    out = dequantize_tree(params)
+    if policy is not None and policy.accum == "bf16":
+        out = jax.tree_util.tree_map(
+            lambda x: (x.astype(jnp.bfloat16)
+                       if _is_float_leaf(x)
+                       and jnp.dtype(x.dtype) == jnp.float32 else x),
+            out)
+    return out
+
+
+def requantize_tree(template, tree):
+    """Re-encode ``tree`` under ``template``'s leaf rules: positions where
+    the template holds a ``QTensor`` are re-quantized with that leaf's
+    static rule, everything else passes through — the requantize-on-exit
+    half of a quantized serve tick."""
+    return jax.tree_util.tree_map(
+        lambda t, x: requantize_like(t, x) if is_quantized(t) else x,
+        template, tree, is_leaf=is_quantized)
+
+
+def tree_state_bytes(tree) -> int:
+    """Resident bytes of the FLOAT state in ``tree`` (QTensor payload +
+    scales; integer bookkeeping like ``pos`` excluded) — the slot-capacity
+    numerator/denominator in docs/serving.md."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_quantized):
+        if is_quantized(leaf):
+            total += leaf.nbytes
+        elif _is_float_leaf(leaf):
+            total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total

@@ -64,18 +64,22 @@ def vmem_budget_bytes() -> int:
         return DEFAULT_VMEM_BUDGET
 
 
-def megakernel_vmem_bytes(chunk: int, d_tile: int, n_iters: int) -> int:
+def megakernel_vmem_bytes(chunk: int, d_tile: int, n_iters: int,
+                          io_bytes: int = 4) -> int:
     """Analytic VMEM residency of the megakernel for one grid step.
 
     Pipeline buffers (double-buffered by Mosaic): s_u + eps_u blocks in,
-    states block out — 3 x 2 x (chunk, d_tile) f32 — plus the single-copy
-    (n_iters, d_tile) residual output block, the packed params and x0
-    rows, and the wavefront scratch: the (2*chunk, d_tile) trajectory
-    parity buffer, the (2*(K+1), d_tile) boundary vector and the
-    (1, d_tile) residual gate.
+    states block out — 3 x 2 x (chunk, d_tile) at ``io_bytes`` per element
+    (4 fp32 streams, 2 bf16, 1 fp8: narrow HBM I/O shrinks exactly the
+    double-buffered blocks) — plus the single-copy (n_iters, d_tile)
+    residual output block, the packed params and x0 rows, and the
+    wavefront scratch: the (2*chunk, d_tile) trajectory parity buffer, the
+    (2*(K+1), d_tile) boundary vector and the (1, d_tile) residual gate.
+    Scratch and params stay f32 regardless of the stream dtype — VMEM
+    accumulation is never quantised.
     """
     f32 = 4
-    tile = chunk * d_tile * f32
+    tile = chunk * d_tile * io_bytes
     pipeline = 6 * tile + n_iters * d_tile * f32 + 2 * (10 + 1) * d_tile * f32
     scratch = (2 * chunk * d_tile + 2 * (n_iters + 1) * d_tile +
                d_tile) * f32
@@ -87,14 +91,17 @@ def _padded(n: int, mult: int) -> int:
 
 
 def viable_tilings(T: int, D: int, n_iters: int,
-                   budget: Optional[int] = None):
+                   budget: Optional[int] = None, io_bytes: int = 4):
     """All (chunk, d_tile) candidates that fit the VMEM budget, with the
-    padding overhead each would impose on this (T, D) problem."""
+    padding overhead each would impose on this (T, D) problem.
+    ``io_bytes`` is the HBM-stream element width — narrower streams admit
+    larger tiles under the same budget."""
     budget = vmem_budget_bytes() if budget is None else budget
     out = []
     for chunk in CHUNK_CANDIDATES:
         for d_tile in D_TILE_CANDIDATES:
-            if megakernel_vmem_bytes(chunk, d_tile, n_iters) > budget:
+            if megakernel_vmem_bytes(chunk, d_tile, n_iters,
+                                     io_bytes) > budget:
                 continue
             waste = (_padded(T, chunk) * _padded(D, d_tile)) / float(T * D)
             out.append((chunk, d_tile, waste))
@@ -102,8 +109,9 @@ def viable_tilings(T: int, D: int, n_iters: int,
 
 
 def _analytic_pick(T: int, D: int, n_iters: int,
-                   budget: Optional[int] = None) -> Tiling:
-    cands = viable_tilings(T, D, n_iters, budget)
+                   budget: Optional[int] = None,
+                   io_bytes: int = 4) -> Tiling:
+    cands = viable_tilings(T, D, n_iters, budget, io_bytes)
     if not cands:
         return Tiling(128, 128, "analytic")
     # fewest grid steps (largest tile) among the low-padding-waste set,
@@ -115,7 +123,8 @@ def _analytic_pick(T: int, D: int, n_iters: int,
 
 
 def _measure_pick(T: int, D: int, n_iters: int,
-                  budget: Optional[int] = None) -> Tiling:
+                  budget: Optional[int] = None,
+                  io_bytes: int = 4) -> Tiling:
     import time
 
     import jax
@@ -123,14 +132,18 @@ def _measure_pick(T: int, D: int, n_iters: int,
 
     from repro.kernels.lrc_deer.kernel import lrc_deer_megakernel_pallas
 
-    cands = viable_tilings(T, D, n_iters, budget)
+    cands = viable_tilings(T, D, n_iters, budget, io_bytes)
     if not cands:
         return Tiling(128, 128, "analytic")
     Tp = max(_padded(T, c) for c, _, _ in cands)
     Dp = max(_padded(D, d) for _, d, _ in cands)
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    su = jax.nn.sigmoid(jax.random.normal(ks[0], (Tp, Dp)))
-    eu = jax.random.normal(ks[1], (Tp, Dp))
+    # synthesise streams in the dtype being tuned for — stream-bound wall
+    # clock depends on the wire width
+    io_dt = {4: jnp.float32, 2: jnp.bfloat16,
+             1: jnp.float8_e4m3fn}.get(io_bytes, jnp.float32)
+    su = jax.nn.sigmoid(jax.random.normal(ks[0], (Tp, Dp))).astype(io_dt)
+    eu = jax.random.normal(ks[1], (Tp, Dp)).astype(io_dt)
     pp = jax.random.normal(ks[2], (10, Dp)) * 0.5
     x0 = jnp.zeros((Dp,))
     best, best_us = None, None
@@ -152,7 +165,7 @@ def _measure_pick(T: int, D: int, n_iters: int,
         if best_us is None or us < best_us:
             best, best_us = (chunk, d_tile), us
     if best is None:
-        return _analytic_pick(T, D, n_iters, budget)
+        return _analytic_pick(T, D, n_iters, budget, io_bytes)
     return Tiling(best[0], best[1], "measured")
 
 
@@ -169,8 +182,12 @@ def cache_path() -> str:
                         "lrc_autotune.json")
 
 
-def _cache_key(backend: str, T: int, D: int, n_iters: int) -> str:
-    return f"{backend}:T{T}:D{D}:K{n_iters}:v{_CACHE_VERSION}"
+def _cache_key(backend: str, T: int, D: int, n_iters: int,
+               io_bytes: int = 4) -> str:
+    # fp32 keeps the historical key shape so existing caches stay valid;
+    # narrow-stream decisions get their own ":b{io_bytes}" namespace
+    suffix = "" if io_bytes == 4 else f":b{io_bytes}"
+    return f"{backend}:T{T}:D{D}:K{n_iters}:v{_CACHE_VERSION}{suffix}"
 
 
 def load_cache(path: Optional[str] = None) -> Dict[str, list]:
@@ -211,17 +228,20 @@ def clear_cache(path: Optional[str] = None) -> None:
 
 def get_tiling(T: int, D: int, n_iters: int, *,
                backend: Optional[str] = None,
-               measure: Optional[bool] = None) -> Tiling:
+               measure: Optional[bool] = None,
+               io_bytes: int = 4) -> Tiling:
     """The (chunk, d_tile) to run shape (T, D, K) with on ``backend``.
 
     Resolution order: in-memory cache -> persistent file cache -> measured
     sweep (TPU, or ``REPRO_AUTOTUNE_MEASURE=1``) -> analytic pick.  The
-    decision is written back to both cache layers.
+    decision is written back to both cache layers.  ``io_bytes`` (HBM
+    stream element width) keys its own cache namespace and feeds the VMEM
+    budget model — narrow streams change which tilings fit.
     """
     if backend is None:
         import jax
         backend = jax.default_backend()
-    key = _cache_key(backend, T, D, n_iters)
+    key = _cache_key(backend, T, D, n_iters, io_bytes)
     if key in _mem_cache:
         c, d = _mem_cache[key]
         return Tiling(c, d, "cache")
@@ -236,7 +256,8 @@ def get_tiling(T: int, D: int, n_iters: int, *,
     if measure is None:
         measure = (backend == "tpu"
                    or os.environ.get("REPRO_AUTOTUNE_MEASURE") == "1")
-    tiling = (_measure_pick if measure else _analytic_pick)(T, D, n_iters)
+    tiling = (_measure_pick if measure else _analytic_pick)(
+        T, D, n_iters, None, io_bytes)
     _mem_cache[key] = (tiling.chunk, tiling.d_tile)
     disk[key] = [tiling.chunk, tiling.d_tile, tiling.source]
     _save_cache(disk)
@@ -267,3 +288,13 @@ def solver_hbm_streams(n_iters: int, kind: str) -> float:
     if kind == "mega":
         return 3.0
     raise ValueError(f"unknown solver kind: {kind!r}")
+
+
+def solver_hbm_bytes(n_iters: int, kind: str, io_bytes: int = 4) -> float:
+    """HBM BYTES per trajectory element one K-iteration solve moves:
+    ``solver_hbm_streams`` x the stream element width.  This is the
+    roofline quantity narrow kernel I/O actually improves — the megakernel
+    at bf16 moves 3 x 2 = 6 bytes/element where the per-iteration fused
+    kernel at fp32 moves 6K x 4, a (4K)x reduction on the stream-bound
+    axis (BENCH_kernels' ``stream_bytes_ratio``)."""
+    return solver_hbm_streams(n_iters, kind) * float(io_bytes)

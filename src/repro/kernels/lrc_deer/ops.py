@@ -85,14 +85,38 @@ def _adapt_chunk(T: int, chunk: int) -> int:
 
 
 def _resolve_tiling(T: int, D: int, n_iters: int,
-                    chunk: Optional[int], d_tile: Optional[int]):
+                    chunk: Optional[int], d_tile: Optional[int],
+                    io_bytes: int = 4):
     """Fill unset chunk/d_tile from the autotune layer, then clamp both to
-    the problem extent (small-T chunk adaptation, small-D 128-lane tile)."""
+    the problem extent (small-T chunk adaptation, small-D 128-lane tile).
+    ``io_bytes`` is the HBM-stream element width (4 fp32, 2 bf16, 1 fp8):
+    narrower streams shrink the pipeline VMEM term, widening the viable
+    tiling set the autotuner picks from."""
     if chunk is None or d_tile is None:
-        t = autotune.get_tiling(T, D, n_iters)
+        t = autotune.get_tiling(T, D, n_iters, io_bytes=io_bytes)
         chunk = chunk if chunk is not None else t.chunk
         d_tile = d_tile if d_tile is not None else t.d_tile
     return _adapt_chunk(T, chunk), (d_tile if D >= d_tile else 128)
+
+
+# HBM-stream dtypes the fused solves accept for their (T, D) streams; VMEM
+# accumulation stays fp32 regardless (the kernels read every ref through
+# .astype(f32)). NOTE compiled-TPU sublane minima are (16, 128) bf16 /
+# (32, 128) fp8 — `_adapt_chunk`'s small-T floor of 8 rows is
+# interpret-mode-only territory there.
+_IO_DTYPES = {"bf16": jnp.bfloat16, "fp8": jnp.float8_e4m3fn}
+_FP8_MAX = 448.0  # e4m3 saturation (no inf encoding)
+
+
+def _io_cast(x: jax.Array, io_dtype: Optional[str]) -> jax.Array:
+    if io_dtype is None:
+        return x
+    if io_dtype not in _IO_DTYPES:
+        raise ValueError(f"io_dtype={io_dtype!r}: expected one of "
+                         f"{tuple(_IO_DTYPES)} or None")
+    if io_dtype == "fp8":
+        x = jnp.clip(x.astype(jnp.float32), -_FP8_MAX, _FP8_MAX)
+    return x.astype(_IO_DTYPES[io_dtype])
 
 
 def _f32_step(dt: float):
@@ -179,7 +203,8 @@ def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
                    d_tile: Optional[int] = None, dt: float = 1.0,
                    interpret: Optional[bool] = None,
                    megakernel: bool = True,
-                   skip_tol: float = 0.0) -> jax.Array:
+                   skip_tol: float = 0.0,
+                   io_dtype: Optional[str] = None) -> jax.Array:
     """DEER fixed-point solve of the LrcSSM recurrence with the fused
     Pallas kernels.  s_u, eps_u: (T, D); returns states (T, D).
 
@@ -190,12 +215,24 @@ def lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
     whole solve; ``False`` issues one fused kernel per iteration (the
     pre-megakernel baseline, kept for the roofline benchmark).
     ``chunk``/``d_tile`` default to the autotuned tiling.
+
+    ``io_dtype`` ("bf16" | "fp8" | None): stream the (T, D) HBM traffic —
+    s_u, eps_u, the trajectory, and their cotangents — in a narrow dtype
+    while every VMEM accumulation (gates, Jacobian cumprods, scans) stays
+    fp32; the solve is stream-bound, so bytes-per-element scales wall
+    clock directly (``autotune.solver_hbm_bytes``).  The casts sit OUTSIDE
+    the custom_vjp, so autodiff routes gradients through them exactly
+    (narrow cotangents on the wire, fp32 beyond the seam).  Returns fp32.
     """
+    if io_dtype is not None:
+        s_u, eps_u, x0 = (_io_cast(a, io_dtype) for a in (s_u, eps_u, x0))
     T, D = s_u.shape
-    c, dtile = _resolve_tiling(T, D, n_iters, chunk, d_tile)
+    io_b = jnp.dtype(s_u.dtype).itemsize
+    c, dtile = _resolve_tiling(T, D, n_iters, chunk, d_tile, io_bytes=io_b)
     su, eu, pp, x0p = _pad_solve_args(s_u, eps_u, packed_params, x0, c, dtile)
     cfg = _SolveCfg(n_iters, c, dtile, dt, interpret, megakernel, skip_tol)
-    return _fused_solve(cfg, su, eu, pp, x0p)[:T, :D]
+    out = _fused_solve(cfg, su, eu, pp, x0p)[:T, :D]
+    return out.astype(jnp.float32) if io_dtype is not None else out
 
 
 def tol_iteration_count(resid: jax.Array, tol: float,
@@ -394,7 +431,8 @@ def sharded_lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
                            chunk: Optional[int] = None,
                            d_tile: Optional[int] = None,
                            dt: float = 1.0,
-                           interpret: Optional[bool] = None) -> jax.Array:
+                           interpret: Optional[bool] = None,
+                           io_dtype: Optional[str] = None) -> jax.Array:
     """DEER fixed-point solve with the fused Pallas iteration running on a
     T/P time shard per device, the trajectory sharded over mesh axis (or
     axes tuple) ``seq_axis`` for the whole solve.
@@ -417,6 +455,11 @@ def sharded_lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
     to the replicated megakernel solve when any ``seq_axis`` name is
     missing from the mesh or T/P is not a positive multiple of the
     (adapted) chunk.
+
+    ``io_dtype`` ("bf16" | "fp8" | None): narrow HBM streams with fp32
+    VMEM accumulation, exactly as on ``lrc_deer_solve`` — and here the
+    cross-shard boundary/summary exchange rides the same narrow dtype.
+    Returns fp32 when set.
     """
     T, D = s_u.shape
     n_shards = n_seq_shards(mesh, seq_axis)
@@ -424,7 +467,10 @@ def sharded_lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
                                 n_iters=n_iters):
         return lrc_deer_solve(s_u, eps_u, packed_params, x0,
                               n_iters=n_iters, chunk=chunk, d_tile=d_tile,
-                              dt=dt, interpret=interpret)
+                              dt=dt, interpret=interpret,
+                              io_dtype=io_dtype)
+    if io_dtype is not None:
+        s_u, eps_u, x0 = (_io_cast(a, io_dtype) for a in (s_u, eps_u, x0))
     T_loc = T // n_shards
     c, dtile = _sharded_tiling(T_loc, D, n_iters, chunk, d_tile)
     su = _pad_axis(s_u, 1, dtile)
@@ -433,7 +479,8 @@ def sharded_lrc_deer_solve(s_u: jax.Array, eps_u: jax.Array,
     x0p = _pad_axis(x0, 0, dtile)
     cfg = _ShardedCfg(mesh, seq_axis, n_shards, n_iters, c, dtile, dt,
                       interpret)
-    return _sharded_fused_solve(cfg, su, eu, pp, x0p)[:, :D]
+    out = _sharded_fused_solve(cfg, su, eu, pp, x0p)[:, :D]
+    return out.astype(jnp.float32) if io_dtype is not None else out
 
 
 # ---------------------------------------------------------------------------

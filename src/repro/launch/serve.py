@@ -57,17 +57,41 @@ def main():
                          "decode is over target (0 = always admit)")
     ap.add_argument("--prefill-budget", type=int, default=1,
                     help="max batched admission launches per tick")
+    ap.add_argument("--precision", default=None,
+                    help="serve PrecisionPolicy spec (docs/precision.md): "
+                         "a preset (fp32|bf16|int8|fp8) or key=value "
+                         "overrides, e.g. weights=int8,cache=fp8,"
+                         "kernel_io=bf16. Quantized policies run "
+                         "single-device (no mesh composition yet).")
     args = ap.parse_args()
 
     name = args.arch.replace("-", "_")
     arch = get_reduced(name) if args.reduced else get_config(name)
     arch = dataclasses.replace(arch, sharding_strategy="serve")
-    model = build_model(arch)
     mesh = parse_mesh_spec(args.mesh)
+
+    precision = None
+    if args.precision:
+        from repro.distributed.precision import PrecisionPolicy
+        precision = PrecisionPolicy.from_string(args.precision)
+        if arch.ssm is not None and arch.ssm.kind == "lrc":
+            # prefill's fused Pallas tiers stream narrow when the policy
+            # asks for it (state_quant is injected by the engine itself)
+            arch = dataclasses.replace(arch, ssm=dataclasses.replace(
+                arch.ssm, kernel_io=precision.kernel_io_dtype))
+        if ((precision.quantizes_weights or precision.quantizes_cache)
+                and mesh.size > 1):
+            ap.error("--precision with int8/fp8/bf16 weights or cache does "
+                     "not compose with a multi-device mesh yet; use "
+                     "--mesh 1x1")
+
+    model = build_model(arch)
     if args.policy:
         policy = shd.ShardingPolicy.from_string(args.policy).with_mesh(mesh)
     else:
         policy = shd.ShardingPolicy(strategy="serve").with_mesh(mesh)
+    quantized = precision is not None and (precision.quantizes_weights
+                                           or precision.quantizes_cache)
 
     stream = None
     if args.stream:
@@ -83,8 +107,10 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         engine = ServeEngine(model, params, batch_slots=args.slots,
                              max_seq=args.max_seq,
-                             prefill_chunk=args.prefill_chunk, mesh=mesh,
-                             policy=policy, spec=spec)
+                             prefill_chunk=args.prefill_chunk,
+                             mesh=None if quantized else mesh,
+                             policy=None if quantized else policy,
+                             spec=spec, precision=precision)
         sched = SLOScheduler(engine, SLOConfig(
             decode_slo_ms=args.slo_ms,
             prefill_budget=args.prefill_budget))
@@ -107,6 +133,12 @@ def main():
           f"requests, {toks} tokens, {toks/max(wall,1e-9):.1f} tok/s, "
           f"{args.slots} slots, chunk={args.prefill_chunk}, "
           f"mesh={dict(mesh.shape)}")
+    if precision is not None:
+        print(f"[serve] precision: weights={precision.weights} "
+              f"cache={precision.cache} kernel_io={precision.kernel_io} "
+              f"accum={precision.accum} block={precision.block} — "
+              f"state cache {engine.state_cache_bytes()/2**20:.2f} MiB "
+              f"resident")
     if stats:
         print(f"[serve] per-token latency: "
               f"p50={stats.get('decode_p50_s', 0)*1e3:.2f}ms "

@@ -481,11 +481,28 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
     s_u = jax.nn.sigmoid(u @ p["a_u"] + p["b_u"]).astype(jnp.float32)
     eps_u = (u @ p["w_u"] + p["v_u"]).astype(jnp.float32)
 
+    # Serve-time state quantisation (SSMConfig.state_quant, injected by
+    # ServeEngine from its PrecisionPolicy): every recurrence tick is
+    # quantize-roundtripped onto the cache storage grid, so decode, chunked
+    # prefill and the speculative verify window all walk ONE trajectory —
+    # spec decode stays token-identical to quantized greedy, and a slot
+    # evicted/re-prefilled mid-stream reproduces the uninterrupted stream.
+    # Only serving paths (state is not None) quantise; training is exact.
+    # The roundtrip carries an identity JVP (straight-through), so DEER's
+    # Newton linearization still sees the true cell Jacobian.
+    _sq = arch.ssm.state_quant if state is not None else None
+    if _sq is not None:
+        from repro.distributed.precision import quantize_roundtrip_rows
+        _q = lambda v: quantize_roundtrip_rows(v, _sq,
+                                               arch.ssm.state_quant_block)
+
     if state is None or prefill:
         cell_keys = ("a_x", "b_x", "g_max_x", "k_max_x", "g_max_u",
                      "k_max_u", "w_x", "v_x", "g_leak", "e_leak")
         cell_p = {k: p[k].astype(jnp.float32) for k in cell_keys}
         step = lambda x, fs, cp: _lrc_mixer_step(cp, x, *fs)
+        if _sq is not None:
+            step = lambda x, fs, cp: _q(_lrc_mixer_step(cp, x, *fs))
         n_iters = arch.ssm.deer_iters
         draft = solver_iters is not None and solver_iters < n_iters
         if draft:
@@ -501,9 +518,11 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
                         scan_chunk=0 if arch.exact_hlo else arch.ssm.chunk,
                         unroll=arch.exact_hlo)
         x0 = None if state is None else state["ssm"]
+        # the quantised step can't fuse into the Pallas tiers (the kernel
+        # recurrence has no roundtrip hook) — route through the lax solver
         states = _lrc_solve_trajectory(arch, step, cell_p, s_u, eps_u,
-                                       d_inner, dc, x0=x0,
-                                       draft=draft)          # (B,T,di)
+                                       d_inner, dc, x0=x0, draft=draft,
+                                       allow_fused=_sq is None)  # (B,T,di)
         if return_traj and state is not None:
             ssm_new = states
         else:
@@ -512,6 +531,8 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
                                       else prefill_len))
     else:
         states = _lrc_mixer_step(p, state["ssm"], s_u[:, 0], eps_u[:, 0])
+        if _sq is not None:
+            states = _q(states)
         ssm_new = states
         states = states[:, None]
 
@@ -525,7 +546,8 @@ def lrc_mixer_apply(p: Params, arch: ArchConfig, h: jax.Array,
 def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
                           d_inner: int, dc: DeerConfig,
                           x0: Optional[jax.Array] = None,
-                          draft: bool = False) -> jax.Array:
+                          draft: bool = False,
+                          allow_fused: bool = True) -> jax.Array:
     """DEER solve of the lrc-mixer trajectory. s_u/eps_u: (B, T, di).
     ``x0``: (B, di) initial state (chunked-prefill carry) or None for zero.
     ``draft`` marks the truncated speculative-draft solve (dc.max_iters
@@ -549,7 +571,7 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
     solve vmapped over the batch.
     """
     B, T = s_u.shape[0], s_u.shape[1]
-    fused = arch.ssm.fused and not arch.exact_hlo
+    fused = arch.ssm.fused and not arch.exact_hlo and allow_fused
     mesh = seq_axes = ba = None
     if arch.ssm.seq_shard:
         from repro.core.deer_sharded import n_seq_shards
@@ -582,7 +604,8 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
         got = _lrc_fused_trajectory(s_u, eps_u, cell_p, xb, dc,
                                     mesh=mesh, seq_axes=seq_axes,
                                     batch_sharded=ba is not None,
-                                    draft=draft)
+                                    draft=draft,
+                                    io_dtype=arch.ssm.kernel_io)
         if got is not None:
             return got
 
@@ -604,7 +627,7 @@ def _lrc_solve_trajectory(arch: ArchConfig, step, cell_p, s_u, eps_u,
 
 def _lrc_fused_trajectory(s_u, eps_u, cell_p, x0, dc: DeerConfig, *,
                           mesh, seq_axes, batch_sharded: bool,
-                          draft: bool = False):
+                          draft: bool = False, io_dtype=None):
     """Fused-kernel route for the lrc mixer: fold the batch into the
     channel axis ((B, T, di) -> (T, B*di); every kernel quantity is
     per-channel elementwise) and run the megakernel (replicated) or the
@@ -626,7 +649,7 @@ def _lrc_fused_trajectory(s_u, eps_u, cell_p, x0, dc: DeerConfig, *,
                                 n_iters=dc.max_iters):
             states = sharded_lrc_deer_solve(
                 suf, euf, pp, x0f, mesh=mesh, seq_axis=seq_axes,
-                n_iters=dc.max_iters)
+                n_iters=dc.max_iters, io_dtype=io_dtype)
             return jnp.swapaxes(states.reshape(T, B, di), 0, 1)
         return None
     if mesh is not None:
@@ -635,7 +658,8 @@ def _lrc_fused_trajectory(s_u, eps_u, cell_p, x0, dc: DeerConfig, *,
         states = lrc_deer_draft_solve(suf, euf, pp, x0f,
                                       draft_iters=dc.max_iters)
     else:
-        states = lrc_deer_solve(suf, euf, pp, x0f, n_iters=dc.max_iters)
+        states = lrc_deer_solve(suf, euf, pp, x0f, n_iters=dc.max_iters,
+                                io_dtype=io_dtype)
     return jnp.swapaxes(states.reshape(T, B, di), 0, 1)
 
 

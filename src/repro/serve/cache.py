@@ -31,6 +31,9 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.precision import (QTensor, dequantize_leaf,
+                                         is_quantized, quantize_cache,
+                                         quantize_leaf)
 from repro.distributed.sharding import _path_str
 from repro.models import Model
 
@@ -41,42 +44,83 @@ def batch_axis_for(path_str: str) -> int:
     return 1 if path_str.startswith("groups") else 0
 
 
+def _q_apply(res: QTensor, fn) -> QTensor:
+    """Apply one slot-indexing op to a quantised resident leaf's payload
+    AND its block scales. The scale rows preserve every axis up to and
+    including the slot axis (``quantize_cache`` builds them with
+    ``lead = slot_axis + 1``), so the SAME index arithmetic addresses
+    both."""
+    return QTensor(fn(res.q), None if res.scale is None else fn(res.scale),
+                   res.mode, res.odtype, res.lead, res.block)
+
+
 def _scatter(resident: Dict, fragment: Dict, slot: jax.Array) -> Dict:
-    """Write a batch=1 fragment into row ``slot`` of the resident cache."""
+    """Write a batch=1 fragment into row ``slot`` of the resident cache.
+    Quantised residents encode the fragment on scatter (QUANTIZE-ON-
+    SCATTER): the float fragment is RTN/cast-encoded with the resident
+    leaf's static rule and only the narrow payload lands in the slot."""
     def leaf(path, res, frag):
         ps = _path_str(path)
         if ps.endswith("pos"):
             return res.at[slot].set(frag.astype(res.dtype))
         ax = batch_axis_for(ps)
-        return jax.lax.dynamic_update_slice_in_dim(
-            res, frag.astype(res.dtype), slot, axis=ax)
-    return jax.tree_util.tree_map_with_path(leaf, resident, fragment)
+        def put(r, f):
+            return jax.lax.dynamic_update_slice_in_dim(
+                r, f.astype(r.dtype), slot, axis=ax)
+        if is_quantized(res):
+            fq = quantize_leaf(frag, res.mode, res.block, res.lead)
+            return QTensor(put(res.q, fq.q),
+                           None if res.scale is None
+                           else put(res.scale, fq.scale),
+                           res.mode, res.odtype, res.lead, res.block)
+        return put(res, frag)
+    return jax.tree_util.tree_map_with_path(leaf, resident, fragment,
+                                            is_leaf=is_quantized)
 
 
 def _scatter_rows(resident: Dict, fragment: Dict, slots: jax.Array) -> Dict:
     """Write a batch=n fragment into rows ``slots`` (a (n,) index vector)
     of the resident cache — the batched-admission scatter: one device op
-    for the whole admission group instead of n single-slot scatters."""
+    for the whole admission group instead of n single-slot scatters.
+    Quantised residents encode the fragment rows on scatter."""
     def leaf(path, res, frag):
         ps = _path_str(path)
         if ps.endswith("pos"):
             return res.at[slots].set(frag.astype(res.dtype))
         ax = batch_axis_for(ps)
-        if ax == 0:
-            return res.at[slots].set(frag.astype(res.dtype))
-        return res.at[:, slots].set(frag.astype(res.dtype))
-    return jax.tree_util.tree_map_with_path(leaf, resident, fragment)
+        if is_quantized(res):
+            frag = quantize_leaf(frag, res.mode, res.block, res.lead)
+        def put(r, f):
+            return (r.at[slots].set(f.astype(r.dtype)) if ax == 0
+                    else r.at[:, slots].set(f.astype(r.dtype)))
+        if is_quantized(res):
+            return QTensor(put(res.q, frag.q),
+                           None if res.scale is None
+                           else put(res.scale, frag.scale),
+                           res.mode, res.odtype, res.lead, res.block)
+        return put(res, frag)
+    return jax.tree_util.tree_map_with_path(leaf, resident, fragment,
+                                            is_leaf=is_quantized)
 
 
 def _gather(resident: Dict, slot: jax.Array) -> Dict:
-    """Read row ``slot`` back out as a batch=1 fragment (scalar pos)."""
+    """Read row ``slot`` back out as a batch=1 fragment (scalar pos).
+    Quantised residents decode on gather (DEQUANTIZE-ON-GATHER): the slot's
+    payload + scales are sliced narrow, then decoded to the original float
+    dtype — the fragment a re-admission would quantise back EXACTLY
+    (idempotent RTN grid), which is what makes eviction round trips
+    self-consistent."""
     def leaf(path, res):
         ps = _path_str(path)
         if ps.endswith("pos"):
             return res[slot]
         ax = batch_axis_for(ps)
-        return jax.lax.dynamic_slice_in_dim(res, slot, 1, axis=ax)
-    return jax.tree_util.tree_map_with_path(leaf, resident)
+        take = lambda r: jax.lax.dynamic_slice_in_dim(r, slot, 1, axis=ax)
+        if is_quantized(res):
+            return dequantize_leaf(_q_apply(res, take))
+        return take(res)
+    return jax.tree_util.tree_map_with_path(leaf, resident,
+                                            is_leaf=is_quantized)
 
 
 class StateCache:
@@ -85,13 +129,24 @@ class StateCache:
     ``n_free``/``alloc``/``free`` are the host admission queue's view;
     ``write_slot``/``read_slot`` move slot rows on device (one jit-compiled
     scatter/gather each, slot index traced so every slot shares a compile).
+
+    ``precision`` (a ``distributed/precision.PrecisionPolicy``) quantises
+    the resident slot state: every float leaf becomes a ``QTensor``
+    (payload + per-slot-row block scales) and the slot ops encode on
+    scatter / decode on gather — fragments crossing the API stay float, so
+    prefill and eviction plumbing never see the wire format. The ``pos``
+    vector is never quantised.
     """
 
-    def __init__(self, model: Model, params, n_slots: int, max_seq: int):
+    def __init__(self, model: Model, params, n_slots: int, max_seq: int,
+                 precision=None):
         self.n_slots = n_slots
         self.max_seq = max_seq
+        self.precision = precision
         cache = model.init_cache(params, n_slots, max_seq)
         cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        if precision is not None and precision.quantizes_cache:
+            cache = quantize_cache(cache, precision, batch_axis_for)
         self.cache: Dict[str, Any] = cache
         self._free: List[int] = list(range(n_slots - 1, -1, -1))
         self._scatter = jax.jit(_scatter, donate_argnums=(0,))

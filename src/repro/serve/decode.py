@@ -12,6 +12,14 @@ resident state cache device-side across ticks.
 The decode step consumes the continuous-batching cache layout from
 ``serve/cache.py`` (per-slot ``pos`` vector — ``models/lm.decode_step``
 dispatches to per-row cache writes on it).
+
+With a ``PrecisionPolicy`` (``distributed/precision.py``), each factory
+wraps the base step in the quantised-serve seam — dequantize weights and
+cache on entry, recommit the new cache under the SAME leaf rules on exit —
+all inside the one jitted tick, so the resident cache stays narrow in HBM
+and the wire format never crosses the host boundary. The policy composes
+with a mesh only when it quantises nothing (sharding rules for QTensor
+trees are future work); the engine enforces that.
 """
 from __future__ import annotations
 
@@ -20,12 +28,29 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.precision import (PrecisionPolicy, dequantize_tree,
+                                         dequantize_weights,
+                                         requantize_tree)
 from repro.models import Model
 from repro.train.step import jit_step, make_step
 
 
+def _active(precision: Optional[PrecisionPolicy]) -> bool:
+    return precision is not None and (precision.quantizes_weights
+                                      or precision.quantizes_cache)
+
+
+def _check_mesh(precision: Optional[PrecisionPolicy], mesh) -> None:
+    if mesh is not None and _active(precision):
+        raise ValueError(
+            "quantized serve (PrecisionPolicy with int8/fp8/bf16 weights or "
+            "cache) does not compose with a multi-device mesh yet — "
+            "sharding specs for QTensor trees are not defined")
+
+
 def make_decode_step(model: Model, params, cache_like, *,
-                     mesh=None, batch_size: int = 0) -> Callable:
+                     mesh=None, batch_size: int = 0,
+                     precision: Optional[PrecisionPolicy] = None) -> Callable:
     """Build the jitted decode tick: ``(params, tokens (B,1), cache) ->
     (next_tok (B,1), logits (B,1,V), new_cache)``.
 
@@ -33,16 +58,32 @@ def make_decode_step(model: Model, params, cache_like, *,
     shardings via ``train/step.train_state_specs``-style rules in
     ``jit_step``). The cache argument is donated in both paths: the engine
     threads one device-resident cache through every tick.
+
+    Under an active ``precision`` policy, params/cache may carry QTensor
+    leaves: the tick dequantizes on entry (weights honouring
+    ``policy.accum``), runs the base step, and requantizes the returned
+    cache with the incoming cache's leaf rules — int8/fp8 at rest, fp32
+    compute, one jit.
     """
+    _check_mesh(precision, mesh)
     if mesh is not None:
         return jit_step(model, "serve", mesh, params_like=params,
                         cache_like=cache_like, batch_size=batch_size)
-    return jax.jit(make_step(model, "serve"), donate_argnums=(2,))
+    base = make_step(model, "serve")
+    if not _active(precision):
+        return jax.jit(base, donate_argnums=(2,))
+
+    def step(qparams, tokens, qcache):
+        p = dequantize_weights(qparams, precision)
+        tok, logits, new_cache = base(p, tokens, dequantize_tree(qcache))
+        return tok, logits, requantize_tree(qcache, new_cache)
+    return jax.jit(step, donate_argnums=(2,))
 
 
 def make_verify_step(model: Model, params, cache_like, *,
                      mesh=None, batch_size: int = 0, spec_k: int = 2,
-                     draft_iters: Optional[int] = None) -> Callable:
+                     draft_iters: Optional[int] = None,
+                     precision: Optional[PrecisionPolicy] = None) -> Callable:
     """Build the jitted speculative VERIFY tick: ``(params, window (B,k),
     cache) -> (y (B,k), acc (B,), new_cache)``.
 
@@ -53,16 +94,31 @@ def make_verify_step(model: Model, params, cache_like, *,
     bit-exact. Cache donated, same as the decode tick. ``draft_iters``
     fuses the early-exit draft forward into the same dispatch (the
     "solve" draft strategy without a second host round-trip).
+
+    The quantised-serve seam wraps this tick exactly like the decode
+    tick. Losslessness is preserved PER PRECISION: the verify window's
+    DEER solve walks the same tick-quantised trajectory the greedy step
+    walks (``SSMConfig.state_quant``), so spec output is token-identical
+    to quantized greedy output.
     """
+    _check_mesh(precision, mesh)
     if mesh is not None:
         return jit_step(model, "verify", mesh, params_like=params,
                         cache_like=cache_like, batch_size=batch_size,
                         spec_k=spec_k, spec_draft_iters=draft_iters)
-    return jax.jit(make_step(model, "verify", draft_iters=draft_iters),
-                   donate_argnums=(2,))
+    base = make_step(model, "verify", draft_iters=draft_iters)
+    if not _active(precision):
+        return jax.jit(base, donate_argnums=(2,))
+
+    def step(qparams, window, qcache):
+        p = dequantize_weights(qparams, precision)
+        y, acc, new_cache = base(p, window, dequantize_tree(qcache))
+        return y, acc, requantize_tree(qcache, new_cache)
+    return jax.jit(step, donate_argnums=(2,))
 
 
-def make_draft_step(model: Model, draft_iters: int) -> Callable:
+def make_draft_step(model: Model, draft_iters: int,
+                    precision: Optional[PrecisionPolicy] = None) -> Callable:
     """Build the jitted DRAFT tick: ``(params, window (B,k), cache) ->
     refined window (B,k)``.
 
@@ -71,7 +127,8 @@ def make_draft_step(model: Model, draft_iters: int) -> Callable:
     forward) whose greedy argmax refines the draft positions: position 0
     (the last verified token) is kept, drafts 1..k-1 become the model's
     own cheap continuation. The cache is NOT donated and NOT updated —
-    drafting must never perturb verified state.
+    drafting must never perturb verified state. Quantised params/cache are
+    dequantized on entry (identity on plain trees); nothing is recommitted.
     """
     if model.spec_forward is None:
         raise ValueError(
@@ -80,7 +137,8 @@ def make_draft_step(model: Model, draft_iters: int) -> Callable:
 
     @jax.jit
     def draft(params, window, cache):
-        logits, _ = model.spec_forward(params, window, cache,
+        p = dequantize_weights(params, precision)
+        logits, _ = model.spec_forward(p, window, dequantize_tree(cache),
                                        solver_iters=draft_iters)
         y = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jnp.concatenate([window[:, :1], y[:, :-1]], axis=1)

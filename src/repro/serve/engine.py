@@ -49,8 +49,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.precision import (PrecisionPolicy, dequantize_weights,
+                                         is_quantized, quantize_params,
+                                         tree_state_bytes)
 from repro.distributed.sharding import _path_str
-from repro.models import Model
+from repro.models import Model, build_model
 from repro.serve.cache import StateCache, batch_axis_for
 from repro.serve.decode import make_decode_step, make_verify_step
 
@@ -93,31 +96,71 @@ class ServeEngine:
     ``batch_slots`` bounds concurrent decode streams; ``prefill_chunk`` is
     the admission chunk length (prompts are right-padded to a multiple, so
     every chunk shares one compiled prefill); ``mesh`` routes the decode
-    tick through ``train/step.jit_step``'s sharded serve wiring."""
+    tick through ``train/step.jit_step``'s sharded serve wiring.
+
+    ``precision`` (a ``distributed/precision.PrecisionPolicy`` or its
+    ``from_string`` spec, e.g. "int8" / "fp8" / "weights=int8,cache=fp8")
+    turns on quantized serving: the resident params and slot cache are
+    encoded once at construction and every tick decodes/recommits inside
+    its jit (``serve/decode.py``). For lrc mixers the policy is also
+    INJECTED into the arch (``SSMConfig.state_quant``), so every
+    recurrence tick is quantize-roundtripped onto the storage grid —
+    that alignment is what keeps speculative decode token-identical to
+    quantized greedy and eviction round trips self-consistent. Quantized
+    policies do not compose with a mesh yet."""
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_seq: int = 256, prefill_chunk: int = 32, mesh=None,
-                 policy=None, spec: Optional[SpecConfig] = None):
+                 policy=None, spec: Optional[SpecConfig] = None,
+                 precision=None):
         if policy is not None and mesh is None:
             mesh = policy.build_mesh()
         self.policy = policy
+        if isinstance(precision, str):
+            precision = PrecisionPolicy.from_string(precision)
+        self.precision = precision
         if model.prefill is None:
             raise ValueError(f"model family {model.arch.family!r} has no "
                              "chunked-prefill implementation — the serve "
                              "engine requires Model.prefill")
+        quant_cache = precision is not None and precision.quantizes_cache
+        ssm = getattr(model.arch, "ssm", None)
+        if quant_cache and ssm is not None and ssm.kind == "lrc":
+            # rebuild the facade with the cache rule injected into the
+            # mixer: grid-aligned ticks everywhere (decode, prefill, the
+            # spec verify window) — the losslessness precondition
+            arch = dataclasses.replace(
+                model.arch, ssm=dataclasses.replace(
+                    ssm, state_quant=precision.cache,
+                    state_quant_block=precision.block))
+            model = build_model(arch)
+        if quant_cache and spec is not None and not (
+                ssm is not None and ssm.kind == "lrc"
+                and model.arch.family == "ssm"):
+            raise ValueError(
+                "speculative decoding on a quantized cache is only "
+                "lossless for pure-lrc stacks (the tick-aligned state "
+                "roundtrip); attention KV rings read full-precision "
+                "in-window keys on the verify path, so spec + quantized "
+                f"cache is rejected for family={model.arch.family!r}/"
+                f"ssm={getattr(ssm, 'kind', None)!r}")
         self.model = model
-        self.params = params
+        self.params = (params if precision is None
+                       else quantize_params(params, precision))
         self.slots = batch_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.finished: deque = deque(maxlen=65536)
-        self.cache = StateCache(model, params, batch_slots, max_seq)
-        self._decode = make_decode_step(model, params, self.cache.cache,
-                                        mesh=mesh, batch_size=batch_slots)
+        self.cache = StateCache(model, params, batch_slots, max_seq,
+                                precision=precision)
+        self._decode = make_decode_step(model, self.params, self.cache.cache,
+                                        mesh=mesh, batch_size=batch_slots,
+                                        precision=precision)
         self._prefill = jax.jit(
-            lambda p, t, c, l: model.prefill(p, t, c, l))
+            lambda p, t, c, l: model.prefill(
+                dequantize_weights(p, precision), t, c, l))
         self._last_tok = np.zeros((batch_slots, 1), np.int32)
         self.spec = spec
         self._verify = None
@@ -135,10 +178,11 @@ class ServeEngine:
                 raise ValueError(f"unknown draft strategy: {spec.draft!r}")
             # "solve" drafting is FUSED into the verify dispatch — one
             # device call per tick either way
-            self._verify = make_verify_step(model, params, self.cache.cache,
-                                            mesh=mesh,
+            self._verify = make_verify_step(model, self.params,
+                                            self.cache.cache, mesh=mesh,
                                             batch_size=batch_slots,
-                                            spec_k=spec.k, draft_iters=di)
+                                            spec_k=spec.k, draft_iters=di,
+                                            precision=precision)
             self._draft_tok = np.zeros((batch_slots, spec.k - 1), np.int32)
         # per-token wall-clock samples: "prefill" covers each request's
         # first token (admission cost), "decode" one batched tick. Bounded
@@ -162,9 +206,12 @@ class ServeEngine:
         def scan_leaf(path, leaf):
             ps = _path_str(path)
             if ps.rsplit("/", 1)[-1] in ("k", "v"):
-                rings.append(leaf.shape[batch_axis_for(ps) + 1])
+                # quantized rings keep the logical shape on the payload
+                arr = leaf.q if is_quantized(leaf) else leaf
+                rings.append(arr.shape[batch_axis_for(ps) + 1])
             return leaf
-        jax.tree_util.tree_map_with_path(scan_leaf, self.cache.cache)
+        jax.tree_util.tree_map_with_path(scan_leaf, self.cache.cache,
+                                         is_leaf=is_quantized)
         if rings and spec.k >= min(rings):
             raise ValueError(
                 f"spec.k={spec.k} does not fit the smallest attention "
@@ -415,6 +462,14 @@ class ServeEngine:
         return self.finished
 
     # -- stats --------------------------------------------------------------
+
+    def state_cache_bytes(self) -> int:
+        """Resident FLOAT-state bytes of the slot cache (QTensor payload +
+        scales; the integer ``pos`` vector excluded) — the numerator of the
+        slot-capacity math in docs/serving.md: capacity ratio = fp32 bytes
+        / quantized bytes at equal slot count, or equivalently extra slots
+        at equal HBM."""
+        return tree_state_bytes(self.cache.cache)
 
     def latency_percentiles(self) -> Dict[str, float]:
         """p50/p99 per-token wall-clock latency over decode ticks (and p50

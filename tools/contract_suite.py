@@ -20,6 +20,10 @@ Contracts checked (see docs/static_analysis.md):
     HLO shows reduce-scatter'd gradients and no full-parameter fp32
     all-gather inside a while-loop body — with a deliberately-naive
     gather-per-microbatch seam as the must-violate positive control;
+  * quantized decode: the int8-cache decode tick declares NO cache-sized
+    fp32 parameter in its compiled HLO (the narrow wire format is what
+    crosses the call boundary) — with the fp32-cache tick as the positive
+    control that MUST declare one;
   * compat routing: the AST rule engine (tools/repro_lint) reports zero
     violations across all rules.
 
@@ -335,6 +339,80 @@ def tp_fsdp_contract():
                     "naive_control_violations": len(naive_violations)})]
 
 
+def quantized_decode_contract():
+    """The int8-cache decode tick compiles with NO cache-sized fp32
+    parameter: the resident wire format (int8 payload + per-row block
+    scales) is what crosses the compiled call boundary, and the fp32
+    shadow exists only as transient values inside the tick (dequantize on
+    entry, requantize before the donated cache is returned). The fp32
+    decode tick is the positive control that MUST declare a cache-sized
+    fp32 parameter — proving the parameter scanner sees cache-sized
+    tensors when they are there.
+
+    "Cache-sized" is computed, not guessed: the largest float leaf of the
+    fp32 resident cache. Weight quantization uses ``min_weight_elems=1``
+    so every >=2-D float weight also goes narrow and cannot alias the
+    threshold."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import SSMConfig
+    from repro.configs import get_reduced
+    from repro.contracts import (LoweringReport, Violation,
+                                 hlo_parameter_tensors)
+    from repro.distributed.precision import (PrecisionPolicy,
+                                             quantize_params)
+    from repro.models import build_model
+    from repro.serve.cache import StateCache
+    from repro.serve.decode import make_decode_step
+
+    slots, max_seq = 8, 64
+    arch = dataclasses.replace(
+        get_reduced("falcon_mamba_7b"), dtype=jnp.float32,
+        ssm=SSMConfig(kind="lrc", expand=2, deer_iters=4, chunk=0))
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((slots, 1), jnp.int32)
+
+    def params_of(precision):
+        p = (quantize_params(params, precision)
+             if precision is not None else params)
+        cache = StateCache(model, params, slots, max_seq,
+                           precision=precision)
+        step = make_decode_step(model, p, cache.cache, precision=precision)
+        txt = step.lower(p, toks, cache.cache).compile().as_text()
+        return hlo_parameter_tensors(txt)
+
+    fp32_cache = StateCache(model, params, slots, max_seq).cache
+    thresh = max(l.size for l in jax.tree_util.tree_leaves(fp32_cache)
+                 if hasattr(l, "dtype")
+                 and jnp.issubdtype(l.dtype, jnp.floating))
+
+    int8 = PrecisionPolicy(weights="int8", cache="int8", kernel_io="bf16",
+                           min_weight_elems=1)
+    offenders = [r for r in params_of(int8)
+                 if r["dtype"] == "f32" and r["elems"] >= thresh]
+    control = [r for r in params_of(None)
+               if r["dtype"] == "f32" and r["elems"] >= thresh]
+
+    violations = [Violation(
+        "quantized-cache-parameter",
+        f"int8-cache decode declares a cache-sized fp32 parameter: "
+        f"{r['elems']} elems", r) for r in offenders]
+    if not control:
+        violations.append(Violation(
+            "positive-control",
+            f"fp32 decode declared NO fp32 parameter >= {thresh} elems — "
+            "the parameter scanner is blind on this jax version"))
+    report = LoweringReport(violations=violations)
+    return [_entry("serve-quantized-decode-narrow-wire", report,
+                   {"threshold_elems": thresh,
+                    "int8_fp32_params_over_threshold": len(offenders),
+                    "control_fp32_params_over_threshold": len(control)})]
+
+
 def compat_routing_contract():
     """The AST rule engine reports zero violations across all rules (the
     source-level half of the contract surface)."""
@@ -395,8 +473,9 @@ def main(argv=None) -> int:
     import jax
 
     groups = (solver_tier_contracts, serve_prefill_contract,
-              serve_verify_contract, explicit_grad_contract,
-              tp_fsdp_contract, compat_routing_contract)
+              serve_verify_contract, quantized_decode_contract,
+              explicit_grad_contract, tp_fsdp_contract,
+              compat_routing_contract)
     rows = []
     for group in groups:
         for row in group():
