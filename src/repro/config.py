@@ -198,6 +198,18 @@ class TrainConfig:
     # ablation knob: disable error feedback (per-step round-to-nearest).
     # Exists so tests/benchmarks can show WHY the residual matters.
     error_feedback: bool = True
+    # training guardrails (train/guard.py): fold a device-side
+    # all-finite(loss, grads) predicate into the step and SKIP bad steps
+    # on device (params/opt-state where-selected back; step still
+    # advances so the LR schedule / data cursor stay aligned). The flag
+    # rides metrics["all_finite"] next to the device-side loss — no
+    # per-step host sync; the trainer reads it at log/ckpt cadence.
+    guard_nonfinite: bool = False
+    # after this many CONSECUTIVE bad steps, roll back to the newest
+    # VERIFIED checkpoint (manifest checksums) and replay. 0 = skip-only,
+    # never roll back. Detection latency is bounded by the trainer's
+    # log_every (the flag is read at sync points only).
+    guard_rollback_after: int = 0
     zero_opt_state: bool = True      # shard opt state over data axis (ZeRO-1)
     # constrain grads to the param sharding immediately after value_and_grad
     # so GSPMD lowers the DP reduction as reduce-scatter (half the wire of

@@ -51,19 +51,39 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import nn
 from repro.core import variants
-from repro.core.deer import DeerConfig, deer_solve
+from repro.core.deer import DeerConfig, deer_residual, deer_solve
 from repro.core.elk import ElkConfig, elk_solve
 from repro.core.lrc import (LrcCellConfig, init_lrc_params, input_features,
                             lrc_step, lrc_sequential)
 
 Params = Dict[str, Any]
+
+
+class SolveReport(NamedTuple):
+    """Per-block solver health, computed ON DEVICE alongside the forward
+    pass (``apply_lrcssm(..., return_report=True)``).
+
+    ``iters``: (n_blocks,) Newton/ELK trip counts (= max_iters in fixed
+    mode). ``residual``: (n_blocks,) max-norm fixed-point defect
+    max_t |x_t - F(x_{t-1})| recomputed from the returned trajectory — 0
+    where the check does not apply (sequential solver, lstm readout,
+    complex states). ``diverged``: (n_blocks,) bool — True when a
+    TOL-MODE solve exhausted its iteration cap with the residual still
+    above tol, i.e. the ladder handed back a max-K trajectory that never
+    converged. Callers route a True here up as a degradation event
+    (tools/chaos_suite.py "solver_divergence") instead of silently using
+    the output; in fixed mode the flag is constant False (fixed-K output
+    is the documented contract there)."""
+    iters: jax.Array
+    residual: jax.Array
+    diverged: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -359,6 +379,36 @@ def _solve_block(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array
     return states, jnp.max(iters)
 
 
+def _residual_applies(cfg: LrcSSMConfig) -> bool:
+    """Static (trace-time) gate for the residual diagnostic: the returned
+    trajectory must BE the raw fixed-point iterate — sequential solves
+    have no defect by construction, the lstm readout transforms states,
+    and complex-state solves return ``.real`` projections."""
+    return (cfg.solver in ("deer", "elk") and cfg.cell != "lstm"
+            and not cfg.complex_state_params)
+
+
+def _block_residual(cfg: LrcSSMConfig, cell_p: Params, hn: jax.Array,
+                    states: jax.Array) -> jax.Array:
+    """Max-norm fixed-point defect of one block's solve, over the batch:
+    rebuilds the cell's step/features exactly as ``_solve_cell`` does and
+    evaluates ``deer_residual`` per sequence. One extra step-function
+    evaluation per block — only paid when a report is requested."""
+    ccfg = _cell_cfg(cfg)
+    if cfg.cell == "lrc":
+        feat_fn = functools.partial(input_features, cell_p)
+        step = lambda x, fs, cp: lrc_step(cp, ccfg, x, *fs)
+    else:
+        _, ffn, step_fn = variants.CELLS[cfg.cell]
+        feat_fn = functools.partial(ffn, cell_p)
+        step = lambda x, fs, cp: step_fn(cp, ccfg, x, *fs)
+
+    def one(seq, st):
+        x0 = jnp.zeros((cfg.d_state,), st.dtype)
+        return deer_residual(step, feat_fn(seq), x0, st, params=cell_p)
+    return jnp.max(jax.vmap(one)(hn, states))
+
+
 def draft_config(cfg: LrcSSMConfig) -> LrcSSMConfig:
     """The early-exit DRAFT variant of ``cfg``: Newton/ELK ladders
     truncated to ``cfg.draft_iters`` (fixed mode — no tol early-outs to
@@ -378,9 +428,17 @@ def draft_config(cfg: LrcSSMConfig) -> LrcSSMConfig:
 
 
 def apply_lrcssm(cfg: LrcSSMConfig, p: Params, x: jax.Array,
-                 return_iters: bool = False, draft: bool = False):
+                 return_iters: bool = False, draft: bool = False,
+                 return_report: bool = False):
     """Forward pass. x: (B, T, p) -> logits (B, n_classes).
-    ``draft=True`` runs the ``draft_config`` truncated-solver variant."""
+    ``draft=True`` runs the ``draft_config`` truncated-solver variant.
+    ``return_report=True`` returns (logits, :class:`SolveReport`) — the
+    per-block iteration counts, fixed-point residuals, and tol-mode
+    divergence flags, all device-side (no sync added to the forward).
+    The flags are STATIC in shape: when the diagnostic does not apply
+    (see ``_residual_applies``) the residual/diverged entries are
+    constant zeros, so requesting a report never changes compile
+    geometry across configs."""
     if draft:
         cfg = draft_config(cfg)
     B, T, _ = x.shape
@@ -392,11 +450,20 @@ def apply_lrcssm(cfg: LrcSSMConfig, p: Params, x: jax.Array,
     h = nn.dense(p["encoder"], x)
     h = nn.layernorm(p["pre_norm"], h)
 
+    check = return_report and _residual_applies(cfg)
+    tol_mode = ((cfg.elk.mode if cfg.solver == "elk" else cfg.deer.mode)
+                == "tol")
+    tol = cfg.elk.tol if cfg.solver == "elk" else cfg.deer.tol
     iters_acc = []
+    res_acc = []
     for blk in p["blocks"]:
         hn = nn.layernorm(blk["norm"], h)
         states, iters = _solve_block(cfg, blk["cell"], hn)
         iters_acc.append(iters)
+        if check:
+            res_acc.append(_block_residual(cfg, blk["cell"], hn, states))
+        elif return_report:
+            res_acc.append(jnp.asarray(0.0, h.dtype))
         h = h + nn.mlp(blk["mlp"], states)
 
     h = nn.layernorm(p["post_norm"], h)
@@ -405,6 +472,11 @@ def apply_lrcssm(cfg: LrcSSMConfig, p: Params, x: jax.Array,
     else:
         pooled = h[:, -1]
     logits = nn.dense(p["decoder"], pooled)
+    if return_report:
+        residual = jnp.stack(res_acc)
+        diverged = (residual > tol if (check and tol_mode)
+                    else jnp.zeros((cfg.n_blocks,), bool))
+        return logits, SolveReport(jnp.stack(iters_acc), residual, diverged)
     if return_iters:
         return logits, jnp.stack(iters_acc)
     return logits

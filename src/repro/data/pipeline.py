@@ -16,6 +16,12 @@ Determinism contract: batch i of epoch e is a pure function of
 identical data. Sharding: each source yields GLOBAL batches; the trainer
 places them against the mesh (host-local slicing is a thin wrapper,
 ``shard_for_mesh``).
+
+Fault injection rides the same contract: ``reliability.FaultySource``
+wraps any ``batch_at`` source and poisons scheduled steps with values
+that are themselves a pure function of (fault seed, step) — so a chaos
+run replays bit-identically, and the preempt-resume bit-exactness
+scenarios hold with injection active (tools/chaos_suite.py).
 """
 from __future__ import annotations
 

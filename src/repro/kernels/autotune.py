@@ -212,8 +212,8 @@ def _save_cache(data: Dict[str, list], path: Optional[str] = None) -> None:
         with os.fdopen(fd, "w") as f:
             json.dump(data, f, indent=2, sort_keys=True)
         os.replace(tmp, path)
-    except Exception:
-        pass
+    except Exception:  # repro-lint: disable=bare-except
+        pass           # sanctioned: best-effort persistent layer only
 
 
 def clear_cache(path: Optional[str] = None) -> None:
@@ -251,8 +251,8 @@ def get_tiling(T: int, D: int, n_iters: int, *,
             c, d = int(disk[key][0]), int(disk[key][1])
             _mem_cache[key] = (c, d)
             return Tiling(c, d, "cache")
-        except Exception:
-            pass
+        except Exception:  # repro-lint: disable=bare-except
+            pass           # sanctioned: corrupt cache entry -> re-measure
     if measure is None:
         measure = (backend == "tpu"
                    or os.environ.get("REPRO_AUTOTUNE_MEASURE") == "1")

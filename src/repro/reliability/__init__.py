@@ -1,0 +1,30 @@
+"""Failure-domain machinery: deterministic fault injection, degradation
+events, and the helpers the guardrails in train/, serve/ and checkpoint/
+hang off.
+
+Three layers (docs/reliability.md is the narrative):
+
+  * ``faults``  — :class:`FaultPlan`, a seeded declarative schedule of
+    faults injected through the EXISTING seams (the data pipeline's
+    ``batch_at`` purity, the trainer's ``preempt`` hook, checkpoint files
+    on disk, serve slot state between ticks) — never inside jitted hot
+    paths, so a plan-carrying run compiles byte-identically to a clean
+    one.
+  * ``events``  — :class:`DegradationEvent` / :class:`EventLog`, the
+    structured "declared degraded state" record every guardrail emits
+    instead of failing silently.
+  * the guardrails themselves live with their subsystems
+    (``train/guard.py``, ``checkpoint/manager.py`` checksums,
+    ``serve/engine.py`` watchdog/deadlines/backpressure) — this package
+    only injects and records.
+
+``tools/chaos_suite.py`` drives named end-to-end scenarios over all of it.
+"""
+from repro.reliability.events import DegradationEvent, EventLog
+from repro.reliability.faults import (FaultPlan, FaultSpec, FaultySource,
+                                      corrupt_checkpoint, corrupt_slot)
+
+__all__ = [
+    "DegradationEvent", "EventLog", "FaultPlan", "FaultSpec",
+    "FaultySource", "corrupt_checkpoint", "corrupt_slot",
+]

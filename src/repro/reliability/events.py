@@ -1,0 +1,67 @@
+"""Degradation events: the structured record of "something failed and the
+system declared it" — the alternative to silent max-iteration output,
+swallowed exceptions, or a wedged queue.
+
+Guardrails (serve watchdog, spec auto-disable, solver divergence
+detection, trainer rollback) append :class:`DegradationEvent` rows to an
+:class:`EventLog`; the chaos suite's acceptance criterion is that every
+injected fault ends either fully recovered or with a matching event in
+the log — never neither.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationEvent:
+    """One declared degradation: ``kind`` is the taxonomy key
+    (docs/reliability.md), ``where`` the subsystem coordinate (slot id,
+    train step, block index...), ``detail`` free-form context. ``t`` is
+    the host wall-clock stamp."""
+    kind: str
+    where: Any = None
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    t: float = dataclasses.field(default_factory=time.time)
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-serialisable row for chaos/bench reports."""
+        return {"kind": self.kind, "where": self.where,
+                "detail": {k: v for k, v in self.detail.items()},
+                "t": self.t}
+
+
+class EventLog:
+    """Append-only event record with per-kind counters.
+
+    Host-side bookkeeping only — emitting an event never touches device
+    state, so guardrails can log from anywhere outside jit."""
+
+    def __init__(self, log_fn=None):
+        self.events: List[DegradationEvent] = []
+        self.counts: Dict[str, int] = {}
+        self._log_fn = log_fn
+
+    def emit(self, kind: str, where: Any = None,
+             **detail: Any) -> DegradationEvent:
+        """Record one event; returns it (callers may enrich/raise)."""
+        ev = DegradationEvent(kind=kind, where=where, detail=detail)
+        self.events.append(ev)
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        if self._log_fn is not None:
+            self._log_fn(f"[degraded] {kind} @ {where}: {detail}")
+        return ev
+
+    def count(self, kind: str) -> int:
+        """Number of events of ``kind`` emitted so far."""
+        return self.counts.get(kind, 0)
+
+    def of_kind(self, kind: str) -> List[DegradationEvent]:
+        """All events of ``kind``, in emission order."""
+        return [e for e in self.events if e.kind == kind]
+
+    def to_json(self) -> List[Dict[str, Any]]:
+        """The whole log as JSON rows (chaos-suite report format)."""
+        return [e.to_json() for e in self.events]

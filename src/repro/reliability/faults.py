@@ -1,0 +1,206 @@
+"""Deterministic fault injection: a seeded, declarative schedule of
+faults driven through the stack's EXISTING seams.
+
+Injection points (none of them inside a jitted hot path — a fault-plan
+run compiles byte-identically to a clean run):
+
+  * input batches   — :class:`FaultySource` wraps any ``batch_at``-style
+    source (``data/pipeline.py``) and plants NaN/inf into the scheduled
+    steps' batches. Because the wrapper is itself a pure function of
+    (seed, step), the determinism contract survives: a resumed job
+    replays the SAME faults.
+  * preemption      — the trainer polls ``plan.fires("preempt", step)``
+    and routes through its existing ``Trainer.preempt`` SIGTERM seam.
+  * checkpoints     — :func:`corrupt_checkpoint` truncates or bit-flips a
+    published step's array payload on disk (what a torn write or bad DMA
+    leaves behind).
+  * serve slots     — :func:`corrupt_slot` overwrites one slot's resident
+    state rows with NaN (or scrambles its ``pos``) between engine ticks,
+    host-driven device ops outside jit.
+  * admission       — the serve engine polls ``fires("serve_stall", tick)``
+    and skips admission for the scheduled ticks (a wedged upstream queue).
+
+``tools/chaos_suite.py`` composes these into named end-to-end scenarios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    ``kind`` is the taxonomy key ("nan_batch" | "inf_batch" | "preempt" |
+    "serve_stall" | ...); ``step`` the step/tick it fires at; ``until``
+    (inclusive) extends it over a range — a stall is naturally a window,
+    a preemption a point. ``frac`` scales how much of the target the
+    fault touches (fraction of batch entries NaN'd)."""
+    kind: str
+    step: int
+    until: Optional[int] = None
+    frac: float = 0.05
+
+    def covers(self, step: int) -> bool:
+        """Whether this spec is live at ``step``."""
+        hi = self.until if self.until is not None else self.step
+        return self.step <= step <= hi
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, declarative fault schedule.
+
+    The plan is pure data: WHERE faults land is the spec list, WHAT random
+    choices a fault makes (which batch entries to NaN, which byte to
+    flip) derive from ``rng(kind, step)`` — a fresh generator keyed on
+    (seed, kind, step), so two runs of the same plan inject identically
+    and a resumed run replays the tail of the schedule exactly."""
+    seed: int = 0
+    faults: Tuple[FaultSpec, ...] = ()
+
+    def fires(self, kind: str, step: int) -> bool:
+        """Whether any fault of ``kind`` is live at ``step``."""
+        return any(f.kind == kind and f.covers(step) for f in self.faults)
+
+    def spec(self, kind: str, step: int) -> Optional[FaultSpec]:
+        """The first live spec of ``kind`` at ``step`` (None = clean)."""
+        for f in self.faults:
+            if f.kind == kind and f.covers(step):
+                return f
+        return None
+
+    def rng(self, kind: str, step: int) -> np.random.Generator:
+        """Deterministic per-(kind, step) generator for fault internals.
+        Keyed on a stable (process-independent) digest of ``kind``."""
+        import zlib
+        return np.random.default_rng(
+            (self.seed, zlib.crc32(kind.encode()), step))
+
+
+class FaultySource:
+    """Wrap a ``batch_at(step)`` data source, planting non-finite values
+    into the steps a :class:`FaultPlan` schedules ("nan_batch" /
+    "inf_batch" kinds).
+
+    Only float leaves are touched (token/label integer tensors pass
+    through — a NaN there is unrepresentable); ``frac`` of each float
+    leaf's entries are overwritten at plan-seeded positions. Supports the
+    same iterator protocol as the wrapped source, so it drops into
+    ``Trainer.fit`` either way."""
+
+    def __init__(self, source, plan: FaultPlan):
+        self.source = source
+        self.plan = plan
+        self.injected_steps = []     # host-side audit log
+
+    def batch_at(self, step: int):
+        """The wrapped source's batch, with scheduled faults applied."""
+        batch = self.source.batch_at(step)
+        spec = self.plan.spec("nan_batch", step) \
+            or self.plan.spec("inf_batch", step)
+        if spec is None:
+            return batch
+        import jax
+        import jax.numpy as jnp
+        rng = self.plan.rng(spec.kind, step)
+        bad = jnp.nan if spec.kind == "nan_batch" else jnp.inf
+
+        def poison(x):
+            if not hasattr(x, "dtype") or x.dtype.kind != "f":
+                return x
+            flat = np.asarray(x).reshape(-1).copy()
+            n = max(1, int(spec.frac * flat.size))
+            idx = rng.choice(flat.size, size=n, replace=False)
+            flat[idx] = bad
+            return jnp.asarray(flat.reshape(x.shape), x.dtype)
+
+        out = jax.tree_util.tree_map(poison, batch)
+        self.injected_steps.append(step)
+        return out
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def corrupt_checkpoint(directory: str, step: int, mode: str = "truncate",
+                       seed: int = 0) -> str:
+    """Damage a PUBLISHED checkpoint's array payload on disk.
+
+    ``mode="truncate"`` cuts ``arrays.npz`` to half its length (a torn
+    write that beat the atomic-rename protocol — e.g. the filesystem
+    itself lost tail pages); ``mode="bitflip"`` flips one seeded bit in
+    the payload (corruption the npz container may still happily parse —
+    exactly what the manifest checksums exist to catch). Returns the
+    damaged file's path."""
+    path = os.path.join(directory, f"step_{step}", "arrays.npz")
+    with open(path, "rb") as f:
+        blob = bytearray(f.read())
+    if mode == "truncate":
+        blob = blob[:max(1, len(blob) // 2)]
+    elif mode == "bitflip":
+        rng = np.random.default_rng((seed, step))
+        # flip inside the payload body, past the zip local-file headers:
+        # a header flip would just make np.load raise (the easy case)
+        pos = int(rng.integers(len(blob) // 4, len(blob) // 2))
+        blob[pos] ^= 1 << int(rng.integers(8))
+    else:
+        raise ValueError(f"unknown corruption mode: {mode!r}")
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    return path
+
+
+def corrupt_slot(engine, slot: int, mode: str = "nan") -> None:
+    """Corrupt one serve slot's device-resident state between ticks.
+
+    ``mode="nan"`` overwrites the slot's row in every float cache leaf
+    with NaN (bad DMA / bit-rot in HBM); ``mode="pos"`` scrambles the
+    slot's sequence position (bookkeeping corruption — the state is
+    finite but WRONG). Host-driven functional updates outside any jit;
+    the engine's watchdog is expected to detect and quarantine."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.precision import is_quantized
+    from repro.distributed.sharding import _path_str
+    from repro.serve.cache import batch_axis_for
+
+    cache = engine.cache.cache
+    if mode == "pos":
+        pos = cache["pos"]
+        cache = dict(cache)
+        cache["pos"] = pos.at[slot].add(jnp.asarray(7, pos.dtype))
+        engine.cache.cache = cache
+        return
+    if mode != "nan":
+        raise ValueError(f"unknown slot corruption mode: {mode!r}")
+
+    def poison(path, leaf):
+        ps = _path_str(path)
+        if ps.rsplit("/", 1)[-1] == "pos":
+            return leaf
+        if is_quantized(leaf):
+            # poison the scales (float side of the QTensor); int payloads
+            # cannot hold NaN
+            if leaf.scale is None:
+                return leaf
+            ax = batch_axis_for(ps)
+            idx = (slice(None),) * ax + (slot,)
+            return type(leaf)(leaf.q, leaf.scale.at[idx].set(jnp.nan),
+                              leaf.mode, leaf.odtype, leaf.lead, leaf.block)
+        if not hasattr(leaf, "dtype") or leaf.dtype.kind != "f":
+            return leaf
+        ax = batch_axis_for(ps)
+        idx = (slice(None),) * ax + (slot,)
+        return leaf.at[idx].set(jnp.nan)
+
+    engine.cache.cache = jax.tree_util.tree_map_with_path(
+        poison, cache, is_leaf=is_quantized)

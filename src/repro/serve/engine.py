@@ -54,8 +54,71 @@ from repro.distributed.precision import (PrecisionPolicy, dequantize_weights,
                                          tree_state_bytes)
 from repro.distributed.sharding import _path_str
 from repro.models import Model, build_model
+from repro.reliability.events import EventLog
 from repro.serve.cache import StateCache, batch_axis_for
 from repro.serve.decode import make_decode_step, make_verify_step
+
+
+class QueueFullError(RuntimeError):
+    """Structured admission reject: the bounded queue is at capacity.
+
+    Carries the request uid and the queue depth at reject time so the
+    caller (or the SLOScheduler, which counts these) can shed load
+    deliberately instead of growing host memory without bound."""
+
+    def __init__(self, uid: int, depth: int, max_queue: int):
+        super().__init__(
+            f"request {uid} rejected: admission queue at capacity "
+            f"({depth}/{max_queue}) — backpressure, resubmit later")
+        self.uid = uid
+        self.depth = depth
+        self.max_queue = max_queue
+
+
+class EngineStalledError(RuntimeError):
+    """``run_until_drained`` exhausted its tick budget with work still
+    pending — a stall (wedged admission, hold-backed retries, a tick
+    budget sized too small), never a silent return. Carries a structured
+    report of what was left."""
+
+    def __init__(self, ticks: int, queued: int, active: int):
+        super().__init__(
+            f"engine stalled: {queued} queued + {active} active requests "
+            f"after {ticks} ticks (raise max_ticks or inspect "
+            "engine.events for the degradation trail)")
+        self.ticks = ticks
+        self.queued = queued
+        self.active = active
+
+
+def _make_slot_health(slots: int):
+    """Build the watchdog's per-slot health predicate (jitted by the
+    engine): AND of ``isfinite`` over every float cache leaf, reduced over
+    all axes except the leaf's slot axis (``batch_axis_for``), plus the
+    raw ``pos`` vector for the host-side progress check. Quantized leaves
+    are checked through their scales (integer payloads cannot be
+    non-finite; a poisoned scale is how corruption manifests there).
+    One device call per watchdog pass — never per tick."""
+
+    def health(cache):
+        ok = jnp.ones((slots,), bool)
+        flat = jax.tree_util.tree_flatten_with_path(
+            cache, is_leaf=is_quantized)[0]
+        for path, leaf in flat:
+            ps = _path_str(path)
+            if ps.rsplit("/", 1)[-1] == "pos":
+                continue
+            if is_quantized(leaf):
+                leaf = leaf.scale
+                if leaf is None:      # bf16/fp8 modes carry no scales
+                    continue
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                continue
+            ax = batch_axis_for(ps)
+            axes = tuple(i for i in range(leaf.ndim) if i != ax)
+            ok = ok & jnp.all(jnp.isfinite(leaf), axis=axes)
+        return ok, cache["pos"]
+    return health
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +143,14 @@ class Request:
 
     ``on_token(uid, token, done)`` fires once per generated token, in
     order; ``done`` is True exactly once (the final token). ``out_tokens``
-    accumulates the same tokens for callers that prefer polling."""
+    accumulates the same tokens for callers that prefer polling.
+
+    ``deadline_s`` (optional) is a wall-clock budget measured from
+    ``submit``: a request past its deadline is CANCELLED (queued: dropped
+    at admission; active: slot freed mid-stream) with ``status``
+    "expired". ``status`` tracks the lifecycle — queued -> active ->
+    done | expired | failed | rejected — and ``retries`` counts watchdog
+    quarantines (re-prefills) this request has survived."""
     uid: int
     prompt: np.ndarray               # (T,) int32
     max_new_tokens: int = 16
@@ -88,6 +158,10 @@ class Request:
     on_token: Optional[Callable[[int, int, bool], None]] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline_s: Optional[float] = None
+    status: str = "queued"
+    submit_t: float = 0.0
+    retries: int = 0
 
 
 class ServeEngine:
@@ -107,12 +181,35 @@ class ServeEngine:
     recurrence tick is quantize-roundtripped onto the storage grid —
     that alignment is what keeps speculative decode token-identical to
     quantized greedy and eviction round trips self-consistent. Quantized
-    policies do not compose with a mesh yet."""
+    policies do not compose with a mesh yet.
+
+    Degradation knobs (docs/reliability.md):
+      * ``max_queue``: bounded admission queue — ``submit`` raises
+        ``QueueFullError`` at capacity (0 = unbounded).
+      * ``watchdog_every``: every N ticks, a jitted per-slot health check
+        (all-finite state + position-progress) runs BEFORE decode; a bad
+        slot is quarantined via the eviction/re-prefill path with capped
+        exponential backoff, and after ``max_retries`` quarantines the
+        request fails structurally instead of looping (0 = off).
+      * ``spec_min_accept``: sustained-accept-rate floor for speculative
+        decoding — when the mean accepted-draft fraction over the last
+        ``spec_window`` verify ticks drops below it, spec is auto-disabled
+        for ``spec_cooldown`` ticks (plain decode; token streams stay
+        greedy-identical since both paths are exact), then re-enabled
+        with cold-start drafts (0.0 = never disable).
+      * ``faults``: a ``reliability.FaultPlan`` — ``serve_stall`` faults
+        suppress admission on the scheduled ticks (simulated wedged
+        admission for the chaos suite).
+    Every degradation transition is recorded on ``self.events``
+    (a ``reliability.EventLog``)."""
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_seq: int = 256, prefill_chunk: int = 32, mesh=None,
                  policy=None, spec: Optional[SpecConfig] = None,
-                 precision=None):
+                 precision=None, max_queue: int = 0, watchdog_every: int = 0,
+                 max_retries: int = 3, backoff_cap: int = 8,
+                 spec_min_accept: float = 0.0, spec_window: int = 8,
+                 spec_cooldown: int = 16, faults=None):
         if policy is not None and mesh is None:
             mesh = policy.build_mesh()
         self.policy = policy
@@ -190,6 +287,27 @@ class ServeEngine:
         # host memory linearly with tokens served.
         self.token_lat: Dict[str, deque] = {
             "prefill": deque(maxlen=4096), "decode": deque(maxlen=4096)}
+        # degradation state (docs/reliability.md): tick counter, event
+        # log, expected per-slot position (host mirror of committed
+        # progress — the watchdog's zero-progress detector), hold-backs
+        # for quarantined requests (uid -> earliest re-admission tick),
+        # and the spec auto-disable window/cooldown bookkeeping
+        self.max_queue = max_queue
+        self.watchdog_every = watchdog_every
+        self.max_retries = max_retries
+        self.backoff_cap = backoff_cap
+        self.spec_min_accept = spec_min_accept
+        self.spec_cooldown = spec_cooldown
+        self.faults = faults
+        self.events = EventLog()
+        self._ticks = 0
+        self._expected_pos = np.zeros((batch_slots,), np.int64)
+        self._hold: Dict[int, int] = {}
+        self._accept_window: deque = deque(maxlen=max(spec_window, 1))
+        self._spec_off = False
+        self._spec_off_until = 0
+        self._health = (jax.jit(_make_slot_health(batch_slots))
+                        if watchdog_every else None)
 
     def _check_spec(self, spec: SpecConfig) -> None:
         """Reject spec geometries the commit/verify paths cannot serve
@@ -253,6 +371,15 @@ class ServeEngine:
                 + (f" and spec window k={self.spec.k}" if spec_pad else "")
                 + f") but max_seq={self.max_seq}; raise max_seq or lower "
                 "prefill_chunk")
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            # bounded-queue backpressure: a STRUCTURED reject the caller
+            # can act on (shed load / resubmit), never unbounded growth
+            self.events.emit("queue_reject", where=req.uid,
+                             depth=len(self.queue))
+            req.status = "rejected"
+            raise QueueFullError(req.uid, len(self.queue), self.max_queue)
+        req.status = "queued"
+        req.submit_t = time.perf_counter()
         self.queue.append(req)
 
     def _feed(self, req: Request) -> np.ndarray:
@@ -313,8 +440,20 @@ class ServeEngine:
         if req.on_token is not None:
             req.on_token(req.uid, tok, done)
         if done:
+            req.status = "done"
             self.finished.append(req)
         return done
+
+    def _finalize(self, req: Request, status: str, **detail) -> None:
+        """Terminally retire a request WITHOUT completing it (deadline
+        expiry, retry exhaustion): set its status, move it to
+        ``finished`` (``done`` stays False — callers distinguish
+        completion from cancellation), and log the degradation event."""
+        req.status = status
+        self._hold.pop(req.uid, None)
+        self.finished.append(req)
+        self.events.emit(status, where=req.uid,
+                         emitted=len(req.out_tokens), **detail)
 
     def _admit(self, max_prefills: Optional[int] = None,
                max_batch: Optional[int] = None) -> int:
@@ -326,7 +465,37 @@ class ServeEngine:
         ``max_prefills`` bounds the number of prefill LAUNCHES this call
         may issue (the scheduler's prefill/decode interleaving budget);
         ``max_batch`` caps the admission group size. Returns the number of
-        launches issued."""
+        launches issued.
+
+        Before grouping, the queue is swept once: requests past their
+        deadline are cancelled ("expired", never admitted) and quarantined
+        requests still inside their backoff hold are set aside, then
+        reinserted at the FRONT afterwards (they carry retry priority —
+        eviction already re-queued them there).
+
+        Injected ``serve_stall`` faults gate HERE (not in ``step``) so a
+        scheduler driving admission directly sees the same wedged-
+        admission behaviour as the engine's own tick."""
+        if (self.faults is not None
+                and self.faults.fires("serve_stall", self._ticks)):
+            self.events.emit("admission_stalled", tick=self._ticks,
+                             queued=len(self.queue))
+            return 0
+        held: List[Request] = []
+        if self._hold or any(r.deadline_s is not None for r in self.queue):
+            now = time.perf_counter()
+            keep: deque = deque()
+            while self.queue:
+                r = self.queue.popleft()
+                if (r.deadline_s is not None
+                        and now - r.submit_t > r.deadline_s):
+                    self._finalize(r, "expired")
+                elif self._hold.get(r.uid, 0) > self._ticks:
+                    held.append(r)
+                else:
+                    self._hold.pop(r.uid, None)
+                    keep.append(r)
+            self.queue = keep
         launches = 0
         while self.queue and self.cache.n_free > 0:
             if max_prefills is not None and launches >= max_prefills:
@@ -340,6 +509,10 @@ class ServeEngine:
                    and self._n_chunks(self.queue[0]) == nc):
                 group.append(self.queue.popleft())
             slots = [self.cache.alloc() for _ in group]
+            # feed lengths BEFORE the first emit mutates out_tokens: the
+            # fragment's committed pos equals the feed length
+            lengths_admitted = [len(r.prompt) + len(r.out_tokens)
+                                for r in group]
             t0 = time.perf_counter()
             frag, first = self._prefill_group(group, nc)
             self.cache.write_slots(np.asarray(slots, np.int32), frag)
@@ -347,16 +520,22 @@ class ServeEngine:
             launches += 1
             for j, (req, slot) in enumerate(zip(group, slots)):
                 self.token_lat["prefill"].append(wall)
+                # host mirror of the slot's committed position (== feed
+                # length after prefill) — the watchdog's progress anchor
+                self._expected_pos[slot] = int(lengths_admitted[j])
                 tok = int(first[j])
                 if self._emit(req, tok):
                     self.cache.free(slot)      # one-token request
                 else:
+                    req.status = "active"
                     self.active[slot] = req
                     self._last_tok[slot, 0] = tok
                     if self._draft_tok is not None:
                         # cold-start drafts: repeat the anchor; the first
                         # verify tick replaces them with real leftovers
                         self._draft_tok[slot, :] = tok
+        if held:
+            self.queue.extendleft(reversed(held))
         return launches
 
     # -- the tick -----------------------------------------------------------
@@ -365,13 +544,24 @@ class ServeEngine:
         """One engine tick: admit waiting requests (unless the scheduler
         already did), then one batched decode — plain single-token or
         speculative k-window — advancing every active slot. Returns the
-        number of slots that were active this tick (0 = fully drained)."""
+        number of slots that were active this tick (0 = fully drained).
+
+        Degradation ordering (docs/reliability.md): deadline expiry and
+        the watchdog run FIRST, so a corrupt or past-deadline slot never
+        emits a token this tick; injected ``serve_stall`` faults suppress
+        admission; the spec auto-disable gate decides plain vs
+        speculative decode last."""
+        self._ticks += 1
+        self._expire_active()
+        if (self._health is not None
+                and self._ticks % self.watchdog_every == 0):
+            self._watchdog()
         if admit:
             self._admit()
         act = [s for s, r in enumerate(self.active) if r is not None]
         if not act:
             return 0
-        if self.spec is not None:
+        if self.spec is not None and self._spec_usable(act):
             return self._spec_tick(act)
         t0 = time.perf_counter()
         next_tok, _, new_cache = self._decode(
@@ -382,6 +572,7 @@ class ServeEngine:
         for s in act:
             req = self.active[s]
             tok = int(nxt[s, 0])
+            self._expected_pos[s] += 1         # one committed position
             self.token_lat["decode"].append(wall)
             if self._emit(req, tok):
                 self.active[s] = None          # recycle: continuous batching
@@ -389,6 +580,73 @@ class ServeEngine:
             else:
                 self._last_tok[s, 0] = tok
         return len(act)
+
+    def _spec_usable(self, act: List[int]) -> bool:
+        """Gate for the speculative path: False while auto-disabled. On
+        cooldown expiry, re-enables with cold-start drafts (repeat each
+        slot's anchor token — same as admission), so the first verify
+        tick is guaranteed >= 1 accepted token and the stream stays
+        token-identical throughout the disable/re-enable cycle."""
+        if not self._spec_off:
+            return True
+        if self._ticks < self._spec_off_until:
+            return False
+        self._spec_off = False
+        for s in act:
+            self._draft_tok[s, :] = self._last_tok[s, 0]
+        self.events.emit("spec_reenable", tick=self._ticks)
+        return True
+
+    def _expire_active(self) -> None:
+        """Cancel ACTIVE requests past their deadline: free the slot
+        (continuous batching reclaims it this tick), retire the request
+        as "expired". Runs before decode, so a cancelled request never
+        pays for another token."""
+        now = time.perf_counter()
+        for s, r in enumerate(self.active):
+            if (r is not None and r.deadline_s is not None
+                    and now - r.submit_t > r.deadline_s):
+                self.active[s] = None
+                self.cache.free(s)
+                self._finalize(r, "expired")
+
+    def _watchdog(self) -> None:
+        """Slot-health sweep: one jitted device call checks every slot's
+        state for non-finite values and its ``pos`` against the host-side
+        expected position (zero-progress / runaway detection). Bad ACTIVE
+        slots are quarantined. The host readback here is a sanctioned
+        sync — it runs every ``watchdog_every`` ticks, never per tick."""
+        act = [s for s, r in enumerate(self.active) if r is not None]
+        if not act:
+            return
+        okv, pos = self._health(self.cache.cache)
+        okv = np.asarray(okv)
+        pos = np.asarray(pos)
+        for s in act:
+            state_ok = bool(okv[s])
+            pos_ok = int(pos[s]) == int(self._expected_pos[s])
+            if state_ok and pos_ok:
+                continue
+            self._quarantine(s, "state" if not state_ok else "pos")
+
+    def _quarantine(self, slot: int, why: str) -> None:
+        """Quarantine a corrupt/stuck slot: evict (the request re-queues
+        with its emitted-so-far tokens folded into the feed — re-prefill
+        re-derives clean state, so the retry is token-identity-preserving
+        by construction), apply capped exponential backoff before
+        re-admission, and fail the request structurally once it exhausts
+        ``max_retries``."""
+        req = self.active[slot]
+        self.events.emit("slot_quarantine", where=slot, uid=req.uid,
+                         why=why, tick=self._ticks, retry=req.retries + 1)
+        self.evict(slot)
+        req.retries += 1
+        if req.retries > self.max_retries:
+            self.queue.remove(req)
+            self._finalize(req, "failed", retries=req.retries, why=why)
+        else:
+            delay = min(2 ** (req.retries - 1), self.backoff_cap)
+            self._hold[req.uid] = self._ticks + delay
 
     def _spec_tick(self, act: List[int]) -> int:
         """One speculative tick: (optionally) refine drafts with the
@@ -415,6 +673,7 @@ class ServeEngine:
         for s in act:
             req = self.active[s]
             a = int(acc_h[s])
+            self._expected_pos[s] += a         # a committed positions
             self.spec_stats["accepted_tokens"] += a - 1
             self.token_lat["decode"].append(wall)
             done = False
@@ -435,6 +694,25 @@ class ServeEngine:
             self._draft_tok[s, :n] = left[:n]
             fillv = left[n - 1] if n > 0 else y_h[s, a - 1]
             self._draft_tok[s, n:] = fillv
+        if self.spec_min_accept > 0.0 and act:
+            # sustained-accept-rate monitor: when the windowed mean of
+            # the accepted-draft fraction falls below the floor, the
+            # verify window costs more than it saves — fall back to
+            # plain decode for a cooldown (tokens stay identical: both
+            # paths emit the model's exact greedy continuation)
+            frac = (sum(int(acc_h[s]) - 1 for s in act)
+                    / ((k - 1) * len(act)))
+            self._accept_window.append(frac)
+            win = self._accept_window
+            if (len(win) == win.maxlen
+                    and sum(win) / len(win) < self.spec_min_accept):
+                self._spec_off = True
+                self._spec_off_until = self._ticks + self.spec_cooldown
+                mean = sum(win) / len(win)
+                win.clear()
+                self.events.emit("spec_disable", tick=self._ticks,
+                                 accept_rate=round(mean, 4),
+                                 until=self._spec_off_until)
         return len(act)
 
     def evict(self, slot: int) -> Request:
@@ -449,16 +727,25 @@ class ServeEngine:
             raise ValueError(f"slot {slot} is not active")
         self.active[slot] = None
         self.cache.free(slot)
+        req.status = "queued"
         self.queue.appendleft(req)
         return req
 
     def run_until_drained(self, max_ticks: int = 10_000) -> "deque[Request]":
         """Tick until the queue and all slots are empty; returns the
-        finished-requests deque (completion order, bounded retention)."""
+        finished-requests deque (completion order, bounded retention).
+
+        Raises ``EngineStalledError`` when ``max_ticks`` is exhausted with
+        requests still queued or active — a stall is always surfaced
+        structurally, never returned as a silently-partial drain."""
         for _ in range(max_ticks):
             self.step()
             if not self.queue and not any(r is not None for r in self.active):
-                break
+                return self.finished
+        if self.queue or any(r is not None for r in self.active):
+            raise EngineStalledError(
+                max_ticks, len(self.queue),
+                sum(r is not None for r in self.active))
         return self.finished
 
     # -- stats --------------------------------------------------------------

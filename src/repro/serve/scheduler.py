@@ -34,7 +34,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (EngineStalledError, QueueFullError, Request,
+                                ServeEngine)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,15 +65,25 @@ class SLOScheduler:
         self.admit_wait: deque = deque(maxlen=65536)
         self._submit_t: Dict[int, float] = {}
         self._queued: Dict[int, Request] = {}
+        self.rejected = 0
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
         """Queue a request on the engine, stamping its arrival for the
-        admission-wait statistic."""
-        self.engine.submit(req)
+        admission-wait statistic. Backpressure rejects (bounded engine
+        queue at capacity) are absorbed here into a counted, structured
+        outcome: returns False with ``req.status == "rejected"`` instead
+        of propagating ``QueueFullError`` — the scheduler IS the layer
+        that decides what load-shedding looks like."""
+        try:
+            self.engine.submit(req)
+        except QueueFullError:
+            self.rejected += 1
+            return False
         self._submit_t[req.uid] = time.perf_counter()
         self._queued[req.uid] = req
+        return True
 
     def _note_departures(self) -> None:
         """Record admission wait for every request that left the engine
@@ -109,20 +120,33 @@ class SLOScheduler:
         return self.engine.step(admit=False)
 
     def run_until_drained(self, max_ticks: int = 100_000):
-        """Tick until queue and slots drain; returns engine.finished."""
+        """Tick until queue and slots drain; returns engine.finished.
+        Raises ``EngineStalledError`` (same contract as the engine's own
+        drain loop) when the tick budget runs out with work pending."""
         for _ in range(max_ticks):
             self.tick()
             if (not self.engine.queue
                     and not any(r is not None for r in self.engine.active)):
-                break
+                return self.engine.finished
+        if (self.engine.queue
+                or any(r is not None for r in self.engine.active)):
+            raise EngineStalledError(
+                max_ticks, len(self.engine.queue),
+                sum(r is not None for r in self.engine.active))
         return self.engine.finished
 
     # -- stats --------------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
         """Engine latency percentiles + scheduler queue/admission stats +
+        degradation counters (rejects, expiries, failures, quarantines) +
         speculative accept rate (when the engine runs speculative)."""
         out: Dict[str, float] = dict(self.engine.latency_percentiles())
+        ev = self.engine.events
+        out["rejected"] = float(ev.count("queue_reject"))
+        out["expired"] = float(ev.count("expired"))
+        out["failed"] = float(ev.count("failed"))
+        out["quarantined"] = float(ev.count("slot_quarantine"))
         if self.queue_depth:
             q = np.asarray(list(self.queue_depth))
             out["queue_depth_p50"] = float(np.percentile(q, 50))

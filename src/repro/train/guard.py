@@ -1,0 +1,52 @@
+"""Training guardrails: device-side all-finite predicate + skip-bad-step
+select, folded into the step function.
+
+The contract mirrors the loss-metric design (train/loop.py): the
+predicate is computed ON DEVICE inside the jitted step and rides the
+metrics dict (``metrics["all_finite"]``) next to the device-side loss —
+there is NO per-step host sync. The trainer materialises the flag only at
+its existing log/checkpoint cadence, which bounds guard DETECTION latency
+at ``log_every`` steps while keeping the step loop free-running.
+
+Semantics when ``TrainConfig.guard_nonfinite`` is on:
+
+  * the predicate is ``isfinite(loss) AND all(isfinite(g))`` over the
+    REDUCED gradients — non-finite values propagate through the sum-based
+    data/pod reductions, so every device sees the same verdict without an
+    extra collective;
+  * a bad step is SKIPPED on device: params/moments/master/residual are
+    ``where``-selected back to their pre-step values, but ``step`` still
+    advances — the LR schedule and the (step-indexed) data cursor stay
+    aligned with a clean run, so a skipped step consumes its batch and
+    moves on;
+  * after ``guard_rollback_after`` CONSECUTIVE bad steps the trainer
+    restores the newest VERIFIED checkpoint (checkpoint/manager.py
+    checksums) and replays from there (requires a ``batch_at``-style
+    step-indexed data source to replay the same batches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def all_finite(loss, grads) -> jax.Array:
+    """Device-side scalar bool: loss and every gradient leaf are finite.
+
+    ``jnp.isfinite`` rejects both NaN and +-inf, so an overflowed fp16
+    gradient and a NaN'd batch hit the same guard."""
+    ok = jnp.all(jnp.isfinite(loss))
+    for g in jax.tree_util.tree_leaves(grads):
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(g)))
+    return ok
+
+
+def select_step(ok: jax.Array, new_tree, old_tree):
+    """Per-leaf ``where(ok, new, old)`` — the skip-bad-step commit gate.
+
+    Applied to the updated params/moments/master/residual so a non-finite
+    step leaves optimizer state bit-identical to before the step. Runs
+    inside the jitted step (both reduction modes), so the skip costs one
+    fused select, not a host round-trip."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(ok, n, o), new_tree, old_tree)

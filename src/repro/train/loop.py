@@ -21,6 +21,17 @@ Production behaviours implemented and unit-tested on this container:
     holds the jax scalar) and are only materialised on ``log_every`` /
     checkpoint steps — the step loop dispatches ahead of the device
     instead of blocking on ``float(loss)`` every iteration.
+  * non-finite guardrails (train/guard.py, ``TrainConfig.guard_nonfinite``):
+    the step's device-side all-finite verdict rides ``StepStats.ok`` the
+    same lazy way the loss does; bad steps are skipped ON DEVICE, counted
+    here at sync cadence, and ``guard_rollback_after`` consecutive bad
+    steps trigger a restore of the newest VERIFIED checkpoint. Rollback
+    replays the same step-indexed batches (``batch_at`` data protocol),
+    and a barrier prevents a deterministic bad window from rolling back
+    in a loop: one rollback per distinct restore point, then skip-through.
+  * deterministic fault injection (reliability/faults.py): a ``faults``
+    FaultPlan makes the loop poll ``fires("preempt", step)`` — the chaos
+    suite's simulated SIGTERM, routed through the same ``preempt()`` seam.
 """
 from __future__ import annotations
 
@@ -42,6 +53,7 @@ class StepStats:
     loss: Any        # device-side jax scalar until materialised (lazy)
     wall: float
     straggler: bool
+    ok: Any = True   # device-side all-finite verdict (lazy, like loss)
 
     @property
     def loss_value(self) -> float:
@@ -52,7 +64,8 @@ class Trainer:
     def __init__(self, model, tcfg: TrainConfig, mesh=None, params=None,
                  straggler_factor: float = 3.0, log_every: int = 10,
                  log_fn: Callable[[str], None] = print,
-                 policy: Optional[shd.ShardingPolicy] = None):
+                 policy: Optional[shd.ShardingPolicy] = None,
+                 faults=None):
         if policy is not None:
             tcfg = policy.apply_to(tcfg)
             if mesh is None:
@@ -77,6 +90,15 @@ class Trainer:
         self._ewma: Optional[float] = None
         self.history: List[StepStats] = []
         self._preempted = False
+        # fault injection + guardrail bookkeeping (reliability PR): the
+        # FaultPlan drives simulated preemptions through preempt(); the
+        # guard counters are updated at sync cadence from StepStats.ok
+        self.faults = faults
+        self.skipped_steps = 0
+        self.rollbacks = 0
+        self._bad_streak = 0
+        self._guard_scanned = 0       # history index the guard has read
+        self._rollback_barrier: Optional[int] = None
 
     # TrainState views (the state pytree is authoritative)
 
@@ -86,20 +108,33 @@ class Trainer:
 
     # -- fault tolerance ------------------------------------------------------
 
-    def maybe_resume(self) -> bool:
-        latest = self.ckpt.latest_step()
-        if latest is None:
-            return False
+    def _restore(self, step: Optional[int] = None) -> int:
+        """Restore TrainState from a checkpoint against the current mesh.
+        ``step=None`` picks the newest VERIFIED step (checksum manifest),
+        so auto-resume and rollback both survive a corrupt/truncated
+        latest checkpoint. Raises FileNotFoundError when nothing
+        restorable exists."""
         from repro.train.step import _tp_layout_overrides, train_state_specs
         specs = train_state_specs(
             self.state, self.mesh, self.tcfg,
             replicate=_tp_layout_overrides(self.model, self.mesh,
                                            self.tcfg))
-        step, restored, extra = self.ckpt.restore(
-            latest, mesh=self.mesh, specs={"state": specs},
+        step, restored, _ = self.ckpt.restore(
+            step, mesh=self.mesh, specs={"state": specs},
             target={"state": self.state})
         self.state = restored["state"]
         self.step = step
+        return step
+
+    def maybe_resume(self) -> bool:
+        if self.ckpt.latest_step() is None:
+            return False
+        try:
+            step = self._restore(None)
+        except FileNotFoundError:
+            self.log_fn("[trainer] checkpoints present but none verified "
+                        "— starting fresh")
+            return False
         self.log_fn(f"[trainer] resumed from step {step} "
                     f"(mesh={tuple(self.mesh.shape.values())})")
         return True
@@ -117,24 +152,93 @@ class Trainer:
         self._preempted = True
         self.checkpoint(sync=True)
 
+    # -- guardrails -----------------------------------------------------------
+
+    def _account_guard(self):
+        """Consume materialised ``StepStats.ok`` flags: count skipped
+        steps, track the consecutive-bad streak, and trigger rollback
+        after ``guard_rollback_after`` consecutive bad steps. Runs at the
+        loop's sync cadence, so detection latency is bounded by
+        ``log_every`` — the price of keeping the step loop sync-free."""
+        K = self.tcfg.guard_rollback_after
+        while self._guard_scanned < len(self.history):
+            st = self.history[self._guard_scanned]
+            if not isinstance(st.ok, bool):
+                break                        # not materialised yet
+            self._guard_scanned += 1
+            if st.ok:
+                self._bad_streak = 0
+            else:
+                self.skipped_steps += 1
+                self._bad_streak += 1
+                self.log_fn(f"[guard] step {st.step} non-finite — skipped "
+                            f"(streak {self._bad_streak})")
+                if K and self._bad_streak >= K:
+                    self._maybe_rollback()
+
+    def _maybe_rollback(self):
+        """Roll back to the newest verified checkpoint — at most ONCE per
+        distinct restore point (the barrier): a deterministic bad window
+        replays identically after restore, so a second rollback to the
+        same step would livelock; instead the trainer skips through."""
+        self._bad_streak = 0
+        self.ckpt.wait()
+        cand = self.ckpt.latest_verified_step()
+        if cand is None:
+            self.log_fn("[guard] rollback requested but no verified "
+                        "checkpoint exists — continuing (skip-only)")
+            return
+        if cand == self._rollback_barrier:
+            self.log_fn(f"[guard] already rolled back to step {cand} once "
+                        "— skipping through the bad window instead")
+            return
+        self._restore(cand)
+        self._rollback_barrier = cand
+        self.rollbacks += 1
+        self._guard_scanned = len(self.history)
+        self.log_fn(f"[guard] rolled back to verified step {cand} after "
+                    "consecutive non-finite steps")
+
     # -- main loop ------------------------------------------------------------
 
-    def fit(self, data: Iterator[Dict], n_steps: int) -> List[StepStats]:
+    def fit(self, data, n_steps: int) -> List[StepStats]:
+        """Run ``n_steps`` steps (to absolute step ``start + n_steps``).
+
+        ``data`` is either an iterator/iterable of batches (legacy) or a
+        STEP-INDEXED source exposing ``batch_at(step)`` (data/pipeline.py
+        contract). The indexed form is what makes preempt-resume
+        bit-exact and guard rollback replayable — the loop asks for
+        ``batch_at(self.step)`` so a restored step re-reads its exact
+        batch; an iterator cannot rewind, so rollback with iterator data
+        keeps consuming forward (logged when it happens)."""
         from repro.train.step import jit_train_step
         with shd.use_mesh(self.mesh):
-            it = iter(data)
-            first_batch = next(it)
+            if hasattr(data, "batch_at"):
+                get_batch = data.batch_at
+            else:
+                it = iter(data)
+                get_batch = lambda _step: next(it)
+                if self.tcfg.guard_rollback_after:
+                    self.log_fn("[guard] warning: iterator data cannot "
+                                "replay after rollback — pass a batch_at "
+                                "source for exact replay")
+            batch = get_batch(self.step)
             if self._jit_step is None:
                 self._jit_step = jit_train_step(
-                    self.model, self.tcfg, self.mesh, self.state,
-                    first_batch)
-            batch = first_batch
+                    self.model, self.tcfg, self.mesh, self.state, batch)
             target = self.step + n_steps
             while self.step < target and not self._preempted:
+                if self.faults is not None and \
+                        self.faults.fires("preempt", self.step):
+                    # simulated SIGTERM: the same seam a real orchestrator
+                    # kill hits — sync checkpoint, loop exit
+                    self.preempt()
+                    break
                 t0 = time.perf_counter()
                 self.state, metrics = self._jit_step(self.state, batch)
                 self.step += 1
                 loss = metrics["loss"]      # device-side; NOT materialised
+                ok = metrics.get("all_finite", True)   # device-side too
                 # wall measures dispatch (plus any queue backpressure) on
                 # EVERY step, never the log-step sync below — otherwise each
                 # log_every-th step would absorb the queued backlog and trip
@@ -149,6 +253,7 @@ class Trainer:
                     # the only host syncs in the loop (log/ckpt cadence,
                     # never per step)  # repro-lint: disable=host-sync
                     loss = float(jax.block_until_ready(loss))
+                    ok = bool(ok)
                     self._materialise_history()
                 straggler = False
                 if self._ewma is None:
@@ -161,24 +266,30 @@ class Trainer:
                                     "— straggler flagged")
                     self._ewma = 0.9 * self._ewma + 0.1 * wall
                 self.history.append(StepStats(self.step, loss, wall,
-                                              straggler))
+                                              straggler, ok))
+                if log_step or ckpt_step:
+                    self._account_guard()
                 if log_step:
                     self.log_fn(f"[trainer] step {self.step} "
                                 f"loss {loss:.4f} {wall*1e3:.1f} ms")
                 if ckpt_step:
                     self.checkpoint()
                 if self.step < target:
-                    batch = next(it)
+                    # after a rollback self.step moved backwards: the
+                    # indexed source re-serves the restored step's batch
+                    batch = get_batch(self.step)
             self.ckpt.wait()
             self._materialise_history()
+            self._account_guard()
         return self.history
 
     def _materialise_history(self):
-        """Backfill device-side StepStats losses into plain floats. Called
-        right after a host sync (device work is done — conversions are
-        cheap host copies), so ``history`` never pins more than
-        ``log_every`` device buffers."""
+        """Backfill device-side StepStats losses (and guard flags) into
+        plain host values. Called right after a host sync (device work is
+        done — conversions are cheap host copies), so ``history`` never
+        pins more than ``log_every`` device buffers."""
         for st in reversed(self.history):
             if isinstance(st.loss, float):
                 break
             st.loss = float(st.loss)
+            st.ok = bool(st.ok)

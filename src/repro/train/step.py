@@ -156,6 +156,42 @@ def _compressed_pod_allreduce(grads, residual, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# non-finite guard (train/guard.py semantics, shared by both modes)
+# ---------------------------------------------------------------------------
+
+def _guard_commit(tcfg: TrainConfig, old: TrainState, new: TrainState,
+                  loss, grads, metrics, reduce_ok=None):
+    """Fold the all-finite guard into the step's commit: with
+    ``tcfg.guard_nonfinite`` the updated params/moments/master/residual
+    are where-selected back to their pre-step values on a non-finite
+    loss/grad (``step`` still advances — LR schedule and data cursor stay
+    aligned with a clean run), and the device-side verdict rides
+    ``metrics["all_finite"]``. Guard off: the flag is a constant True so
+    the metrics pytree (and jit out_shardings) stay static.
+
+    ``reduce_ok`` (explicit seam only): collective AND of the verdict
+    across the manual mesh axes — FSDP-mode gradients are SHARDS, so a
+    NaN landing in one device's rows must still veto the commit
+    everywhere."""
+    from repro.train.guard import all_finite, select_step
+    if not tcfg.guard_nonfinite:
+        metrics["all_finite"] = jnp.asarray(True)
+        return new, metrics
+    ok = all_finite(loss, grads)
+    if reduce_ok is not None:
+        ok = reduce_ok(ok)
+    metrics["all_finite"] = ok
+    guarded = TrainState(
+        new.step,
+        select_step(ok, new.params, old.params),
+        select_step(ok, new.m, old.m),
+        select_step(ok, new.v, old.v),
+        select_step(ok, new.master, old.master),
+        select_step(ok, new.residual, old.residual))
+    return guarded, metrics
+
+
+# ---------------------------------------------------------------------------
 # the factory
 # ---------------------------------------------------------------------------
 
@@ -255,8 +291,9 @@ def _make_gspmd_train_step(model: Model, tcfg: TrainConfig,
         new_params, new_m, new_v, new_master, metrics = adamw_apply(
             tcfg, grads, step, state.m, state.v, state.master, state.params)
         metrics["loss"] = loss
-        return TrainState(step, new_params, new_m, new_v, new_master,
-                          new_residual), metrics
+        new_state = TrainState(step, new_params, new_m, new_v, new_master,
+                               new_residual)
+        return _guard_commit(tcfg, state, new_state, loss, grads, metrics)
     return train_step
 
 
@@ -421,8 +458,17 @@ def _make_explicit_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
                     tcfg, grads, step_no, state.m, state.v, state.master,
                     state.params, grad_norm=gnorm)
             metrics["loss"] = loss
-            return TrainState(step_no, new_params, new_m, new_v,
-                              new_master, new_residual), metrics
+            # verdict agreement: sharded-mode grads are per-device rows,
+            # so AND the flag over every manual axis (pmin on {0,1})
+            reduce_ok = None
+            if mesh.axis_names:
+                all_ax = tuple(mesh.axis_names)
+                reduce_ok = lambda ok: compat.pmin(
+                    ok.astype(jnp.float32), all_ax) > 0.5
+            return _guard_commit(
+                tcfg, state, TrainState(step_no, new_params, new_m, new_v,
+                                        new_master, new_residual),
+                loss, grads, metrics, reduce_ok=reduce_ok)
 
         return compat.shard_map(
             body, mesh=mesh,
@@ -505,7 +551,7 @@ def jit_step(model: Model, mode: str, mesh: Mesh, *,
             in_shardings=(ns(sspecs), ns(bspecs)),
             out_shardings=(ns(sspecs),
                            {"loss": mshard, "grad_norm": mshard,
-                            "lr": mshard}),
+                            "lr": mshard, "all_finite": mshard}),
             donate_argnums=(0,) if donate else (),
         )
 

@@ -1,0 +1,468 @@
+"""Reliability-layer tests: deterministic fault injection, training
+guardrails (device-side skip + rollback), checkpoint integrity
+(checksums, verified fallback, orphan tmp dirs), and serve degradation
+(stall surfacing, deadlines, backpressure, watchdog quarantine).
+
+The deep end-to-end scenarios live in tools/chaos_suite.py (CI
+chaos-smoke); this module keeps the tier-1 contracts: every recovery
+seam is unit-tested with toy shapes so the suite stays fast.
+"""
+import dataclasses
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import TrainConfig
+from repro.models import Model
+from repro.reliability import (FaultPlan, FaultSpec, FaultySource,
+                               corrupt_checkpoint)
+from repro.train.loop import Trainer
+
+
+# ---------------------------------------------------------------- helpers
+
+D, B = 16, 8
+W_TRUE = 0.5 * np.ones((D,), np.float32)
+
+
+class _Source:
+    """Step-indexed toy source (pure function of step)."""
+
+    def batch_at(self, s):
+        x = jax.random.normal(jax.random.PRNGKey(1000 + s), (B, D))
+        return {"tokens": x, "labels": x @ jnp.asarray(W_TRUE)}
+
+
+def _toy_model():
+    def init(key):
+        return {"w": jnp.zeros((D,), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["tokens"] @ p["w"] - b["labels"]) ** 2)
+    return Model(arch=None, init=init, loss=loss, apply=None,
+                 decode_step=None, init_cache=None)
+
+
+def _trainer(tmp, faults=None, guard=True, rollback_after=0,
+             checkpoint_every=0):
+    tcfg = TrainConfig(learning_rate=1e-1, warmup_steps=0,
+                       total_steps=100000, weight_decay=0.0,
+                       checkpoint_every=checkpoint_every,
+                       checkpoint_dir=tmp, guard_nonfinite=guard,
+                       guard_rollback_after=rollback_after)
+    mesh = jax.make_mesh((1,), ("data",))
+    return Trainer(_toy_model(), tcfg, mesh=mesh, log_every=1,
+                   log_fn=lambda s: None, faults=faults)
+
+
+# ------------------------------------------------------- fault injection
+
+
+def test_fault_plan_deterministic_and_scoped():
+    """fires/rng are pure functions of (seed, kind, step) — stable
+    across processes (no PYTHONHASHSEED dependence) — and a range spec
+    covers its window inclusively."""
+    plan = FaultPlan(seed=3, faults=(
+        FaultSpec("nan_batch", 5, until=7), FaultSpec("preempt", 9)))
+    assert [s for s in range(12) if plan.fires("nan_batch", s)] == [5, 6, 7]
+    assert [s for s in range(12) if plan.fires("preempt", s)] == [9]
+    a = plan.rng("nan_batch", 5).integers(0, 1 << 30, 4)
+    b = FaultPlan(seed=3, faults=plan.faults).rng(
+        "nan_batch", 5).integers(0, 1 << 30, 4)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_faulty_source_poisons_only_scheduled_steps():
+    plan = FaultPlan(seed=0, faults=(FaultSpec("nan_batch", 2, frac=0.5),))
+    src = FaultySource(_Source(), plan)
+    clean = src.batch_at(1)
+    assert all(np.all(np.isfinite(np.asarray(v))) for v in clean.values())
+    bad = src.batch_at(2)
+    assert any(np.any(np.isnan(np.asarray(v))) for v in bad.values())
+    assert src.injected_steps == [2]
+    # same (seed, step) -> bit-identical poison (replay determinism)
+    bad2 = FaultySource(_Source(), plan).batch_at(2)
+    for k in bad:
+        np.testing.assert_array_equal(np.asarray(bad[k]),
+                                      np.asarray(bad2[k]))
+
+
+# ------------------------------------------------------------- guardrails
+
+
+def test_guard_skips_nan_steps_and_counts(tmp_path):
+    """NaN batches: params do not absorb the bad update (device-side
+    where-select), the skip counter matches the injected count, and the
+    run finishes with finite params."""
+    plan = FaultPlan(seed=0, faults=(
+        FaultSpec("nan_batch", 3, until=4, frac=0.5),))
+    tr = _trainer(str(tmp_path))
+    hist = tr.fit(FaultySource(_Source(), plan), 10)
+    assert tr.skipped_steps == 2
+    assert [st.step for st in hist if not st.ok] == [4, 5]
+    for v in jax.tree_util.tree_leaves(tr.params):
+        assert np.all(np.isfinite(np.asarray(v)))
+    assert np.isfinite(hist[-1].loss)
+
+
+def test_guard_off_keeps_metrics_shape(tmp_path):
+    """With the guard disabled the metrics dict still carries a constant
+    all_finite=True — StepStats.ok stays a stable field either way."""
+    tr = _trainer(str(tmp_path), guard=False)
+    hist = tr.fit(_Source(), 3)
+    assert all(st.ok is True or st.ok for st in hist)
+
+
+def test_rollback_after_consecutive_bad_steps(tmp_path):
+    """guard_rollback_after consecutive bad steps restore a verified
+    checkpoint; the barrier keeps the count bounded (no livelock) and
+    training completes."""
+    plan = FaultPlan(seed=0, faults=(
+        FaultSpec("nan_batch", 8, until=12, frac=0.5),))
+    tr = _trainer(str(tmp_path), rollback_after=3, checkpoint_every=5)
+    hist = tr.fit(FaultySource(_Source(), plan), 20)
+    assert tr.rollbacks >= 1
+    assert hist[-1].step == 20
+    assert np.isfinite(hist[-1].loss)
+
+
+def test_rollback_skip_only_without_checkpoint(tmp_path):
+    """No verified checkpoint on disk: rollback degrades to skip-only
+    (never a crash, never a restore of nothing)."""
+    plan = FaultPlan(seed=0, faults=(
+        FaultSpec("nan_batch", 2, until=6, frac=0.5),))
+    tr = _trainer(str(tmp_path), rollback_after=2, checkpoint_every=0)
+    hist = tr.fit(FaultySource(_Source(), plan), 10)
+    assert tr.rollbacks == 0 and tr.skipped_steps == 5
+    assert hist[-1].step == 10
+
+
+# -------------------------------------------------- preempt / resume
+
+
+def test_preempt_resume_bit_exact(tmp_path):
+    """FaultPlan preemption mid-run (while an async save may be in
+    flight), resume in a fresh Trainer: the stitched loss trajectory is
+    bit-identical to an uninterrupted run."""
+    ck = str(tmp_path / "a")
+    plan = FaultPlan(seed=0, faults=(FaultSpec("preempt", 7),))
+    t1 = _trainer(ck, faults=plan, checkpoint_every=3)
+    h1 = t1.fit(_Source(), 20)
+    assert h1[-1].step == 7            # preempted at the scheduled step
+
+    t2 = _trainer(ck, checkpoint_every=3)
+    assert t2.maybe_resume()
+    assert t2.step == 7
+    h2 = t2.fit(_Source(), 20 - t2.step)
+
+    ref = _trainer(str(tmp_path / "b"), checkpoint_every=3)
+    href = ref.fit(_Source(), 20)
+
+    got = {st.step: st.loss for st in h1 + h2}
+    want = {st.step: st.loss for st in href}
+    assert sorted(got) == sorted(want)
+    for s in want:
+        assert got[s] == want[s], f"step {s}: {got[s]} != {want[s]}"
+
+
+def test_preempt_mid_async_save_resumes(tmp_path):
+    """Preemption scheduled ON a checkpoint step: the sync preempt save
+    must serialise cleanly behind the in-flight async save of the same
+    step and the resumed trainer continues bit-exactly."""
+    ck = str(tmp_path / "a")
+    plan = FaultPlan(seed=0, faults=(FaultSpec("preempt", 6),))
+    t1 = _trainer(ck, faults=plan, checkpoint_every=6)
+    t1.fit(_Source(), 20)
+    t2 = _trainer(ck, checkpoint_every=6)
+    assert t2.maybe_resume() and t2.step == 6
+    h2 = t2.fit(_Source(), 14)
+    ref = _trainer(str(tmp_path / "b"), checkpoint_every=6)
+    href = ref.fit(_Source(), 20)
+    want = {st.step: st.loss for st in href}
+    for st in h2:
+        assert st.loss == want[st.step]
+
+
+# ------------------------------------------------- checkpoint integrity
+
+
+def test_restore_falls_back_past_corrupt_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            max_to_keep=10)
+    mgr.save(1, {"w": jnp.arange(8.0)})
+    mgr.save(2, {"w": jnp.arange(8.0) * 2})
+    corrupt_checkpoint(str(tmp_path), 2, mode="truncate")
+    assert not mgr.verify_step(2) and mgr.verify_step(1)
+    step, tree, _ = mgr.restore()
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(tree["w"]), np.arange(8.0))
+    with pytest.raises(Exception):
+        mgr.restore(2)                 # explicit ask: raise, don't swap
+
+
+def test_restore_falls_back_past_bitflip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            max_to_keep=10)
+    mgr.save(1, {"w": jnp.arange(8.0)})
+    mgr.save(2, {"w": jnp.arange(8.0) * 2})
+    corrupt_checkpoint(str(tmp_path), 2, mode="bitflip")
+    assert mgr.latest_verified_step() == 1
+    assert mgr.restore()[0] == 1
+
+
+def test_no_restorable_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"w": jnp.arange(4.0)})
+    corrupt_checkpoint(str(tmp_path), 1, mode="truncate")
+    with pytest.raises(FileNotFoundError, match="verified"):
+        mgr.restore()
+
+
+def test_orphan_tmp_dir_is_invisible_and_swept(tmp_path):
+    """A crash between makedirs and the atomic rename leaves
+    .tmp_step_*: latest_step/all_steps/restore never surface it, and the
+    next save's gc removes it."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            max_to_keep=10)
+    mgr.save(1, {"w": jnp.arange(4.0)})
+    orphan = tmp_path / ".tmp_step_99"
+    orphan.mkdir()
+    (orphan / "arrays.npz").write_bytes(b"PARTIAL")
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+    assert mgr.restore()[0] == 1
+    mgr.save(2, {"w": jnp.arange(4.0) * 2})
+    assert not any(n.startswith(".tmp_step_")
+                   for n in os.listdir(str(tmp_path)))
+    assert mgr.restore()[0] == 2
+
+
+def test_old_checkpoints_without_checksums_still_verify(tmp_path):
+    """Pre-reliability manifests (no checksums key) verify on
+    loadability alone — forward compatibility for existing runs."""
+    import msgpack
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"w": jnp.arange(4.0)})
+    man = tmp_path / "step_1" / "manifest.msgpack"
+    meta = msgpack.unpackb(man.read_bytes(), raw=False)
+    del meta["checksums"]
+    man.write_bytes(msgpack.packb(meta, use_bin_type=True))
+    assert mgr.verify_step(1)
+    assert mgr.restore()[0] == 1
+
+
+# ------------------------------------------------------ serve degradation
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    arch = dataclasses.replace(get_reduced("falcon_mamba_7b"),
+                               dtype=jnp.float32)
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+def _req(uid, vocab, n_new=4, **kw):
+    from repro.serve.engine import Request
+
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(uid), (3,), 0,
+                                      vocab))
+    return Request(uid=uid, prompt=p, max_new_tokens=n_new, **kw)
+
+
+def test_run_until_drained_raises_on_stall(serve_setup):
+    """Exhausting max_ticks with requests still queued/active must raise
+    a structured EngineStalledError, never return a partial drain."""
+    arch, model, params = serve_setup
+    from repro.serve.engine import EngineStalledError, ServeEngine
+
+    plan = FaultPlan(seed=0, faults=(
+        FaultSpec("serve_stall", 1, until=1000),))
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                      prefill_chunk=8, faults=plan)
+    eng.submit(_req(0, arch.vocab))
+    with pytest.raises(EngineStalledError) as ei:
+        eng.run_until_drained(max_ticks=8)
+    assert ei.value.queued == 1 and ei.value.ticks == 8
+    assert eng.events.count("admission_stalled") >= 1
+
+
+def test_scheduler_drain_raises_on_stall(serve_setup):
+    arch, model, params = serve_setup
+    from repro.serve.engine import EngineStalledError, ServeEngine
+    from repro.serve.scheduler import SLOScheduler
+
+    plan = FaultPlan(seed=0, faults=(
+        FaultSpec("serve_stall", 0, until=1000),))
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                      prefill_chunk=8, faults=plan)
+    sched = SLOScheduler(eng)
+    sched.submit(_req(0, arch.vocab))
+    with pytest.raises(EngineStalledError):
+        sched.run_until_drained(max_ticks=8)
+
+
+def test_bounded_queue_rejects_structurally(serve_setup):
+    arch, model, params = serve_setup
+    from repro.serve.engine import QueueFullError, ServeEngine
+    from repro.serve.scheduler import SLOScheduler
+
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                      prefill_chunk=8, max_queue=1)
+    sched = SLOScheduler(eng)
+    assert sched.submit(_req(0, arch.vocab))
+    r1 = _req(1, arch.vocab)
+    assert not sched.submit(r1)        # absorbed into a counted reject
+    assert r1.status == "rejected"
+    with pytest.raises(QueueFullError) as ei:
+        eng.submit(_req(2, arch.vocab))   # direct submit: raises
+    assert ei.value.uid == 2 and ei.value.max_queue == 1
+    fin = sched.run_until_drained()
+    assert [r.uid for r in fin] == [0]
+    assert sched.stats()["rejected"] == 2.0
+
+
+def test_deadline_expiry_queued_and_active(serve_setup):
+    arch, model, params = serve_setup
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                      prefill_chunk=8)
+    eng.submit(_req(0, arch.vocab, n_new=4))
+    eng.submit(_req(1, arch.vocab, deadline_s=0.0))   # expires queued
+    fin = eng.run_until_drained(max_ticks=100)
+    by = {r.uid: r.status for r in fin}
+    assert by == {0: "done", 1: "expired"}
+    done = [r for r in fin if r.uid == 1]
+    assert not done[0].done            # expired != completed
+
+
+def test_watchdog_quarantine_token_identical(serve_setup):
+    """Slot corruption mid-stream: the watchdog quarantines, the request
+    re-prefills, and the emitted stream matches the fault-free run
+    token for token."""
+    arch, model, params = serve_setup
+    from repro.reliability import corrupt_slot
+    from repro.serve.engine import ServeEngine
+
+    ref_eng = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                          prefill_chunk=8)
+    for i in range(3):
+        ref_eng.submit(_req(i, arch.vocab, n_new=5))
+    ref = {r.uid: list(r.out_tokens)
+           for r in ref_eng.run_until_drained()}
+
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                      prefill_chunk=8, watchdog_every=1)
+    for i in range(3):
+        eng.submit(_req(i, arch.vocab, n_new=5))
+    eng.step()
+    corrupt_slot(eng, 0, mode="nan")
+    fin = eng.run_until_drained()
+    got = {r.uid: list(r.out_tokens) for r in fin}
+    assert got == ref
+    assert eng.events.count("slot_quarantine") >= 1
+    assert all(r.status == "done" for r in fin)
+
+
+def test_watchdog_fails_request_after_max_retries(serve_setup):
+    """A slot that corrupts on every tick exhausts max_retries and fails
+    STRUCTURALLY (status='failed' + event) instead of retrying forever."""
+    arch, model, params = serve_setup
+    from repro.reliability import corrupt_slot
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                      prefill_chunk=8, watchdog_every=1, max_retries=1,
+                      backoff_cap=1)
+    eng.submit(_req(0, arch.vocab, n_new=6))
+    for _ in range(40):
+        if any(r is not None for r in eng.active):
+            corrupt_slot(eng, 0, mode="nan")
+        eng.step()
+        fin = list(eng.finished)
+        if fin and fin[0].status == "failed":
+            break
+    assert [r.status for r in eng.finished] == ["failed"]
+    assert eng.events.count("failed") == 1
+    assert not eng.queue and not any(r is not None for r in eng.active)
+
+
+def test_spec_auto_disable_and_reenable_token_identical(serve_setup):
+    arch, model, params = serve_setup
+    from repro.serve.engine import ServeEngine, SpecConfig
+
+    ref_eng = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                          prefill_chunk=8)
+    for i in range(2):
+        ref_eng.submit(_req(i, arch.vocab, n_new=8))
+    ref = {r.uid: list(r.out_tokens)
+           for r in ref_eng.run_until_drained()}
+
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                      prefill_chunk=8, spec=SpecConfig(k=3),
+                      spec_min_accept=1.01, spec_window=2,
+                      spec_cooldown=2)
+    for i in range(2):
+        eng.submit(_req(i, arch.vocab, n_new=8))
+    fin = eng.run_until_drained()
+    got = {r.uid: list(r.out_tokens) for r in fin}
+    assert got == ref
+    assert eng.events.count("spec_disable") >= 1
+    assert eng.events.count("spec_reenable") >= 1
+
+
+# -------------------------------------------------------- solver report
+
+
+def test_solve_report_flags_tol_mode_divergence():
+    from repro.core.block import (LrcSSMConfig, apply_lrcssm,
+                                  init_lrcssm)
+    from repro.core.deer import DeerConfig
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 3))
+    good = LrcSSMConfig(d_input=3, d_hidden=8, d_state=8, n_blocks=2,
+                        n_classes=2,
+                        deer=DeerConfig(max_iters=8, mode="tol", tol=1e-5))
+    pg = init_lrcssm(good, jax.random.PRNGKey(0))
+    logits, rep = apply_lrcssm(good, pg, x, return_report=True)
+    assert rep.iters.shape == (2,) and rep.diverged.shape == (2,)
+    assert not bool(np.any(np.asarray(rep.diverged)))
+    assert float(np.max(np.asarray(rep.residual))) < 1e-3
+
+    bad = LrcSSMConfig(d_input=3, d_hidden=8, d_state=8, n_blocks=2,
+                       n_classes=2, dt=50.0,
+                       deer=DeerConfig(max_iters=2, mode="tol", tol=1e-9))
+    pb = init_lrcssm(bad, jax.random.PRNGKey(0))
+    _, repb = apply_lrcssm(bad, pb, 5.0 * x, return_report=True)
+    assert bool(np.all(np.asarray(repb.diverged)))
+
+
+def test_solve_report_fixed_mode_never_flags():
+    """Fixed-K output is the documented contract in fixed mode — the
+    diverged flag stays constant False there (and under jit)."""
+    from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+
+    cfg = LrcSSMConfig(d_input=3, d_hidden=8, d_state=8, n_blocks=1,
+                       n_classes=2)
+    p = init_lrcssm(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 3))
+    fn = jax.jit(lambda pp, xx: apply_lrcssm(cfg, pp, xx,
+                                             return_report=True))
+    logits, rep = fn(p, x)
+    assert not bool(np.any(np.asarray(rep.diverged)))
+    # report request must not perturb the logits
+    plain = jax.jit(lambda pp, xx: apply_lrcssm(cfg, pp, xx))(p, x)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(plain),
+                               rtol=1e-6)

@@ -203,6 +203,83 @@ class TestPallasAndInterpret:
         assert fs == []
 
 
+# ------------------------------------------------------------ bare-except
+
+
+class TestBareExcept:
+    def test_bare_except_fires(self):
+        fs = lint("""\
+            def f():
+                try:
+                    g()
+                except:
+                    return 0
+        """)
+        assert rules_fired(fs) == {"bare-except"}
+
+    def test_broad_swallow_fires(self):
+        fs = lint("""\
+            def f():
+                try:
+                    g()
+                except Exception:
+                    pass
+        """, relpath="src/repro/checkpoint/x.py")
+        assert rules_fired(fs) == {"bare-except"}
+
+    def test_broad_swallow_in_tuple_fires(self):
+        fs = lint("""\
+            def f():
+                try:
+                    g()
+                except (ValueError, BaseException):
+                    ...
+        """, relpath="src/repro/reliability/x.py")
+        assert rules_fired(fs) == {"bare-except"}
+
+    def test_broad_handler_with_body_is_silent(self):
+        # the sanctioned shape: a broad handler that DOES something
+        # (verify_step's loadability verdict) is allowed
+        fs = lint("""\
+            def f():
+                try:
+                    g()
+                except Exception:
+                    return False
+        """, relpath="src/repro/checkpoint/x.py")
+        assert fs == []
+
+    def test_narrow_swallow_is_silent(self):
+        fs = lint("""\
+            def f():
+                try:
+                    g()
+                except OSError:
+                    pass
+        """)
+        assert fs == []
+
+    def test_out_of_scope_path_is_silent(self):
+        fs = lint("""\
+            def f():
+                try:
+                    g()
+                except:
+                    pass
+        """, relpath="tools/somewhere/x.py")
+        assert fs == []
+
+    def test_suppression_works(self):
+        fs = lint("""\
+            def f():
+                try:
+                    g()
+                except Exception:  # repro-lint: disable=bare-except
+                    pass
+        """)
+        assert fs == []
+
+
 # ------------------------------------------------------------ suppression
 
 

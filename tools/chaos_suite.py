@@ -1,0 +1,563 @@
+"""CI chaos suite: deterministic fault-injection scenarios end-to-end.
+
+Every scenario drives a REAL subsystem (trainer, checkpoint manager,
+serve engine, solver ladder) through a seeded :mod:`repro.reliability`
+fault plan and asserts the documented recovery/degradation contract
+(docs/reliability.md). The acceptance bar for every scenario: the run
+ends either FULLY RECOVERED or in a DECLARED degraded state — never a
+hang, an unhandled exception, or silently-wrong tokens.
+
+Scenarios:
+
+  * nan_batch_guard         — NaN batches are skipped on device, counted,
+                              and the clean-loss bar still holds;
+  * rollback_consecutive    — a sustained NaN window triggers exactly one
+                              rollback to a verified checkpoint (barrier:
+                              no rollback livelock), then skips through;
+  * corrupt_latest_checkpoint — restore(None) falls back past a
+                              truncated/bit-flipped latest step; an
+                              explicit restore of the damaged step raises;
+  * mid_save_kill           — an orphaned .tmp_step_* dir (kill between
+                              makedirs and rename) never corrupts
+                              latest_step/restore and is swept by gc;
+  * preempt_resume_bitexact — a FaultPlan preemption + resume replays a
+                              loss trajectory bit-identical to the
+                              uninterrupted run;
+  * slot_corruption         — the serve watchdog quarantines a NaN'd slot
+                              and the re-prefilled stream is
+                              token-identical to the fault-free run;
+  * queue_stall             — a wedged admission window surfaces as a
+                              structured EngineStalledError under a small
+                              tick budget and drains under a larger one;
+  * solver_divergence       — a tol-mode solve that exhausts its ladder
+                              reports diverged=True (and the healthy
+                              config does not);
+  * spec_auto_disable       — a forced-low accept rate disables spec
+                              decode, re-enables after cooldown, and the
+                              stream stays greedy-identical throughout;
+  * deadline_backpressure   — bounded-queue rejects and deadline expiries
+                              are structured statuses, and the mix drains
+                              without hanging.
+
+Usage (standalone):
+
+    python tools/chaos_suite.py [--json FILE] [--only SUB]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _row(name, ok, detail=None, violations=()):
+    """One scenario row for the JSON artifact."""
+    return {"name": name, "ok": bool(ok), "violations": list(violations),
+            "detail": detail or {}}
+
+
+# --------------------------------------------------------------- train toys
+
+def _toy_trainer(tmp, faults=None, guard=True, rollback_after=0,
+                 checkpoint_every=0, seed=0):
+    """A tiny least-squares trainer on a 1-device mesh with a
+    step-indexed data source — small enough that every chaos scenario
+    re-runs it in seconds, real enough that it exercises the actual
+    Trainer/step/checkpoint code paths."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import TrainConfig
+    from repro.models import Model
+    from repro.train.loop import Trainer
+
+    D, B = 16, 8
+    w_true = 0.5 * jnp.ones((D,))
+
+    def init(key):
+        return {"w": jnp.zeros((D,), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["tokens"] @ p["w"] - b["labels"]) ** 2)
+
+    model = Model(arch=None, init=init, loss=loss, apply=None,
+                  decode_step=None, init_cache=None)
+
+    class Source:
+        """Pure function of step — the batch_at replay contract."""
+
+        def batch_at(self, s):
+            x = jax.random.normal(jax.random.PRNGKey(1000 + s), (B, D))
+            return {"tokens": x, "labels": x @ w_true}
+
+    tcfg = TrainConfig(learning_rate=1e-1, warmup_steps=0,
+                       total_steps=100000, weight_decay=0.0,
+                       checkpoint_every=checkpoint_every,
+                       checkpoint_dir=tmp, guard_nonfinite=guard,
+                       guard_rollback_after=rollback_after, seed=seed)
+    mesh = jax.make_mesh((1,), ("data",))
+    trainer = Trainer(model, tcfg, mesh=mesh, log_every=1,
+                      log_fn=lambda s: None, faults=faults)
+    return trainer, Source()
+
+
+def scenario_nan_batch_guard():
+    """NaN-poisoned batches: the device-side guard skips them (counted),
+    parameters stay finite, and the loss tracks the clean run within the
+    documented bar — a run that skipped k steps is compared against the
+    clean run at the SAME number of effective updates (skipping costs
+    exactly the skipped updates, nothing more), with 1.5x headroom for
+    the different batch mix."""
+    import jax
+    import numpy as np
+
+    from repro.reliability import FaultPlan, FaultSpec, FaultySource
+
+    tmp_a, tmp_b = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        plan = FaultPlan(seed=0, faults=(
+            FaultSpec("nan_batch", 5, until=7, frac=0.5),))
+        trainer, src = _toy_trainer(tmp_a)
+        hist = trainer.fit(FaultySource(src, plan), 30)
+
+        clean, csrc = _toy_trainer(tmp_b)
+        chist = clean.fit(csrc, 30)
+
+        final = hist[-1].loss
+        bad_steps = [st.step for st in hist if not st.ok]
+        # clean-run loss after the same 27 effective updates
+        bar = chist[30 - trainer.skipped_steps - 1].loss
+        params_finite = all(
+            bool(np.all(np.isfinite(np.asarray(v))))
+            for v in jax.tree_util.tree_leaves(trainer.params))
+        ok = (trainer.skipped_steps == 3 and bad_steps == [6, 7, 8]
+              and params_finite and np.isfinite(final)
+              and final <= max(1.5 * bar, bar + 1e-3))
+        return [_row("chaos-nan-batch-guard", ok, {
+            "skipped": trainer.skipped_steps, "bad_steps": bad_steps,
+            "final_loss": float(final), "clean_loss_same_updates":
+            float(bar), "clean_loss_final": float(chist[-1].loss),
+            "recovered": "full"})]
+    finally:
+        shutil.rmtree(tmp_a, ignore_errors=True)
+        shutil.rmtree(tmp_b, ignore_errors=True)
+
+
+def scenario_rollback_consecutive():
+    """A sustained NaN window (longer than guard_rollback_after) rolls
+    back to a verified checkpoint a BOUNDED number of times — each
+    rollback must land on a strictly newer restore point (the barrier),
+    and checkpoints keep publishing inside the window, so the count is
+    bounded by the checkpoints the window spans (here: 2), never a
+    livelock; training then skips through and completes with finite
+    parameters."""
+    import jax
+    import numpy as np
+
+    from repro.reliability import FaultPlan, FaultSpec, FaultySource
+
+    tmp = tempfile.mkdtemp()
+    try:
+        plan = FaultPlan(seed=0, faults=(
+            FaultSpec("nan_batch", 12, until=18, frac=0.5),))
+        trainer, src = _toy_trainer(tmp, rollback_after=3,
+                                    checkpoint_every=5)
+        hist = trainer.fit(FaultySource(src, plan), 30)
+        params_finite = all(
+            bool(np.all(np.isfinite(np.asarray(v))))
+            for v in jax.tree_util.tree_leaves(trainer.params))
+        ok = (1 <= trainer.rollbacks <= 2 and trainer.skipped_steps > 0
+              and hist[-1].step == 30 and np.isfinite(hist[-1].loss)
+              and params_finite)
+        return [_row("chaos-rollback-consecutive", ok, {
+            "rollbacks": trainer.rollbacks,
+            "skipped": trainer.skipped_steps,
+            "final_loss": float(hist[-1].loss), "recovered": "full"})]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def scenario_corrupt_latest_checkpoint():
+    """Corrupt/truncated LATEST checkpoint: restore(None) walks back to
+    the newest VERIFIED step; an explicit restore of the damaged step
+    raises instead of silently substituting."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.reliability import corrupt_checkpoint
+
+    tmp = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(tmp, async_save=False, max_to_keep=10)
+        mgr.save(1, {"w": jnp.arange(8.0)})
+        mgr.save(2, {"w": jnp.arange(8.0) * 2})
+        corrupt_checkpoint(tmp, 2, mode="truncate")
+        step, tree, _ = mgr.restore()
+        fell_back = (step == 1
+                     and bool(np.allclose(tree["w"], np.arange(8.0))))
+        explicit_raises = False
+        try:
+            mgr.restore(2)
+        except Exception:  # the contract IS that this raises
+            explicit_raises = True
+
+        mgr.save(3, {"w": jnp.arange(8.0) * 3})
+        corrupt_checkpoint(tmp, 3, mode="bitflip", seed=1)
+        step2, _, _ = mgr.restore()
+        bitflip_fell_back = step2 == 1    # step 2 still truncated
+        ok = fell_back and explicit_raises and bitflip_fell_back
+        return [_row("chaos-corrupt-latest-checkpoint", ok, {
+            "fallback_step": int(step), "explicit_raises": explicit_raises,
+            "bitflip_fallback_step": int(step2), "recovered": "degraded:"
+            "older-checkpoint"})]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def scenario_mid_save_kill():
+    """A kill between the temp-dir makedirs and the atomic rename leaves
+    an orphaned .tmp_step_* dir: latest_step/restore never see it, and
+    the next save's gc sweeps it."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import CheckpointManager
+
+    tmp = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(tmp, async_save=False, max_to_keep=10)
+        mgr.save(1, {"w": jnp.arange(4.0)})
+        # simulate the torn write: a tmp dir with a partial payload
+        orphan = os.path.join(tmp, ".tmp_step_99")
+        os.makedirs(orphan)
+        with open(os.path.join(orphan, "arrays.npz"), "wb") as f:
+            f.write(b"PARTIAL")
+        unaffected = (mgr.latest_step() == 1
+                      and mgr.restore()[0] == 1
+                      and 99 not in mgr.all_steps())
+        mgr.save(2, {"w": jnp.arange(4.0) * 2})   # triggers _gc
+        swept = not any(n.startswith(".tmp_step_")
+                        for n in os.listdir(tmp))
+        ok = unaffected and swept and mgr.restore()[0] == 2
+        return [_row("chaos-mid-save-kill", ok, {
+            "orphan_visible": not unaffected, "swept": swept,
+            "recovered": "full"})]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def scenario_preempt_resume_bitexact():
+    """Simulated preemption (FaultPlan -> Trainer.preempt seam) at an
+    arbitrary step, then resume in a fresh Trainer: the combined loss
+    trajectory is BIT-IDENTICAL to the uninterrupted run (checkpointed
+    full TrainState + step-indexed data replay)."""
+    tmp_a, tmp_b = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        from repro.reliability import FaultPlan, FaultSpec
+
+        plan = FaultPlan(seed=0, faults=(FaultSpec("preempt", 12),))
+        t1, src = _toy_trainer(tmp_a, faults=plan, checkpoint_every=5)
+        h1 = t1.fit(src, 30)
+        preempted_at = h1[-1].step if h1 else 0
+
+        t2, _ = _toy_trainer(tmp_a, checkpoint_every=5)
+        resumed = t2.maybe_resume()
+        h2 = t2.fit(src, 30 - t2.step)
+
+        ref, rsrc = _toy_trainer(tmp_b, checkpoint_every=5)
+        href = ref.fit(rsrc, 30)
+
+        got = {st.step: st.loss for st in h1 + h2}
+        want = {st.step: st.loss for st in href}
+        bitexact = (sorted(got) == sorted(want)
+                    and all(got[s] == want[s] for s in want))
+        ok = resumed and preempted_at == 12 and bitexact
+        return [_row("chaos-preempt-resume-bitexact", ok, {
+            "preempted_at": int(preempted_at), "resumed": resumed,
+            "bitexact": bitexact, "steps": len(got),
+            "recovered": "full"})]
+    finally:
+        shutil.rmtree(tmp_a, ignore_errors=True)
+        shutil.rmtree(tmp_b, ignore_errors=True)
+
+
+# --------------------------------------------------------------- serve toys
+
+_SERVE = {}
+
+
+def _serve_model():
+    """One reduced fp32 falcon-mamba facade shared by every serve
+    scenario (compile cost paid once)."""
+    if not _SERVE:
+        import dataclasses
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs import get_reduced
+        from repro.models import build_model
+
+        arch = dataclasses.replace(get_reduced("falcon_mamba_7b"),
+                                   dtype=jnp.float32)
+        model = build_model(arch)
+        params = model.init(jax.random.PRNGKey(0))
+        _SERVE.update(arch=arch, model=model, params=params)
+    return _SERVE["arch"], _SERVE["model"], _SERVE["params"]
+
+
+def _mk_req(uid, vocab, n_new=6, prompt_len=4, **kw):
+    """A deterministic toy request (prompt seeded by uid)."""
+    import jax
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(uid),
+                                      (prompt_len,), 0, vocab))
+    return Request(uid=uid, prompt=p, max_new_tokens=n_new, **kw)
+
+
+def _greedy_reference(n_reqs=4, n_new=6):
+    """Fault-free greedy token streams — the identity baseline every
+    degraded-path scenario must match."""
+    arch, model, params = _serve_model()
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=48,
+                      prefill_chunk=8)
+    for i in range(n_reqs):
+        eng.submit(_mk_req(i, arch.vocab, n_new))
+    fin = eng.run_until_drained()
+    return {r.uid: list(r.out_tokens) for r in fin}
+
+
+def scenario_slot_corruption():
+    """NaN'd slot state between ticks: the watchdog quarantines the slot
+    (evict -> re-prefill), a quarantine event is logged, every request
+    still completes, and the streams are TOKEN-IDENTICAL to the
+    fault-free run."""
+    arch, model, params = _serve_model()
+    from repro.reliability import corrupt_slot
+    from repro.serve.engine import ServeEngine
+
+    ref = _greedy_reference()
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=48,
+                      prefill_chunk=8, watchdog_every=1)
+    for i in range(4):
+        eng.submit(_mk_req(i, arch.vocab))
+    eng.step()                         # admit + first decode tick
+    corrupt_slot(eng, 0, mode="nan")   # poison slot 0 mid-stream
+    fin = eng.run_until_drained()
+    got = {r.uid: list(r.out_tokens) for r in fin if r.status == "done"}
+    quar = eng.events.count("slot_quarantine")
+    ok = (got == ref and quar >= 1
+          and all(r.status == "done" for r in fin))
+    return [_row("chaos-slot-corruption", ok, {
+        "quarantines": quar, "token_identical": got == ref,
+        "completed": len(got), "recovered": "full"})]
+
+
+def scenario_queue_stall():
+    """A wedged admission window (serve_stall FaultPlan): a too-small
+    tick budget surfaces as a STRUCTURED EngineStalledError (queued
+    count + tick budget attached), and a budget that outlasts the window
+    drains normally."""
+    arch, model, params = _serve_model()
+    from repro.reliability import FaultPlan, FaultSpec
+    from repro.serve.engine import EngineStalledError, ServeEngine
+
+    plan = FaultPlan(seed=0, faults=(
+        FaultSpec("serve_stall", 1, until=10),))
+
+    def build():
+        eng = ServeEngine(model, params, batch_slots=2, max_seq=48,
+                          prefill_chunk=8, faults=plan)
+        eng.submit(_mk_req(0, arch.vocab))
+        return eng
+
+    stalled = None
+    eng = build()
+    try:
+        eng.run_until_drained(max_ticks=5)
+    except EngineStalledError as e:
+        stalled = {"queued": e.queued, "active": e.active,
+                   "ticks": e.ticks}
+    events = eng.events.count("admission_stalled")
+
+    eng2 = build()
+    fin = eng2.run_until_drained(max_ticks=40)   # outlasts the window
+    drained = all(r.status == "done" for r in fin) and len(fin) == 1
+    ok = (stalled is not None and stalled["queued"] == 1
+          and events >= 1 and drained)
+    return [_row("chaos-queue-stall", ok, {
+        "stall_report": stalled, "stall_events": events,
+        "drained_after_window": drained,
+        "recovered": "full (after window)"})]
+
+
+def scenario_solver_divergence():
+    """A tol-mode solve pushed past contractivity (large dt, tiny
+    iteration cap): the SolveReport flags diverged=True and the caller
+    routes it up as a degradation event; the healthy config's report
+    stays clean."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.block import LrcSSMConfig, apply_lrcssm, init_lrcssm
+    from repro.core.deer import DeerConfig
+    from repro.reliability import EventLog
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 3))
+    good = LrcSSMConfig(d_input=3, d_hidden=8, d_state=8, n_blocks=2,
+                        n_classes=2,
+                        deer=DeerConfig(max_iters=8, mode="tol", tol=1e-5))
+    pg = init_lrcssm(good, jax.random.PRNGKey(0))
+    _, rep_g = apply_lrcssm(good, pg, x, return_report=True)
+
+    bad = LrcSSMConfig(d_input=3, d_hidden=8, d_state=8, n_blocks=2,
+                       n_classes=2, dt=50.0,
+                       deer=DeerConfig(max_iters=2, mode="tol", tol=1e-9))
+    pb = init_lrcssm(bad, jax.random.PRNGKey(0))
+    _, rep_b = apply_lrcssm(bad, pb, 5.0 * x, return_report=True)
+
+    events = EventLog(log_fn=None)
+    if bool(np.any(np.asarray(rep_b.diverged))):
+        events.emit("solver_divergence",
+                    residual=float(np.max(np.asarray(rep_b.residual))),
+                    blocks=int(np.sum(np.asarray(rep_b.diverged))))
+    ok = (not bool(np.any(np.asarray(rep_g.diverged)))
+          and bool(np.all(np.asarray(rep_b.diverged)))
+          and events.count("solver_divergence") == 1)
+    return [_row("chaos-solver-divergence", ok, {
+        "healthy_residual": float(np.max(np.asarray(rep_g.residual))),
+        "diverged_residual": float(np.max(np.asarray(rep_b.residual))),
+        "event_logged": events.count("solver_divergence") == 1,
+        "recovered": "degraded:reported"})]
+
+
+def scenario_spec_auto_disable():
+    """Forced-low accept rate (floor > 1.0): spec decode disables after
+    the window fills, re-enables after cooldown, cycles — and the token
+    streams stay identical to plain greedy the whole way."""
+    arch, model, params = _serve_model()
+    from repro.serve.engine import ServeEngine, SpecConfig
+
+    ref = _greedy_reference(n_reqs=3, n_new=10)
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=48,
+                      prefill_chunk=8, spec=SpecConfig(k=3),
+                      spec_min_accept=1.01, spec_window=2, spec_cooldown=3)
+    for i in range(3):
+        eng.submit(_mk_req(i, arch.vocab, n_new=10))
+    fin = eng.run_until_drained()
+    got = {r.uid: list(r.out_tokens) for r in fin}
+    dis, ren = (eng.events.count("spec_disable"),
+                eng.events.count("spec_reenable"))
+    ok = got == ref and dis >= 1 and ren >= 1
+    return [_row("chaos-spec-auto-disable", ok, {
+        "disables": dis, "reenables": ren,
+        "token_identical": got == ref,
+        "recovered": "degraded:plain-decode-windows"})]
+
+
+def scenario_deadline_backpressure():
+    """Bounded queue + deadline mix: over-capacity submits reject
+    structurally (QueueFullError), zero-budget deadlines expire (queued
+    AND active paths), generous deadlines complete — and the whole mix
+    drains without hanging."""
+    arch, model, params = _serve_model()
+    from repro.serve.engine import QueueFullError, ServeEngine
+
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=48,
+                      prefill_chunk=8, max_queue=3)
+    outcomes = {"rejected": 0}
+    for i in range(6):
+        dl = 0.0 if i == 1 else (30.0 if i % 2 else None)
+        try:
+            eng.submit(_mk_req(i, arch.vocab, deadline_s=dl))
+        except QueueFullError:
+            outcomes["rejected"] += 1
+    fin = eng.run_until_drained(max_ticks=200)
+    statuses = sorted(r.status for r in fin)
+    done = sum(s == "done" for s in statuses)
+    expired = sum(s == "expired" for s in statuses)
+    ok = (outcomes["rejected"] == 3 and expired >= 1
+          and done == len(statuses) - expired
+          and eng.events.count("queue_reject") == 3)
+    return [_row("chaos-deadline-backpressure", ok, {
+        "rejected": outcomes["rejected"], "expired": expired,
+        "done": done, "statuses": statuses,
+        "recovered": "degraded:shed-load"})]
+
+
+SCENARIOS = (
+    scenario_nan_batch_guard,
+    scenario_rollback_consecutive,
+    scenario_corrupt_latest_checkpoint,
+    scenario_mid_save_kill,
+    scenario_preempt_resume_bitexact,
+    scenario_slot_corruption,
+    scenario_queue_stall,
+    scenario_solver_divergence,
+    scenario_spec_auto_disable,
+    scenario_deadline_backpressure,
+)
+
+
+def main(argv=None) -> int:
+    """Run the chaos scenarios; exit 1 when any contract is violated."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=os.environ.get("CHAOS_JSON_OUT"),
+                    metavar="FILE", help="write the JSON report to FILE")
+    ap.add_argument("--only", default=None,
+                    help="run only scenarios whose name contains SUB")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    rows = []
+    for scenario in SCENARIOS:
+        if args.only and args.only not in scenario.__name__:
+            continue
+        try:
+            new = scenario()
+        except Exception as e:   # an unhandled exception IS a failure
+            new = [_row(f"chaos-{scenario.__name__}", False,
+                        violations=[f"unhandled {type(e).__name__}: {e}"])]
+        for row in new:
+            rows.append(row)
+            status = "OK " if row["ok"] else "FAIL"
+            print(f"[{status}] {row['name']}", flush=True)
+            for v in row["violations"]:
+                print(f"       {v}", flush=True)
+
+    report = {
+        "suite": "repro-chaos",
+        "ok": all(r["ok"] for r in rows),
+        "jax_version": jax.__version__,
+        "n_scenarios": len(rows),
+        "n_failed": sum(not r["ok"] for r in rows),
+        "scenarios": rows,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr, flush=True)
+
+    print(f"chaos suite: {report['n_scenarios'] - report['n_failed']}/"
+          f"{report['n_scenarios']} scenarios hold "
+          f"(jax {jax.__version__})", flush=True)
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -352,6 +352,64 @@ class PartitionSpecConfinementRule(Rule):
                     "modules: use sharding.make_spec")
 
 
+#: where silent exception-swallowing is a reliability hazard: the hot
+#: paths plus the fault-domain modules the reliability PR hardened
+#: (checkpoint integrity, data determinism, the fault-injection layer)
+BARE_EXCEPT_PATHS = HOT_PATHS + ("src/repro/checkpoint/", "src/repro/data/",
+                                 "src/repro/reliability/")
+
+
+class BareExceptRule(Rule):
+    """No silent exception-swallowing in the failure domains the
+    reliability layer hardens: a bare ``except:`` (catches KeyboardInterrupt
+    / SystemExit and hides the fault taxonomy) is always flagged, and
+    ``except Exception:`` / ``except BaseException:`` whose body is ONLY
+    ``pass``/``...`` (pure swallow — the failure never reaches a guard,
+    an event log, or the chaos suite) is flagged too. Broad handlers that
+    DO something (return a verdict, log, re-raise) are allowed; the few
+    sanctioned boundary swallows carry a suppression comment naming this
+    rule, making every one grep-able."""
+
+    name = "bare-except"
+    description = ("bare `except:` or silently-swallowing `except "
+                   "Exception: pass` in train/serve/core/kernels/"
+                   "checkpoint/data/reliability")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(BARE_EXCEPT_PATHS)
+
+    @staticmethod
+    def _broad(type_node: Optional[ast.AST]) -> bool:
+        nodes = (type_node.elts if isinstance(type_node, ast.Tuple)
+                 else [type_node])
+        return any(isinstance(n, ast.Name)
+                   and n.id in ("Exception", "BaseException")
+                   for n in nodes)
+
+    @staticmethod
+    def _swallows(body: List[ast.stmt]) -> bool:
+        return all(isinstance(s, ast.Pass)
+                   or (isinstance(s, ast.Expr)
+                       and isinstance(s.value, ast.Constant)
+                       and s.value.value is Ellipsis)
+                   for s in body)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self._finding(
+                    ctx, node, "bare `except:` catches KeyboardInterrupt/"
+                    "SystemExit too — name the exception (narrowest that "
+                    "fits the fault taxonomy)")
+            elif self._broad(node.type) and self._swallows(node.body):
+                yield self._finding(
+                    ctx, node, "`except Exception: pass` silently swallows "
+                    "the failure — handle it (guard/event/re-raise) or "
+                    "narrow the type")
+
+
 #: registry, in reporting order
 ALL_RULES: Tuple[Rule, ...] = (
     CompatCollectiveRule(),
@@ -360,4 +418,5 @@ ALL_RULES: Tuple[Rule, ...] = (
     PallasCallRule(),
     HardcodedInterpretRule(),
     PartitionSpecConfinementRule(),
+    BareExceptRule(),
 )
